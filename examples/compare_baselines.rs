@@ -1,0 +1,82 @@
+//! Side-by-side engine comparison on a shape sweep: Vortex vs cuBLAS /
+//! CUTLASS / DietCode on the simulated A100 (CUDA cores, the one mode
+//! where all four engines apply).
+//!
+//! Prints a per-shape table (times + who wins) — a compact, readable
+//! version of the Fig. 12 scatter.
+//!
+//! Run with: cargo run --release --example compare_baselines [--seed 7]
+
+use vortex::baselines::cutlass::Cutlass;
+use vortex::baselines::dietcode::DietCode;
+use vortex::baselines::vendor::VendorLib;
+use vortex::baselines::PlanEngine;
+use vortex::bench::harness::{dietcode_default_samples, vortex_engine, Testbed};
+use vortex::ir::{Contraction, DType};
+use vortex::profiler::SimProfiler;
+use vortex::sim::Simulator;
+use vortex::util::cli::Args;
+use vortex::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let seed = args.get_u64("seed", 7);
+    let tb = Testbed::GpuCudaCore;
+    let hw = tb.hw();
+    let sim = Simulator::new(hw.clone(), seed);
+
+    eprintln!("compiling Vortex + tuning DietCode (offline stages)...");
+    let vortex = vortex_engine(tb, seed);
+    let cublas = VendorLib::cublas(&hw, "cuda_core_f32");
+    let cutlass = Cutlass::new(&hw, "cuda_core_f32");
+    let mut prof = SimProfiler::new(sim.clone());
+    let dietcode = DietCode::tune(
+        &hw,
+        "cuda_core_f32",
+        &dietcode_default_samples(false),
+        400,
+        &mut prof,
+        seed,
+    );
+
+    let shapes: &[(usize, usize, usize, &str)] = &[
+        (1, 768, 768, "decode step"),
+        (7, 2304, 768, "tiny batch QKV"),
+        (128, 768, 2304, "BERT GEMM-1 (in DietCode samples)"),
+        (100, 768, 2304, "BERT GEMM-1 (out of samples)"),
+        (512, 3072, 768, "MLP up"),
+        (4096, 4096, 4096, "square steady-state"),
+        (300000, 16, 64, "GNN aggregate"),
+        (35, 8448, 2560, "DeepBench"),
+    ];
+
+    let mut t = Table::new(
+        "engine comparison (simulated A100, CUDA cores, times in us)",
+        &["shape", "what", "vortex", "cublas", "cutlass", "dietcode", "winner"],
+    );
+    for &(m, n, k, what) in shapes {
+        let c = Contraction { m, n, k, dtype: DType::F32 };
+        let tv = vortex.time(&sim, c);
+        let engines: [(&str, f64); 4] = [
+            ("vortex", tv),
+            ("cublas", sim.execute(DType::F32, &cublas.plan(c)) + cublas.dispatch_overhead()),
+            ("cutlass", sim.execute(DType::F32, &cutlass.plan(c)) + cutlass.dispatch_overhead()),
+            ("dietcode", sim.execute(DType::F32, &dietcode.plan(c)) + dietcode.dispatch_overhead()),
+        ];
+        let winner = engines
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        t.row(vec![
+            format!("{}x{}x{}", m, n, k),
+            what.into(),
+            format!("{:.1}", engines[0].1 * 1e6),
+            format!("{:.1}", engines[1].1 * 1e6),
+            format!("{:.1}", engines[2].1 * 1e6),
+            format!("{:.1}", engines[3].1 * 1e6),
+            winner.into(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,158 @@
+//! Threaded dynamic-batch server: producer threads submit requests with
+//! random sequence lengths over a channel; the coordinator thread forms
+//! batches (size/window policy), selects a micro-kernel per merged
+//! shape, and executes — on the REAL PJRT engine when artifacts exist,
+//! falling back to the simulated A100 otherwise.
+//!
+//! Demonstrates the L3 runtime as an actual server: queueing,
+//! batching, backpressure (bounded channel), per-request latency.
+//!
+//! Run with: cargo run --release --example dynamic_batch_server \
+//!             [--requests 64] [--max-batch 8] [--window-ms 2]
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use vortex::compiler::{compile, CompileOpts};
+use vortex::coordinator::metrics::Metrics;
+use vortex::coordinator::{HwMode, Selector};
+use vortex::cost::hybrid::AnalyzerConfig;
+use vortex::hw::presets;
+use vortex::ir::{Contraction, DType};
+use vortex::profiler::SimProfiler;
+use vortex::runtime::{build_real_library, RealEngine};
+use vortex::sim::Simulator;
+use vortex::util::cli::Args;
+use vortex::util::rng::Rng;
+
+struct Req {
+    #[allow(dead_code)]
+    id: usize,
+    rows: usize,
+    t_submit: Instant,
+}
+
+enum Exec {
+    Real { engine: RealEngine },
+    Sim { sim: Simulator },
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n_requests = args.get_usize("requests", 64);
+    let max_batch = args.get_usize("max-batch", 8);
+    let window = Duration::from_millis(args.get_u64("window-ms", 2));
+    let (n, k) = (768usize, 256usize); // served GEMM width
+
+    // Engine + library: real if artifacts are present.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let (exec, selector) = if dir.join("manifest.json").exists() {
+        let engine = RealEngine::load(&dir).expect("engine");
+        let hw = presets::cpu_pjrt();
+        let lib = build_real_library(&engine, &hw, DType::F32, 1).expect("library");
+        println!("serving on the REAL PJRT engine ({} blocks)", lib.kernels.len());
+        (Exec::Real { engine }, Selector::new(hw, vec![lib]))
+    } else {
+        let hw = presets::a100();
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 7));
+        let lib = compile(
+            &hw,
+            DType::F32,
+            &AnalyzerConfig::default_for(&hw),
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library;
+        println!("artifacts missing; serving on the simulated A100");
+        (Exec::Sim { sim: Simulator::new(hw.clone(), 7) }, Selector::new(hw, vec![lib]))
+    };
+
+    // Bounded channel = backpressure: producers block when the
+    // coordinator falls behind.
+    let (tx, rx) = mpsc::sync_channel::<Req>(max_batch * 4);
+
+    // Producer thread: Poisson-ish arrivals, random sequence lengths.
+    let producer = thread::spawn(move || {
+        let mut rng = Rng::new(99);
+        for id in 0..n_requests {
+            let gap = rng.exp(1.5e-3);
+            thread::sleep(Duration::from_secs_f64(gap));
+            let rows = rng.usize(4, 160);
+            tx.send(Req { id, rows, t_submit: Instant::now() }).unwrap();
+        }
+    });
+
+    // Coordinator loop (the serving hot path — python-free).
+    let mut rng = Rng::new(3);
+    let a_max = rng.normal_f32_vec(2048 * k);
+    let w: Vec<f32> = rng.normal_f32_vec(k * n).iter().map(|x| x * 0.05).collect();
+    let mut metrics = Metrics::default();
+    let mut served = 0usize;
+    let mut batches = 0usize;
+    let t_run = Instant::now();
+    while served < n_requests {
+        // Block for the first request of the batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let deadline = Instant::now() + window;
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        let rows: usize = batch.iter().map(|r| r.rows).sum();
+        let c = Contraction { m: rows, n, k, dtype: DType::F32 };
+        let sel = selector.select(c, HwMode::Adaptive).expect("select");
+        let kern = selector.kernel(&sel);
+        let t_exec = Instant::now();
+        let exec_secs = match &exec {
+            Exec::Real { engine } => {
+                let rows_cap = rows.min(2048);
+                engine
+                    .gemm_dynamic(
+                        &a_max[..rows_cap * k],
+                        &w,
+                        (rows_cap, n, k),
+                        kern.l1,
+                        DType::F32,
+                    )
+                    .expect("gemm");
+                t_exec.elapsed().as_secs_f64()
+            }
+            Exec::Sim { sim } => {
+                sim.execute(selector.libraries[sel.lib].dtype, &kern.chain(sel.padded))
+            }
+        };
+        let done = Instant::now();
+        for r in &batch {
+            metrics.record(
+                done.duration_since(r.t_submit).as_secs_f64(),
+                sel.select_secs / batch.len() as f64,
+                exec_secs / batch.len() as f64,
+                c.flops() * r.rows as f64 / rows as f64,
+            );
+        }
+        served += batch.len();
+        batches += 1;
+    }
+    metrics.span_secs = t_run.elapsed().as_secs_f64();
+    producer.join().unwrap();
+
+    println!(
+        "served {} requests in {} batches (mean batch {:.2})",
+        served,
+        batches,
+        served as f64 / batches as f64
+    );
+    println!("{}", metrics.summary());
+}

@@ -1,0 +1,56 @@
+//! Quickstart: the whole Vortex pipeline in ~40 lines.
+//!
+//! 1. Pick a hardware target (simulated A100 here — no GPU needed).
+//! 2. Run the sample-free offline stage once (candidates -> hybrid
+//!    analysis -> micro-kernel library). No shape samples anywhere.
+//! 3. At "runtime", throw arbitrary dynamic shapes at the selector and
+//!    watch it construct a kernel (tile chain + grid + padding) per
+//!    shape in microseconds.
+//!
+//! Run with: cargo run --release --example quickstart
+
+use vortex::compiler::{compile, CompileOpts};
+use vortex::coordinator::{HwMode, Selector};
+use vortex::cost::hybrid::AnalyzerConfig;
+use vortex::hw::presets;
+use vortex::ir::{Contraction, DType};
+use vortex::profiler::SimProfiler;
+use vortex::sim::Simulator;
+
+fn main() {
+    // -- offline stage (once per hardware, never re-run per shape) -----
+    let hw = presets::a100();
+    let analyzer = AnalyzerConfig::default_for(&hw); // E: L0, L1 on GPU
+    let mut profiler = SimProfiler::new(Simulator::new(hw.clone(), 7));
+    let report = compile(
+        &hw,
+        DType::F16,
+        &analyzer,
+        &mut profiler,
+        &CompileOpts::default(),
+    );
+    println!(
+        "offline: {} candidates -> {} micro-kernels ({} profile queries, ~{:.1}s modeled on-target)",
+        report.candidates_total,
+        report.library.kernels.len(),
+        report.profile_queries,
+        report.offline_secs,
+    );
+
+    // -- runtime stage: any shape, no samples, no retuning --------------
+    let selector = Selector::new(hw.clone(), vec![report.library]);
+    for (m, n, k) in [(1, 768, 768), (77, 2304, 768), (333, 4096, 4096), (100_000, 16, 64)] {
+        let c = Contraction { m, n, k, dtype: DType::F16 };
+        let sel = selector.select(c, HwMode::Adaptive).expect("select");
+        let kern = selector.kernel(&sel);
+        println!(
+            "GEMM {m}x{n}x{k}: block {:?} (L0 {:?}) grid {:?} padded {:?} est {:.1}us (selected in {:.1}us)",
+            kern.l1,
+            kern.l0,
+            sel.grid,
+            sel.padded,
+            sel.est_secs * 1e6,
+            sel.select_secs * 1e6,
+        );
+    }
+}

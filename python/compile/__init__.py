@@ -1,0 +1,1 @@
+# Build-time-only package: L2 jax graphs + L1 pallas kernels + AOT bridge.

@@ -1,0 +1,115 @@
+"""AOT bridge: lower every manifest micro-kernel to HLO text artifacts.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via `make artifacts`; it is a no-op when artifacts are newer
+than the inputs. Python never runs on the request path — the rust binary
+loads `artifacts/manifest.json` + `artifacts/*.hlo.txt` at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: all artifacts are single-output, and an
+    # untupled output buffer can be fed straight back as the next call's
+    # accumulator input (device-resident K-chaining in the rust
+    # constructor) without a tuple unpack + host round trip.
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _io_spec(args, out_avals):
+    def one(a):
+        return {"shape": list(a.shape), "dtype": str(a.dtype)}
+
+    return [one(a) for a in args], [one(a) for a in out_avals]
+
+
+def lower_entry(entry: dict) -> tuple[str, dict]:
+    """Lower one manifest entry; returns (hlo_text, io-annotated entry)."""
+    kind = entry["kind"]
+    params = dict(entry["params"])
+    builder = model.BUILDERS[kind]
+    fn, args = builder(**params)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    out_avals = jax.eval_shape(fn, *args)
+    inputs, outputs = _io_spec(args, out_avals)
+    annotated = {
+        "name": entry["name"],
+        "kind": kind,
+        "params": params,
+        "file": f"{entry['name']}.hlo.txt",
+        "inputs": inputs,
+        "outputs": outputs,
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+    return text, annotated
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--manifest",
+        default=os.path.join(os.path.dirname(__file__), "microkernels.json"),
+    )
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated entry names to lower"
+    )
+    ns = ap.parse_args()
+
+    with open(ns.manifest) as f:
+        spec = json.load(f)
+    only = set(ns.only.split(",")) if ns.only else None
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    out_entries = []
+    t_all = time.time()
+    for entry in spec["entries"]:
+        if only and entry["name"] not in only:
+            continue
+        t0 = time.time()
+        text, annotated = lower_entry(entry)
+        path = os.path.join(ns.out_dir, annotated["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        out_entries.append(annotated)
+        print(
+            f"  lowered {entry['name']:<32} {len(text):>9} chars "
+            f"in {time.time() - t0:5.1f}s"
+        )
+    manifest_out = {
+        "generated_by": "python/compile/aot.py",
+        "jax_version": jax.__version__,
+        "entries": out_entries,
+    }
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest_out, f, indent=1)
+    print(
+        f"wrote {len(out_entries)} artifacts + manifest.json "
+        f"to {ns.out_dir} in {time.time() - t_all:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""L1: fused GEMM + bias + activation epilogue as a Pallas kernel.
+
+Vortex's kernel constructor fuses the epilogue of the *last* K super-block
+into the micro-kernel (the paper's Store stage customization, Table 1).
+This variant is used by the BERT-serving example for the MLP up-projection
+(bias + GELU) so the activation never round-trips through HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def _apply_act(x, act: str):
+    if act == "gelu":
+        inner = _GELU_C * (x + 0.044715 * x * x * x)
+        return 0.5 * x * (1.0 + jnp.tanh(inner))
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "none":
+        return x
+    raise ValueError(f"unknown act {act!r}")
+
+
+def _kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, k_steps: int, act: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        out = acc_ref[...] + bias_ref[...].astype(jnp.float32)[None, :]
+        o_ref[...] = _apply_act(out, act).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk", "act"))
+def gemm_bias_act(
+    a: jax.Array,
+    b: jax.Array,
+    bias: jax.Array,
+    *,
+    tm: int,
+    tn: int,
+    tk: int,
+    act: str = "gelu",
+) -> jax.Array:
+    """C = act(A @ B + bias), fused in the store stage of the K loop."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and bias.shape == (n,), (a.shape, b.shape, bias.shape)
+    if m % tm or n % tn or k % tk:
+        raise ValueError(
+            f"block ({m},{n},{k}) not divisible by tile ({tm},{tn},{tk})"
+        )
+    k_steps = k // tk
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps, act=act),
+        grid=(m // tm, n // tn, k_steps),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=True,
+    )(a, b, bias)

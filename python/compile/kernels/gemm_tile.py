@@ -1,0 +1,132 @@
+"""L1: blocked GEMM micro-kernels as Pallas kernels.
+
+These are the Vortex L0 micro-kernels for the *real* (CPU-PJRT) testbed:
+each (BM, BN, BK, tm, tn, tk, dtype) variant is lowered once by aot.py to
+a static-shape HLO module; the Rust kernel constructor composes them over
+the runtime grid (pad -> tile loop -> accumulate), exactly the paper's
+runtime stage.
+
+Hardware adaptation (DESIGN.md §3): the Pallas BlockSpec expresses the
+HBM->VMEM tiling the paper expressed with CUDA threadblocks; the inner
+(tm, tn, tk) tile is the MXU/ISA-granularity analog (FilterByISA in
+Algorithm 2 constrains these to multiples of the pallas sublane/lane
+tile, 8x128 for f32). interpret=True throughout — real-TPU lowering
+emits Mosaic custom-calls the CPU PJRT client cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _check_tiles(m, n, k, tm, tn, tk):
+    if m % tm or n % tn or k % tk:
+        raise ValueError(
+            f"block ({m},{n},{k}) not divisible by inner tile ({tm},{tn},{tk})"
+        )
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """Grid (M/tm, N/tn, K/tk), K innermost; f32 VMEM accumulator."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _gemm_acc_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, k_steps: int):
+    """Accumulate form O = C_in + A @ B; C_in seeds the accumulator."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = c_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk", "out_dtype"))
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tm: int,
+    tn: int,
+    tk: int,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """C = A @ B over one micro-kernel block, pallas-tiled (tm, tn, tk).
+
+    bf16 inputs with f32 output model the MXU/Tensor-Core contract
+    (low-precision multiply, f32 accumulate).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (k, k2)
+    _check_tiles(m, n, k, tm, tn, tk)
+    k_steps = k // tk
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=k_steps),
+        grid=(m // tm, n // tn, k_steps),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def gemm_acc(
+    a: jax.Array,
+    b: jax.Array,
+    c_in: jax.Array,
+    *,
+    tm: int,
+    tn: int,
+    tk: int,
+) -> jax.Array:
+    """O = C_in + A @ B — the grid-constructor accumulate micro-kernel.
+
+    The Rust runtime chains these over K super-blocks: the first call gets
+    C_in = 0, subsequent calls feed the previous output back in. Output
+    dtype follows C_in (f32 on the hot path).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (k, k2)
+    assert c_in.shape == (m, n), (c_in.shape, m, n)
+    _check_tiles(m, n, k, tm, tn, tk)
+    k_steps = k // tk
+    return pl.pallas_call(
+        functools.partial(_gemm_acc_kernel, k_steps=k_steps),
+        grid=(m // tm, n // tn, k_steps),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c_in.dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=True,
+    )(a, b, c_in)

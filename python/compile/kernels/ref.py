@@ -1,0 +1,121 @@
+"""Pure-jnp correctness oracles for the Pallas micro-kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops (no pallas, no lax.conv fast paths where
+avoidable) so the two code paths are genuinely independent. pytest +
+hypothesis compare kernel vs ref with assert_allclose.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation regardless of input dtype."""
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32)
+    ).astype(a.dtype)
+
+
+def gemm_acc_ref(a: jax.Array, b: jax.Array, c_in: jax.Array) -> jax.Array:
+    """C = C_in + A @ B — the accumulate form used by the grid constructor."""
+    acc = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    return (c_in.astype(jnp.float32) + acc).astype(c_in.dtype)
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU (same formula the pallas epilogue uses)."""
+    x32 = x.astype(jnp.float32)
+    inner = 0.7978845608028654 * (x32 + 0.044715 * x32 * x32 * x32)
+    return (0.5 * x32 * (1.0 + jnp.tanh(inner))).astype(x.dtype)
+
+
+def gemm_bias_act_ref(
+    a: jax.Array, b: jax.Array, bias: jax.Array, act: str = "gelu"
+) -> jax.Array:
+    """C = act(A @ B + bias) — fused epilogue reference."""
+    out = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    out = out + bias.astype(jnp.float32)[None, :]
+    if act == "gelu":
+        out = gelu_ref(out)
+    elif act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown act {act!r}")
+    return out.astype(a.dtype)
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    """Row softmax over the last axis, f32 internally."""
+    x32 = x.astype(jnp.float32)
+    m = jnp.max(x32, axis=-1, keepdims=True)
+    e = jnp.exp(x32 - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def im2col_ref(x: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
+    """NHWC input -> (N*OH*OW, KH*KW*C) patch matrix, valid padding.
+
+    Built from static slices + concatenate only, so it is a trustworthy
+    oracle for the implicit-GEMM convolution path.
+    """
+    n, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            cols.append(patch.reshape(n * oh * ow, c))
+    # (N*OH*OW, KH*KW*C) with filter taps in (i, j) row-major order
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Direct NHWC valid convolution, f32 accumulation.
+
+    x: (N, H, W, Cin); w: (KH, KW, Cin, Cout) -> (N, OH, OW, Cout).
+    Implemented as an explicit loop over filter taps (independent of both
+    im2col and lax.conv), to serve as the oracle for the implicit-GEMM path.
+    """
+    n, h, wdt, cin = x.shape
+    kh, kw, _, cout = w.shape
+    oh = (h - kh) // stride + 1
+    ow = (wdt - kw) // stride + 1
+    acc = jnp.zeros((n, oh, ow, cout), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            acc = acc + jnp.einsum(
+                "nhwc,co->nhwo",
+                patch.astype(jnp.float32),
+                w[i, j].astype(jnp.float32),
+            )
+    return acc.astype(x.dtype)
+
+
+def encoder_layer_ref(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    wo: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    n_heads: int,
+) -> jax.Array:
+    """Minimal transformer encoder layer (attn + GELU MLP, residuals)."""
+    s, d = x.shape
+    hd = d // n_heads
+    q = gemm_ref(x, wq).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    k = gemm_ref(x, wk).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    v = gemm_ref(x, wv).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hsd,htd->hst", q, k) / jnp.sqrt(jnp.float32(hd))
+    probs = softmax_ref(scores)
+    ctx = jnp.einsum("hst,htd->hsd", probs, v).transpose(1, 0, 2).reshape(s, d)
+    attn_out = gemm_ref(ctx, wo) + x
+    h = gemm_bias_act_ref(attn_out, w1, b1, act="gelu")
+    out = gemm_ref(h, w2) + b2[None, :] + attn_out
+    return out

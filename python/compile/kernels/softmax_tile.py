@@ -1,0 +1,35 @@
+"""L1: row-softmax Pallas kernel (attention score normalization).
+
+Tiled over rows only; each grid step owns (tr, N) so the reduction stays
+inside one VMEM block — the dynamic dimension at serving time is the row
+count (sequence length), which the Rust side pads to the row tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tr",))
+def softmax(x: jax.Array, *, tr: int) -> jax.Array:
+    """Row softmax over the last axis of a 2-D block, row tile tr."""
+    r, n = x.shape
+    if r % tr:
+        raise ValueError(f"rows {r} not divisible by row tile {tr}")
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(r // tr,),
+        in_specs=[pl.BlockSpec((tr, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
+        interpret=True,
+    )(x)

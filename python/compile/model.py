@@ -1,0 +1,200 @@
+"""L2: jax compute graphs that aot.py lowers to HLO artifacts.
+
+Everything here is a *static-shape* function-of-arrays built on the L1
+Pallas kernels (kernels/*.py). aot.py lowers one variant per manifest
+entry; the Rust runtime composes the static blocks over the dynamic
+runtime shape (pad -> grid loop -> accumulate), which is Vortex's
+kernel-constructor runtime stage.
+
+Python is build-time only: nothing in this module runs on the request
+path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm_epilogue, gemm_tile, ref, softmax_tile
+
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def dtype_of(name: str):
+    return _DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# Micro-kernel entry points (one AOT artifact per (shape, tile, dtype))
+# ---------------------------------------------------------------------------
+
+def make_gemm(bm, bn, bk, tm, tn, tk, in_dtype="f32"):
+    """C[bm,bn] = A[bm,bk] @ B[bk,bn] — plain micro-kernel block."""
+    dt = dtype_of(in_dtype)
+
+    def fn(a, b):
+        return (gemm_tile.gemm(a, b, tm=tm, tn=tn, tk=tk),)
+
+    args = (
+        jax.ShapeDtypeStruct((bm, bk), dt),
+        jax.ShapeDtypeStruct((bk, bn), dt),
+    )
+    return fn, args
+
+
+def make_gemm_acc(bm, bn, bk, tm, tn, tk, in_dtype="f32"):
+    """O[bm,bn] = C_in[bm,bn] + A[bm,bk] @ B[bk,bn] — accumulate block.
+
+    The accumulator is always f32; this is the hot-path micro-kernel the
+    Rust grid constructor chains over K super-blocks.
+    """
+    dt = dtype_of(in_dtype)
+
+    def fn(a, b, c_in):
+        return (gemm_tile.gemm_acc(a, b, c_in, tm=tm, tn=tn, tk=tk),)
+
+    args = (
+        jax.ShapeDtypeStruct((bm, bk), dt),
+        jax.ShapeDtypeStruct((bk, bn), dt),
+        jax.ShapeDtypeStruct((bm, bn), jnp.float32),
+    )
+    return fn, args
+
+
+def make_gemm_bias_act(bm, bn, bk, tm, tn, tk, act="gelu", in_dtype="f32"):
+    """O = act(A @ B + bias) — fused-epilogue block (store-stage fusion)."""
+    dt = dtype_of(in_dtype)
+
+    def fn(a, b, bias):
+        return (
+            gemm_epilogue.gemm_bias_act(a, b, bias, tm=tm, tn=tn, tk=tk, act=act),
+        )
+
+    args = (
+        jax.ShapeDtypeStruct((bm, bk), dt),
+        jax.ShapeDtypeStruct((bk, bn), dt),
+        jax.ShapeDtypeStruct((bn,), dt),
+    )
+    return fn, args
+
+
+def make_softmax(rows, cols, tr):
+    """Row softmax block used by the attention path."""
+
+    def fn(x):
+        return (softmax_tile.softmax(x, tr=tr),)
+
+    args = (jax.ShapeDtypeStruct((rows, cols), jnp.float32),)
+    return fn, args
+
+
+# ---------------------------------------------------------------------------
+# Implicit-GEMM convolution: im2col (data layout) + pallas GEMM (compute)
+# ---------------------------------------------------------------------------
+
+def conv2d_im2col(x, w, *, tm, tn, tk):
+    """NHWC valid conv via im2col + the pallas GEMM micro-kernel.
+
+    This is how Vortex maps Conv loops into the same rKernel recursion as
+    GEMM (paper §4.2): the patch-matrix rows are the parallel/spatial
+    loops, the (kh*kw*cin) axis is the temporal-reduction loop.
+    """
+    n, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    patches = ref.im2col_ref(x, kh, kw)  # (n*oh*ow, kh*kw*cin)
+    # match im2col tap order: rows are (i,j) taps each of width cin
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = gemm_tile.gemm(patches, wmat, tm=tm, tn=tn, tk=tk)
+    oh = h - kh + 1
+    ow = wd - kw + 1
+    return out.reshape(n, oh, ow, cout).astype(x.dtype)
+
+
+def make_conv2d(n, h, w, cin, cout, kh, kw, tm, tn, tk, in_dtype="f32"):
+    """Conv micro-block artifact (fixed spatial extent, valid padding)."""
+    dt = dtype_of(in_dtype)
+
+    def fn(x, wgt):
+        return (conv2d_im2col(x, wgt, tm=tm, tn=tn, tk=tk),)
+
+    args = (
+        jax.ShapeDtypeStruct((n, h, w, cin), dt),
+        jax.ShapeDtypeStruct((kh, kw, cin, cout), dt),
+    )
+    return fn, args
+
+
+# ---------------------------------------------------------------------------
+# Bucketed whole-layer graph: the static-shape baseline for real serving
+# ---------------------------------------------------------------------------
+
+def encoder_layer(x, params, *, n_heads, tm, tn, tk):
+    """Transformer encoder layer built on the pallas kernels.
+
+    Used two ways: (a) AOT'd at a few fixed sequence buckets as the
+    "static-compile + pad" baseline the paper argues against, and
+    (b) as the shape/numerics test target for the model-level path.
+    """
+    wq, wk, wv, wo, w1, b1, w2, b2 = params
+    s, d = x.shape
+    hd = d // n_heads
+    q = gemm_tile.gemm(x, wq, tm=tm, tn=tn, tk=tk)
+    k = gemm_tile.gemm(x, wk, tm=tm, tn=tn, tk=tk)
+    v = gemm_tile.gemm(x, wv, tm=tm, tn=tn, tk=tk)
+
+    def split(t):
+        return t.reshape(s, n_heads, hd).transpose(1, 0, 2)
+
+    qh, kh_, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("hsd,htd->hst", qh, kh_) / jnp.sqrt(jnp.float32(hd))
+    probs = softmax_tile.softmax(scores.reshape(n_heads * s, s), tr=min(s, 8))
+    probs = probs.reshape(n_heads, s, s)
+    ctx = jnp.einsum("hst,htd->hsd", probs, vh).transpose(1, 0, 2).reshape(s, d)
+    attn_out = gemm_tile.gemm(ctx, wo, tm=tm, tn=tn, tk=tk) + x
+    h = gemm_epilogue.gemm_bias_act(
+        attn_out, w1, b1, tm=tm, tn=tn, tk=tk, act="gelu"
+    )
+    out = (
+        gemm_tile.gemm(h, w2, tm=tm, tn=min(tn, d), tk=tk)
+        + b2[None, :]
+        + attn_out
+    )
+    return out
+
+
+def encoder_params_spec(d, ff, dtype=jnp.float32):
+    """ShapeDtypeStructs for encoder_layer params, in call order."""
+    sd = jax.ShapeDtypeStruct
+    return (
+        sd((d, d), dtype),
+        sd((d, d), dtype),
+        sd((d, d), dtype),
+        sd((d, d), dtype),
+        sd((d, ff), dtype),
+        sd((ff,), dtype),
+        sd((ff, d), dtype),
+        sd((d,), dtype),
+    )
+
+
+def make_encoder_layer(seq, d, ff, n_heads, tm, tn, tk):
+    """Bucketed encoder-layer artifact at a fixed sequence length."""
+
+    def fn(x, *params):
+        return (encoder_layer(x, params, n_heads=n_heads, tm=tm, tn=tn, tk=tk),)
+
+    args = (jax.ShapeDtypeStruct((seq, d), jnp.float32),) + encoder_params_spec(
+        d, ff
+    )
+    return fn, args
+
+
+# Registry used by aot.py: manifest "kind" -> builder.
+BUILDERS = {
+    "gemm": make_gemm,
+    "gemm_acc": make_gemm_acc,
+    "gemm_bias_act": make_gemm_bias_act,
+    "softmax": make_softmax,
+    "conv2d": make_conv2d,
+    "encoder_layer": make_encoder_layer,
+}

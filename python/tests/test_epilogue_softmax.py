@@ -1,0 +1,73 @@
+"""Fused epilogue + softmax Pallas kernels vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import gemm_epilogue, ref, softmax_tile
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32).astype(
+        dtype
+    )
+
+
+@pytest.mark.parametrize("act", ["gelu", "relu", "none"])
+def test_gemm_bias_act_matches_ref(act):
+    m, n, k = 64, 256, 256
+    a, b, bias = _rand((m, k), 0), _rand((k, n), 1), _rand((n,), 2)
+    got = gemm_epilogue.gemm_bias_act(a, b, bias, tm=32, tn=128, tk=128, act=act)
+    want = ref.gemm_bias_act_ref(a, b, bias, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_bias_act_multi_k_step():
+    """Epilogue must fire only on the LAST K step (store-stage fusion)."""
+    m, n, k = 32, 128, 512  # 4 K steps of 128
+    a, b, bias = _rand((m, k), 3), _rand((k, n), 4), _rand((n,), 5)
+    got = gemm_epilogue.gemm_bias_act(a, b, bias, tm=32, tn=128, tk=128, act="gelu")
+    want = ref.gemm_bias_act_ref(a, b, bias, act="gelu")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_bias_act_rejects_bad_act():
+    a, b, bias = _rand((8, 128), 0), _rand((128, 128), 1), _rand((128,), 2)
+    with pytest.raises(ValueError, match="unknown act"):
+        gemm_epilogue.gemm_bias_act(a, b, bias, tm=8, tn=128, tk=128, act="swish")
+
+
+@pytest.mark.parametrize("r,c,tr", [(8, 16, 8), (128, 128, 8), (64, 256, 16)])
+def test_softmax_matches_ref(r, c, tr):
+    x = _rand((r, c), 6) * 4.0
+    got = softmax_tile.softmax(x, tr=tr)
+    np.testing.assert_allclose(got, ref.softmax_ref(x), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    x = _rand((32, 64), 7) * 10.0
+    got = softmax_tile.softmax(x, tr=8)
+    np.testing.assert_allclose(jnp.sum(got, axis=-1), jnp.ones(32), rtol=1e-5)
+
+
+def test_softmax_stable_at_large_logits():
+    x = jnp.full((8, 16), 1e4, jnp.float32)
+    got = softmax_tile.softmax(x, tr=8)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    np.testing.assert_allclose(got, jnp.full((8, 16), 1.0 / 16.0), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ri=st.integers(1, 8),
+    c=st.sampled_from([16, 64, 128, 256]),
+    scale=st.floats(0.1, 20.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_hypothesis(ri, c, scale, seed):
+    x = _rand((ri * 8, c), seed) * scale
+    got = softmax_tile.softmax(x, tr=8)
+    np.testing.assert_allclose(got, ref.softmax_ref(x), rtol=1e-4, atol=1e-6)

@@ -1,0 +1,114 @@
+"""Pallas GEMM micro-kernels vs the pure-jnp oracle — core L1 signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import gemm_tile, ref
+
+
+def _rand(shape, dtype, seed):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, shape, jnp.float32).astype(dtype)
+
+
+TILE_CASES = [
+    # (m, n, k, tm, tn, tk)
+    (8, 128, 128, 8, 128, 128),
+    (16, 128, 256, 16, 128, 128),
+    (32, 256, 256, 32, 128, 128),
+    (64, 256, 512, 32, 128, 128),
+    (128, 512, 512, 64, 128, 128),
+    (64, 768, 768, 64, 128, 128),
+]
+
+
+@pytest.mark.parametrize("m,n,k,tm,tn,tk", TILE_CASES)
+def test_gemm_matches_ref_f32(m, n, k, tm, tn, tk):
+    a = _rand((m, k), jnp.float32, 0)
+    b = _rand((k, n), jnp.float32, 1)
+    got = gemm_tile.gemm(a, b, tm=tm, tn=tn, tk=tk)
+    want = ref.gemm_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,k,tm,tn,tk", TILE_CASES[:3])
+def test_gemm_matches_ref_bf16(m, n, k, tm, tn, tk):
+    a = _rand((m, k), jnp.bfloat16, 2)
+    b = _rand((k, n), jnp.bfloat16, 3)
+    got = gemm_tile.gemm(a, b, tm=tm, tn=tn, tk=tk)  # f32 out (MMA contract)
+    want = jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("m,n,k,tm,tn,tk", TILE_CASES[:4])
+def test_gemm_acc_matches_ref(m, n, k, tm, tn, tk):
+    a = _rand((m, k), jnp.float32, 4)
+    b = _rand((k, n), jnp.float32, 5)
+    c = _rand((m, n), jnp.float32, 6)
+    got = gemm_tile.gemm_acc(a, b, c, tm=tm, tn=tn, tk=tk)
+    want = ref.gemm_acc_ref(a, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_acc_chains_like_full_gemm():
+    """Chaining gemm_acc over K super-blocks == one big GEMM.
+
+    This is exactly what the Rust kernel constructor does at runtime, so
+    it is the most load-bearing invariant in the python suite.
+    """
+    m, n, k, bk = 32, 256, 1024, 256
+    a = _rand((m, k), jnp.float32, 7)
+    b = _rand((k, n), jnp.float32, 8)
+    c = jnp.zeros((m, n), jnp.float32)
+    for i in range(k // bk):
+        c = gemm_tile.gemm_acc(
+            a[:, i * bk : (i + 1) * bk],
+            b[i * bk : (i + 1) * bk, :],
+            c,
+            tm=32,
+            tn=128,
+            tk=128,
+        )
+    np.testing.assert_allclose(c, ref.gemm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_padding_invariance():
+    """Zero-padding M/K then cropping == unpadded result (constructor math)."""
+    m, n, k = 20, 128, 200
+    mp, kp = 32, 256
+    a = _rand((m, k), jnp.float32, 9)
+    b = _rand((k, n), jnp.float32, 10)
+    ap = jnp.zeros((mp, kp), jnp.float32).at[:m, :k].set(a)
+    bp = jnp.zeros((kp, n), jnp.float32).at[:k, :].set(b)
+    got = gemm_tile.gemm(ap, bp, tm=8, tn=128, tk=128)[:m, :]
+    np.testing.assert_allclose(got, ref.gemm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_rejects_non_divisible_tiles():
+    a = jnp.ones((30, 128), jnp.float32)
+    b = jnp.ones((128, 128), jnp.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        gemm_tile.gemm(a, b, tm=8, tn=128, tk=128)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.integers(1, 6),
+    ni=st.integers(1, 3),
+    ki=st.integers(1, 4),
+    tm=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_hypothesis_shapes(mi, ni, ki, tm, seed):
+    """Property sweep: any (tile-multiple) block shape matches the oracle."""
+    m, n, k = mi * tm, ni * 128, ki * 128
+    a = _rand((m, k), jnp.float32, seed)
+    b = _rand((k, n), jnp.float32, seed + 1)
+    got = gemm_tile.gemm(a, b, tm=tm, tn=128, tk=128)
+    np.testing.assert_allclose(got, ref.gemm_ref(a, b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,22 @@
+//! Bench: Algorithm-2 candidate generation per testbed (the offline
+//! stage's first phase). Run with `cargo bench --bench candgen`.
+
+use vortex::candgen;
+use vortex::hw::presets;
+use vortex::ir::DType;
+use vortex::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::default();
+    for (name, hw, dt) in [
+        ("candgen/xeon_f32", presets::xeon_8255c(), DType::F32),
+        ("candgen/a100_cc_f32", presets::a100(), DType::F32),
+        ("candgen/a100_tc_f16", presets::a100(), DType::F16),
+        ("candgen/cpu_pjrt_f32", presets::cpu_pjrt(), DType::F32),
+    ] {
+        let set = candgen::generate(&hw, dt);
+        b.run(&format!("{name} ({} cands)", set.total()), || {
+            black_box(candgen::generate(&hw, dt));
+        });
+    }
+}

@@ -1,0 +1,54 @@
+//! Bench: analytical cost model (Eqs. 2–4) and hybrid evaluation —
+//! these run once per library kernel per selection, so they bound the
+//! runtime scheduling overhead. Run with `cargo bench --bench cost_model`.
+
+use vortex::cost::hybrid::{hybrid_cost, AnalyzerConfig};
+use vortex::cost::{self, Strategy};
+use vortex::hw::presets;
+use vortex::ir::DType;
+use vortex::profiler::SimProfiler;
+use vortex::sim::Simulator;
+use vortex::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::default();
+    let hw = presets::a100();
+    let bi = hw.backend_idx("tensor_core_f16").unwrap();
+    let strat = Strategy::new(vec![[16, 8, 16], [64, 64, 32], [4096, 4096, 4096]], bi);
+
+    b.run("cost/full_chain_eval x1000", || {
+        for i in 0..1000usize {
+            let mut s = strat.clone();
+            s.tiles[2][0] = 4096 + (i % 7) * 64; // defeat caching
+            black_box(cost::cost(&hw, DType::F16, &s, None).total_secs);
+        }
+    });
+
+    b.run("cost/cost_from_level2 x1000 (runtime hot path)", || {
+        for i in 0..1000usize {
+            let mut s = strat.clone();
+            s.tiles[2][0] = 4096 + (i % 7) * 64;
+            black_box(cost::cost_from(&hw, DType::F16, &s, 2, 1e-6).total_secs);
+        }
+    });
+
+    let cfg = AnalyzerConfig::empirical(1);
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 3));
+    // warm the measurement cache (offline behavior), then measure the
+    // cached-path cost (runtime behavior).
+    hybrid_cost(&hw, DType::F16, &strat, &cfg, &mut prof);
+    b.run("cost/hybrid_cached x1000", || {
+        for _ in 0..1000usize {
+            black_box(hybrid_cost(&hw, DType::F16, &strat, &cfg, &mut prof));
+        }
+    });
+
+    let sim = Simulator::new(hw.clone(), 3);
+    b.run("sim/execute x1000", || {
+        for i in 0..1000usize {
+            let mut s = strat.clone();
+            s.tiles[2][0] = 4096 + (i % 7) * 64;
+            black_box(sim.execute(DType::F16, &s));
+        }
+    });
+}

@@ -1,0 +1,51 @@
+//! Bench: REAL end-to-end dynamic GEMM through the PJRT kernel
+//! constructor (artifacts required; prints SKIP otherwise).
+//! Run with `make artifacts && cargo bench --bench real_gemm`.
+
+use std::path::PathBuf;
+
+use vortex::coordinator::{HwMode, Selector};
+use vortex::hw::presets;
+use vortex::ir::{Contraction, DType};
+use vortex::runtime::{build_real_library, RealEngine};
+use vortex::util::bench::{black_box, Bench};
+use vortex::util::rng::Rng;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP real_gemm: run `make artifacts` first");
+        return;
+    }
+    let engine = RealEngine::load(&dir).expect("engine");
+    let hw = presets::cpu_pjrt();
+    let lib = build_real_library(&engine, &hw, DType::F32, 2).expect("library");
+    let selector = Selector::new(hw, vec![lib]);
+
+    let b = Bench::quick();
+    let mut rng = Rng::new(1);
+    for (m, n, k) in [(77usize, 768usize, 768usize), (128, 768, 768), (200, 512, 1024), (16, 256, 256)] {
+        let a = rng.normal_f32_vec(m * k);
+        let bmat = rng.normal_f32_vec(k * n);
+        let c = Contraction { m, n, k, dtype: DType::F32 };
+        let sel = selector.select(c, HwMode::Adaptive).unwrap();
+        let kern = selector.kernel(&sel).clone();
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        b.run_flops(
+            &format!("real_gemm/{}x{}x{} block {:?}", m, n, k, kern.l1),
+            flops,
+            || {
+                black_box(
+                    engine
+                        .gemm_dynamic(&a, &bmat, (m, n, k), kern.l1, DType::F32)
+                        .unwrap(),
+                );
+            },
+        );
+    }
+
+    // Single-block launch latency (the empirical-profiling primitive).
+    b.run("real_gemm/single_block_8x128x128", || {
+        black_box(engine.time_artifact("gemm_acc_8x128x128_f32", 1).unwrap());
+    });
+}

@@ -1,0 +1,48 @@
+//! Bench: the runtime selection hot path (Fig. 14's scheduling
+//! component) — shape -> micro-kernel over the compiled library.
+//! Target (EXPERIMENTS.md §Perf): well under the smallest kernel's
+//! execution time. Run with `cargo bench --bench runtime_select`.
+
+use vortex::bench::harness::{vortex_engine, Engine, Testbed};
+use vortex::coordinator::HwMode;
+use vortex::ir::{Contraction, DType};
+use vortex::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::default();
+    for tb in [Testbed::GpuTensorCore, Testbed::GpuCudaCore, Testbed::Cpu] {
+        let engine = vortex_engine(tb, 7);
+        let Engine::Vortex { selector, mode } = &engine else { unreachable!() };
+        let nk: usize = selector.libraries.iter().map(|l| l.kernels.len()).sum();
+        let shapes = [
+            (1usize, 768usize, 768usize),
+            (77, 2304, 768),
+            (512, 3072, 768),
+            (4096, 4096, 4096),
+            (300_000, 16, 64),
+        ];
+        let stats = b.run(
+            &format!("select/{} x{} shapes ({} kernels)", tb.label(), shapes.len(), nk),
+            || {
+                for &(m, n, k) in &shapes {
+                    let c = Contraction { m, n, k, dtype: tb.dtype() };
+                    black_box(selector.select(c, *mode).unwrap());
+                }
+            },
+        );
+        println!(
+            "      per-selection median: {:?}",
+            stats.median / shapes.len() as u32
+        );
+    }
+
+    // The paper's Fig. 16 adaptive mode (two libraries scanned).
+    let engine = vortex_engine(Testbed::GpuTensorCore, 7);
+    let Engine::Vortex { selector, .. } = &engine else { unreachable!() };
+    b.run("select/adaptive_two_backends x100", || {
+        for m in 1..=100usize {
+            let c = Contraction { m, n: 2048, k: 1024, dtype: DType::F16 };
+            black_box(selector.select(c, HwMode::Adaptive).unwrap());
+        }
+    });
+}

@@ -1,0 +1,43 @@
+//! Baseline engines (paper §7.1): vendor-library analogs (cuBLAS /
+//! cuDNN / oneDNN / ONNX Runtime / CUTLASS) and the sample-driven
+//! dynamic-shape compiler DietCode.
+//!
+//! Every engine implements [`PlanEngine`]: given a runtime contraction
+//! it produces the strategy chain it would execute. All engines are
+//! timed by the *same* simulator (or the same real runtime), so the
+//! comparisons isolate exactly what the paper compares — configuration
+//! quality and shape adaptivity — not simulator favoritism.
+
+pub mod cutlass;
+pub mod dietcode;
+pub mod vendor;
+
+use crate::cost::Strategy;
+use crate::ir::Contraction;
+
+/// A runtime planning engine: shape -> strategy chain.
+pub trait PlanEngine {
+    fn name(&self) -> &'static str;
+    /// Plan the kernel for a concrete shape. The returned chain's top
+    /// tile is the padded problem.
+    fn plan(&self, c: Contraction) -> Strategy;
+    /// Fixed extra overhead per dispatched call (framework layers etc.).
+    fn dispatch_overhead(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Helper: wrap an (l0, l1) pair and a problem into a padded chain.
+pub fn padded_chain(
+    l0: [usize; 3],
+    l1: [usize; 3],
+    c: Contraction,
+    backend: usize,
+) -> Strategy {
+    let padded = [
+        crate::ir::round_up(c.m, l1[0]),
+        crate::ir::round_up(c.n, l1[1]),
+        crate::ir::round_up(c.k, l1[2]),
+    ];
+    Strategy::new(vec![l0, l1, padded], backend)
+}

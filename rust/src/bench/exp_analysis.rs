@@ -1,0 +1,314 @@
+//! §7.4 analyses: offline overhead, runtime overhead breakdown
+//! (Fig. 14), hierarchical-construction ablation (Fig. 15), hybrid
+//! analyzer study (Table 7), dynamic hardware adaptation (Fig. 16).
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::baselines::dietcode::DietCode;
+use crate::bench::harness::{vortex_engine, Engine, Testbed};
+use crate::bench::workloads;
+use crate::compiler::{compile, CompileOpts, MicroKernelLibrary};
+use crate::coordinator::{HwMode, Selector};
+use crate::cost::hybrid::AnalyzerConfig;
+use crate::ir::{Contraction, DType};
+use crate::profiler::SimProfiler;
+use crate::sim::Simulator;
+use crate::util::table::{fmt_secs, fmt_x, Table};
+
+/// §7.4 Offline-overhead analysis: Vortex candidate counts + compile
+/// time per mode vs DietCode's sample-driven tuning time.
+pub fn offline(out_dir: &Path, seed: u64, dietcode_trials: usize) -> Vec<Table> {
+    let mut t = Table::new(
+        "§7.4 — offline compilation overhead",
+        &["Engine", "Mode", "Candidates", "Profile queries", "Offline time (modeled)", "Wall here"],
+    );
+    for tb in [Testbed::Cpu, Testbed::GpuTensorCore, Testbed::GpuCudaCore] {
+        let hw = tb.hw();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+        let r = compile(&hw, tb.dtype(), &cfg, &mut prof, &CompileOpts::default());
+        t.row(vec![
+            "vortex".into(),
+            tb.label().into(),
+            r.candidates_total.to_string(),
+            r.profile_queries.to_string(),
+            fmt_secs(r.offline_secs),
+            fmt_secs(r.wall_secs),
+        ]);
+    }
+    // DietCode: GPU CUDA-core mode, the full Table-3 suite as its
+    // sample set (paper §7.4: "using configurations in Table 3 as the
+    // sample set" -> 25 hours of tuning). The trial budget is sized so
+    // the modeled tuning time lands in the paper's tens-of-hours class;
+    // more trials only make the sample-driven approach look worse.
+    let hw = Testbed::GpuCudaCore.hw();
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+    let wall0 = Instant::now();
+    let samples: Vec<[usize; 3]> = workloads::gemm_suite(DType::F32, seed)
+        .iter()
+        .map(|c| {
+            let ct = c.program.contraction();
+            [ct.m, ct.n, ct.k]
+        })
+        .collect();
+    let dc = DietCode::tune(
+        &hw,
+        "cuda_core_f32",
+        &samples,
+        dietcode_trials,
+        &mut prof,
+        seed,
+    );
+    t.row(vec![
+        "dietcode".into(),
+        Testbed::GpuCudaCore.label().into(),
+        format!("{} samples x {} trials", samples.len(), dietcode_trials),
+        dc.trials_total.to_string(),
+        fmt_secs(dc.tuning_secs),
+        fmt_secs(wall0.elapsed().as_secs_f64()),
+    ]);
+    let _ = t.write_csv(&out_dir.join("offline.csv"));
+    vec![t]
+}
+
+/// Fig. 14: runtime overhead breakdown — scheduling (cost-model
+/// selection) vs kernel execution across GEMM sizes.
+pub fn fig14(out_dir: &Path, seed: u64) -> Vec<Table> {
+    let tb = Testbed::GpuTensorCore;
+    let sim = Simulator::new(tb.hw(), seed);
+    let engine = vortex_engine(tb, seed);
+    let Engine::Vortex { selector, mode } = &engine else { unreachable!() };
+    let mut t = Table::new(
+        "Fig. 14 — runtime overhead breakdown (GPU, GEMM M=N=K)",
+        &["M/N/K", "scheduling (us)", "execution (us)", "scheduling %"],
+    );
+    for &d in &[64usize, 128, 256, 512, 1024, 2048, 4096] {
+        let c = Contraction { m: d, n: d, k: d, dtype: DType::F16 };
+        let sel = selector.select(c, *mode).unwrap();
+        let k = selector.kernel(&sel);
+        let lib = &selector.libraries[sel.lib];
+        let exec = sim.execute(lib.dtype, &k.chain(sel.padded));
+        t.row(vec![
+            d.to_string(),
+            format!("{:.1}", sel.select_secs * 1e6),
+            format!("{:.1}", exec * 1e6),
+            format!("{:.2}%", 100.0 * sel.select_secs / (sel.select_secs + exec)),
+        ]);
+    }
+    let _ = t.write_csv(&out_dir.join("fig14.csv"));
+    vec![t]
+}
+
+/// Fig. 15: hierarchical kernel construction ablation on the Table 3
+/// GEMM suite (GPU Tensor Core): Vortex vs Oracle / Static1 / Static2.
+pub fn fig15(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
+    let tb = Testbed::GpuTensorCore;
+    let hw = tb.hw();
+    let sim = Simulator::new(hw.clone(), seed);
+    let cfg = AnalyzerConfig::default_for(&hw);
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+    let lib =
+        compile(&hw, DType::F16, &cfg, &mut prof, &CompileOpts::default()).library;
+    let selector = Selector::new(hw.clone(), vec![lib.clone()]);
+
+    let cases: Vec<Contraction> = workloads::gemm_suite(DType::F16, seed)
+        .into_iter()
+        .step_by(fraction.max(1))
+        // Oracle scans the full library per case; bound M to keep the
+        // padded-chain costs meaningful on TC tiles.
+        .map(|c| c.program.contraction())
+        .collect();
+
+    // True (simulator) time of a library kernel on a case.
+    let truth = |k: &crate::compiler::MicroKernel, c: Contraction| -> f64 {
+        let padded = [
+            crate::ir::round_up(c.m, k.l1[0]),
+            crate::ir::round_up(c.n, k.l1[1]),
+            crate::ir::round_up(c.k, k.l1[2]),
+        ];
+        sim.execute(DType::F16, &k.chain(padded))
+    };
+
+    // Oracle: per-case best-true kernel (profiling-based static compile).
+    let mut oracle_times = Vec::with_capacity(cases.len());
+    let mut oracle_choice = Vec::with_capacity(cases.len());
+    for &c in &cases {
+        let (bi, bt) = lib
+            .kernels
+            .iter()
+            .enumerate()
+            .map(|(i, k)| (i, truth(k, c)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        oracle_times.push(bt);
+        oracle_choice.push(bi);
+    }
+
+    // Vortex default: analytical selection (hybrid-informed base costs).
+    let vortex_times: Vec<f64> = cases
+        .iter()
+        .map(|&c| {
+            let sel = selector.select(c, HwMode::Only("tensor_core_f16")).unwrap();
+            truth(selector.kernel(&sel), c)
+        })
+        .collect();
+
+    // Static1: dynamic L1 selection, single fixed L0 (most frequently
+    // optimal across the suite).
+    let most_freq = |choices: &[usize]| -> usize {
+        let mut counts = std::collections::HashMap::new();
+        for &c in choices {
+            *counts.entry(c).or_insert(0usize) += 1;
+        }
+        counts.into_iter().max_by_key(|&(_, n)| n).unwrap().0
+    };
+    let fixed_l0 = lib.kernels[most_freq(&oracle_choice)].l0;
+    let static1_lib = MicroKernelLibrary {
+        kernels: lib
+            .kernels
+            .iter()
+            .filter(|k| {
+                k.l1.iter().zip(fixed_l0.iter()).all(|(&p, &c0)| p % c0 == 0)
+            })
+            .map(|k| crate::compiler::MicroKernel { l0: fixed_l0, ..k.clone() })
+            .collect(),
+        ..lib.clone()
+    };
+    let static1_sel = Selector::new(hw.clone(), vec![static1_lib]);
+    let static1_times: Vec<f64> = cases
+        .iter()
+        .map(|&c| {
+            let sel = static1_sel.select(c, HwMode::Only("tensor_core_f16")).unwrap();
+            truth(static1_sel.kernel(&sel), c)
+        })
+        .collect();
+
+    // Static2: one fixed (L0, L1) kernel for every case.
+    let fixed_kernel = &lib.kernels[most_freq(&oracle_choice)];
+    let static2_times: Vec<f64> =
+        cases.iter().map(|&c| truth(fixed_kernel, c)).collect();
+
+    let norm = |times: &[f64]| -> f64 {
+        // Average of per-case (oracle / variant) — "fraction of oracle
+        // performance" like the paper's normalization.
+        let s: f64 = times
+            .iter()
+            .zip(oracle_times.iter())
+            .map(|(t, o)| o / t)
+            .sum();
+        100.0 * s / times.len() as f64
+    };
+
+    let mut t = Table::new(
+        "Fig. 15 — hierarchical construction ablation (GPU Tensor Core, % of Vortex-Oracle)",
+        &["Variant", "% of Oracle perf"],
+    );
+    t.row(vec!["Vortex-Oracle".into(), "100.0%".into()]);
+    t.row(vec!["Vortex".into(), format!("{:.1}%", norm(&vortex_times))]);
+    t.row(vec!["Vortex-Static1".into(), format!("{:.1}%", norm(&static1_times))]);
+    t.row(vec!["Vortex-Static2".into(), format!("{:.1}%", norm(&static2_times))]);
+    let _ = t.write_csv(&out_dir.join("fig15.csv"));
+    vec![t]
+}
+
+/// Table 7: hybrid analyzer configurations — offline overhead vs
+/// resulting execution performance.
+pub fn table7(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
+    let mut t = Table::new(
+        "Table 7 — hybrid analyzer configuration study",
+        &["HW", "Analyzer config", "Offline overhead", "Execution perf (vs default)"],
+    );
+    for (tb, default_cfg, changed_cfg, changed_all_pairs) in [
+        // CPU: default E:L0; changed E:L0,L1 (profile every pair -> hours).
+        (Testbed::Cpu, AnalyzerConfig::empirical(0), AnalyzerConfig::empirical(1), true),
+        // GPU TC: default E:L0,L1; changed E:L0 only.
+        (Testbed::GpuTensorCore, AnalyzerConfig::empirical(1), AnalyzerConfig::empirical(0), false),
+        // GPU CC: default E:L0,L1; changed E:L0 only.
+        (Testbed::GpuCudaCore, AnalyzerConfig::empirical(1), AnalyzerConfig::empirical(0), false),
+    ] {
+        let hw = tb.hw();
+        let sim = Simulator::new(hw.clone(), seed);
+        let cases: Vec<Contraction> = workloads::gemm_suite(tb.dtype(), seed)
+            .into_iter()
+            .step_by(fraction.max(1))
+            .map(|c| c.program.contraction())
+            .collect();
+        let eval = |cfg: &AnalyzerConfig, all_pairs: bool| -> (f64, f64) {
+            let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+            let r = compile(
+                &hw,
+                tb.dtype(),
+                cfg,
+                &mut prof,
+                &CompileOpts { profile_all_pairs: all_pairs, ..CompileOpts::default() },
+            );
+            let sel = Selector::new(hw.clone(), vec![r.library]);
+            let total: f64 = cases
+                .iter()
+                .map(|&c| {
+                    let s = sel.select(c, HwMode::Only(tb.backend_name())).unwrap();
+                    let k = sel.kernel(&s);
+                    sim.execute(tb.dtype(), &k.chain(s.padded))
+                })
+                .sum();
+            (r.offline_secs, total)
+        };
+        let (off_d, perf_d) = eval(&default_cfg, false);
+        let (off_c, perf_c) = eval(&changed_cfg, changed_all_pairs);
+        t.row(vec![
+            tb.label().into(),
+            format!("Default ({})", default_cfg.label()),
+            fmt_secs(off_d),
+            "1x".into(),
+        ]);
+        t.row(vec![
+            tb.label().into(),
+            format!("Changed ({})", changed_cfg.label()),
+            fmt_secs(off_c),
+            fmt_x(perf_d / perf_c), // >1 means changed is faster
+        ]);
+    }
+    let _ = t.write_csv(&out_dir.join("table7.csv"));
+    vec![t]
+}
+
+/// Fig. 16: CUDA-core-only vs Tensor-core-only vs Adaptive for small-M
+/// FP16 GEMMs (N in {1024, 2048, 4096}, K = 1024, M in 1..=16).
+pub fn fig16(out_dir: &Path, seed: u64) -> Vec<Table> {
+    let tb = Testbed::GpuTensorCore;
+    let sim = Simulator::new(tb.hw(), seed);
+    let engine = vortex_engine(tb, seed);
+    let Engine::Vortex { selector, .. } = &engine else { unreachable!() };
+    let mut t = Table::new(
+        "Fig. 16 — dynamic hardware adaptation (normalized to CUDA-core-only)",
+        &["N", "M", "cuda_only", "tensor_only", "adaptive", "adaptive picks"],
+    );
+    let run = |c: Contraction, mode: HwMode| -> (f64, &'static str) {
+        let sel = selector.select(c, mode).unwrap();
+        let k = selector.kernel(&sel);
+        let lib = &selector.libraries[sel.lib];
+        (
+            sim.execute(lib.dtype, &k.chain(sel.padded)),
+            selector.hw.backends[k.backend].name,
+        )
+    };
+    for &n in &[1024usize, 2048, 4096] {
+        for m in [1usize, 2, 4, 8, 12, 16] {
+            let c = Contraction { m, n, k: 1024, dtype: DType::F16 };
+            let (cc, _) = run(c, HwMode::Only("cuda_core_f32"));
+            let (tc, _) = run(c, HwMode::Only("tensor_core_f16"));
+            let (ad, picked) = run(c, HwMode::Adaptive);
+            t.row(vec![
+                n.to_string(),
+                m.to_string(),
+                "1.00".into(),
+                format!("{:.2}", tc / cc),
+                format!("{:.2}", ad / cc),
+                picked.into(),
+            ]);
+        }
+    }
+    let _ = t.write_csv(&out_dir.join("fig16.csv"));
+    vec![t]
+}

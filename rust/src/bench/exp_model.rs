@@ -1,0 +1,64 @@
+//! Model-level experiment: Fig. 13 — end-to-end speedups on language
+//! models (dynamic sequence length) and CNNs (dynamic batch size).
+
+use std::path::Path;
+
+use crate::bench::harness::{baseline_engines, vortex_engine, SpeedupAgg, Testbed};
+use crate::ir::TensorProgram;
+use crate::models::{dynamic_range, trace, Model};
+use crate::sim::Simulator;
+use crate::util::table::{fmt_x, Table};
+
+/// Fig. 13: end-to-end model speedups. `stride` subsamples the dynamic
+/// range (1 = the paper's full grid).
+pub fn fig13(out_dir: &Path, seed: u64, stride: usize) -> Vec<Table> {
+    let mut detail = Table::new(
+        "Fig. 13 — per-point end-to-end times (CSV for plotting)",
+        &["model", "dynamic", "testbed", "baseline", "baseline_ms", "vortex_ms", "speedup"],
+    );
+    let mut summary = Table::new(
+        "Fig. 13 — average end-to-end speedup per model",
+        &["model", "testbed", "baseline", "avg speedup (geomean)"],
+    );
+
+    for model in Model::all() {
+        for tb in Testbed::all() {
+            // The paper runs LLMs and CNNs on both platforms; Tensor-Core
+            // mode applies to fp16-able models (all, here).
+            let sim = Simulator::new(tb.hw(), seed);
+            let vortex = vortex_engine(tb, seed);
+            let is_conv_model = !model.is_language_model();
+            let baselines = baseline_engines(tb, is_conv_model, seed);
+            let mut aggs: Vec<SpeedupAgg> =
+                baselines.iter().map(|_| SpeedupAgg::default()).collect();
+            for &dynv in dynamic_range(model).iter().step_by(stride.max(1)) {
+                let ops: Vec<TensorProgram> = trace(model, dynv, tb.dtype());
+                let tv: f64 = ops.iter().map(|p| vortex.time_program(&sim, p)).sum();
+                for (bi, b) in baselines.iter().enumerate() {
+                    let tbl: f64 = ops.iter().map(|p| b.time_program(&sim, p)).sum();
+                    aggs[bi].push(tbl, tv);
+                    detail.row(vec![
+                        model.name().into(),
+                        dynv.to_string(),
+                        tb.label().into(),
+                        b.name().into(),
+                        format!("{:.4}", tbl * 1e3),
+                        format!("{:.4}", tv * 1e3),
+                        format!("{:.3}", tbl / tv),
+                    ]);
+                }
+            }
+            for (b, agg) in baselines.iter().zip(aggs.iter()) {
+                summary.row(vec![
+                    model.name().into(),
+                    tb.label().into(),
+                    b.name().into(),
+                    fmt_x(agg.geomean()),
+                ]);
+            }
+        }
+    }
+    let _ = detail.write_csv(&out_dir.join("fig13.csv"));
+    let _ = summary.write_csv(&out_dir.join("fig13_summary.csv"));
+    vec![summary]
+}

@@ -1,0 +1,310 @@
+//! Shared evaluation harness: every engine (Vortex and the baselines)
+//! plans a strategy per shape; the same simulator times the plan. The
+//! harness also builds the per-testbed engine roster used by Table 5 /
+//! Fig. 12 / Fig. 13.
+
+use std::collections::HashMap;
+
+use crate::baselines::cutlass::Cutlass;
+use crate::baselines::dietcode::DietCode;
+use crate::baselines::vendor::VendorLib;
+use crate::baselines::PlanEngine;
+use crate::compiler::{compile, CompileOpts};
+use crate::coordinator::{HwMode, Selector};
+use crate::cost::hybrid::AnalyzerConfig;
+use crate::hw::{presets, HwSpec};
+use crate::ir::{Contraction, DType, TensorProgram};
+use crate::profiler::SimProfiler;
+use crate::sim::Simulator;
+
+/// A hardware configuration under evaluation (Table 5 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Testbed {
+    Cpu,
+    GpuTensorCore,
+    GpuCudaCore,
+}
+
+impl Testbed {
+    pub fn all() -> [Testbed; 3] {
+        [Testbed::Cpu, Testbed::GpuTensorCore, Testbed::GpuCudaCore]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Testbed::Cpu => "CPU",
+            Testbed::GpuTensorCore => "GPU (Tensor Core Enabled)",
+            Testbed::GpuCudaCore => "GPU (Cuda Core Only)",
+        }
+    }
+
+    pub fn hw(&self) -> HwSpec {
+        match self {
+            Testbed::Cpu => presets::xeon_8255c(),
+            _ => presets::a100(),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Testbed::GpuTensorCore => DType::F16,
+            _ => DType::F32,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Testbed::Cpu => "avx512_f32",
+            Testbed::GpuTensorCore => "tensor_core_f16",
+            Testbed::GpuCudaCore => "cuda_core_f32",
+        }
+    }
+}
+
+/// A ready-to-time engine: shape -> (strategy, scheduling overhead secs).
+pub enum Engine {
+    Vortex { selector: Selector, mode: HwMode },
+    Baseline(Box<dyn PlanEngine>),
+}
+
+impl Engine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Vortex { .. } => "vortex",
+            Engine::Baseline(b) => b.name(),
+        }
+    }
+
+    /// Simulated end-to-end time for one op (execution + scheduling).
+    ///
+    /// Scheduling overhead is *modeled* (2 us — the paper's Fig. 14
+    /// scale on the A100 host), not the wall-clock of `select()` on
+    /// this machine: mixing this box's wall time into simulated A100
+    /// microseconds would double-count hardware differences. The real
+    /// wall-clock selection cost is reported separately by Fig. 14 and
+    /// the runtime_select bench.
+    pub fn time(&self, sim: &Simulator, c: Contraction) -> f64 {
+        const VORTEX_SCHED_OVERHEAD: f64 = 2e-6;
+        match self {
+            Engine::Vortex { selector, mode } => {
+                let sel = selector.select(c, *mode).expect("vortex select");
+                let k = selector.kernel(&sel);
+                let lib = &selector.libraries[sel.lib];
+                sim.execute(lib.dtype, &k.chain(sel.padded)) + VORTEX_SCHED_OVERHEAD
+            }
+            Engine::Baseline(b) => {
+                let chain = b.plan(c);
+                let dtype = if sim.hw.backends[chain.backend].dtype_bytes == 2 {
+                    DType::F16
+                } else {
+                    DType::F32
+                };
+                sim.execute(dtype, &chain) + b.dispatch_overhead()
+            }
+        }
+    }
+
+    pub fn time_program(&self, sim: &Simulator, p: &TensorProgram) -> f64 {
+        self.time(sim, p.contraction())
+    }
+}
+
+/// Build the Vortex engine for a testbed (offline compile, §5).
+pub fn vortex_engine(tb: Testbed, seed: u64) -> Engine {
+    let hw = tb.hw();
+    let cfg = AnalyzerConfig::default_for(&hw);
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+    let mut libs = Vec::new();
+    match tb {
+        Testbed::GpuTensorCore => {
+            // Adaptive across tensor + cuda cores (paper §6.2).
+            libs.push(
+                compile(&hw, DType::F16, &cfg, &mut prof, &CompileOpts::default())
+                    .library,
+            );
+            libs.push(
+                compile(&hw, DType::F32, &cfg, &mut prof, &CompileOpts::default())
+                    .library,
+            );
+        }
+        _ => libs.push(
+            compile(&hw, tb.dtype(), &cfg, &mut prof, &CompileOpts::default()).library,
+        ),
+    }
+    let mode = match tb {
+        // "Cuda Core Only" comparisons restrict Vortex too (Table 5).
+        Testbed::GpuCudaCore => HwMode::Only("cuda_core_f32"),
+        _ => HwMode::Adaptive,
+    };
+    Engine::Vortex { selector: Selector::new(hw, libs), mode }
+}
+
+/// Baselines applicable to a testbed + operator kind (Table 5 rows).
+pub fn baseline_engines(tb: Testbed, is_conv: bool, seed: u64) -> Vec<Engine> {
+    let hw = tb.hw();
+    match tb {
+        Testbed::Cpu => vec![
+            Engine::Baseline(Box::new(VendorLib::onednn(&hw))),
+            Engine::Baseline(Box::new(VendorLib::onnxruntime(&hw))),
+        ],
+        Testbed::GpuTensorCore => {
+            let b = tb.backend_name();
+            vec![
+                Engine::Baseline(Box::new(if is_conv {
+                    VendorLib::cudnn(&hw, b)
+                } else {
+                    VendorLib::cublas(&hw, b)
+                })),
+                Engine::Baseline(Box::new(Cutlass::new(&hw, b))),
+            ]
+        }
+        Testbed::GpuCudaCore => {
+            let b = tb.backend_name();
+            let mut v = vec![
+                Engine::Baseline(Box::new(if is_conv {
+                    VendorLib::cudnn(&hw, b)
+                } else {
+                    VendorLib::cublas(&hw, b)
+                })),
+                Engine::Baseline(Box::new(Cutlass::new(&hw, b))),
+            ];
+            // DietCode is GPU-CUDA-core only (paper §7.2), tuned on the
+            // suite's shape categories used as its sample list.
+            let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+            let samples = dietcode_default_samples(is_conv);
+            // 400 trials/sample ~ DietCode's evolutionary-search budget;
+            // its tuned in-sample kernels are then genuinely strong.
+            v.push(Engine::Baseline(Box::new(DietCode::tune(
+                &hw,
+                b,
+                &samples,
+                400,
+                &mut prof,
+                seed,
+            ))));
+            v
+        }
+    }
+}
+
+/// DietCode's sample list: representative shapes from the suite ranges
+/// (the paper uses Tables 3/4 parameters as its sample set).
+pub fn dietcode_default_samples(is_conv: bool) -> Vec<[usize; 3]> {
+    if is_conv {
+        // implicit-GEMM views of common conv shapes
+        vec![
+            [12544, 64, 147],
+            [3136, 128, 576],
+            [784, 256, 1152],
+            [196, 512, 2304],
+            [50176, 32, 27],
+        ]
+    } else {
+        vec![
+            [16, 768, 2304],
+            [64, 768, 2304],
+            [128, 768, 2304],
+            [256, 768, 2304],
+            [384, 3072, 768],
+            [1024, 1024, 1024],
+            [4096, 4096, 4096],
+            [35, 2560, 2560],
+            [5124, 700, 2048],
+            [100000, 32, 64],
+        ]
+    }
+}
+
+/// Aggregate speedups (Table 5 columns): % cases faster, average.
+#[derive(Debug, Clone, Default)]
+pub struct SpeedupAgg {
+    pub speedups: Vec<f64>,
+}
+
+impl SpeedupAgg {
+    pub fn push(&mut self, baseline_secs: f64, ours_secs: f64) {
+        self.speedups.push(baseline_secs / ours_secs);
+    }
+
+    pub fn pct_faster(&self) -> f64 {
+        if self.speedups.is_empty() {
+            return 0.0;
+        }
+        100.0 * self.speedups.iter().filter(|&&s| s > 1.0).count() as f64
+            / self.speedups.len() as f64
+    }
+
+    /// Geometric mean (robust to outliers; the paper reports averages —
+    /// we report both in the tables).
+    pub fn geomean(&self) -> f64 {
+        if self.speedups.is_empty() {
+            return 0.0;
+        }
+        (self.speedups.iter().map(|s| s.ln()).sum::<f64>()
+            / self.speedups.len() as f64)
+            .exp()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.speedups.is_empty() {
+            return 0.0;
+        }
+        self.speedups.iter().sum::<f64>() / self.speedups.len() as f64
+    }
+}
+
+/// Cache of compiled Vortex engines, keyed by testbed.
+pub struct EngineCache {
+    engines: HashMap<&'static str, Engine>,
+    pub seed: u64,
+}
+
+impl EngineCache {
+    pub fn new(seed: u64) -> EngineCache {
+        EngineCache { engines: HashMap::new(), seed }
+    }
+
+    pub fn vortex(&mut self, tb: Testbed) -> &Engine {
+        self.engines.entry(tb.label()).or_insert_with(|| vortex_engine(tb, self.seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vortex_beats_cutlass_on_skinny_gemm() {
+        // The canonical dynamic-shape win: tiny M on a big template.
+        let tb = Testbed::GpuCudaCore;
+        let sim = Simulator::new(tb.hw(), 9);
+        let vortex = vortex_engine(tb, 9);
+        let ct = Engine::Baseline(Box::new(Cutlass::new(&tb.hw(), "cuda_core_f32")));
+        let c = Contraction { m: 3, n: 2048, k: 768, dtype: DType::F32 };
+        let tv = vortex.time(&sim, c);
+        let tc = ct.time(&sim, c);
+        assert!(tv < tc, "vortex {} !< cutlass {}", tv, tc);
+    }
+
+    #[test]
+    fn engines_report_positive_times() {
+        let tb = Testbed::Cpu;
+        let sim = Simulator::new(tb.hw(), 9);
+        let vortex = vortex_engine(tb, 9);
+        for e in baseline_engines(tb, false, 9) {
+            let c = Contraction { m: 128, n: 768, k: 768, dtype: DType::F32 };
+            assert!(e.time(&sim, c) > 0.0, "{}", e.name());
+            assert!(vortex.time(&sim, c) > 0.0);
+        }
+    }
+
+    #[test]
+    fn aggregate_math() {
+        let mut agg = SpeedupAgg::default();
+        agg.push(2.0, 1.0); // 2x
+        agg.push(1.0, 2.0); // 0.5x
+        assert!((agg.geomean() - 1.0).abs() < 1e-12);
+        assert!((agg.pct_faster() - 50.0).abs() < 1e-12);
+        assert!((agg.mean() - 1.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,139 @@
+//! Benchmark workload suites (paper Tables 3 & 4): 1197 operator
+//! configurations spanning DeepBench, Transformer, CNN and GNN shape
+//! ranges, generated deterministically (log-uniform within each
+//! published range, matching the published case counts).
+
+use crate::ir::{DType, TensorProgram};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Case {
+    pub category: &'static str,
+    pub program: TensorProgram,
+}
+
+fn log_uniform(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    if lo >= hi {
+        return lo;
+    }
+    let (a, b) = ((lo as f64).ln(), (hi as f64).ln());
+    ((a + rng.f64() * (b - a)).exp().round() as usize).clamp(lo, hi)
+}
+
+/// Table 3: benchmarked GEMMs with dynamic shapes (506 cases).
+pub fn gemm_suite(dtype: DType, seed: u64) -> Vec<Case> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut gen = |cat: &'static str,
+                   n_cases: usize,
+                   m: (usize, usize),
+                   n: (usize, usize),
+                   k: (usize, usize),
+                   rng: &mut Rng| {
+        for _ in 0..n_cases {
+            out.push(Case {
+                category: cat,
+                program: TensorProgram::Gemm {
+                    m: log_uniform(rng, m.0, m.1),
+                    n: log_uniform(rng, n.0, n.1),
+                    k: log_uniform(rng, k.0, k.1),
+                    dtype,
+                },
+            });
+        }
+    };
+    gen("deepbench", 84, (35, 8448), (1, 6000), (128, 500_000), &mut rng);
+    gen("transformer", 192, (1, 476), (768, 4096), (768, 4096), &mut rng);
+    gen("cnn", 80, (1, 128), (80, 25088), (10, 4096), &mut rng);
+    gen("gnn", 150, (2708, 1_888_584), (2, 121), (8, 3703), &mut rng);
+    out
+}
+
+/// Table 4: benchmarked convolutions with dynamic shapes (691 cases).
+pub fn conv_suite(dtype: DType, seed: u64) -> Vec<Case> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut gen = |cat: &'static str,
+                   n_cases: usize,
+                   bs: (usize, usize),
+                   fmap: (usize, usize),
+                   filt: (usize, usize),
+                   cin: (usize, usize),
+                   cout: (usize, usize),
+                   rng: &mut Rng| {
+        for _ in 0..n_cases {
+            let kh = log_uniform(rng, filt.0, filt.1);
+            // feature map must admit the filter (valid conv)
+            let h = log_uniform(rng, fmap.0.max(kh), fmap.1.max(kh));
+            out.push(Case {
+                category: cat,
+                program: TensorProgram::Conv2d {
+                    n: log_uniform(rng, bs.0, bs.1),
+                    h,
+                    w: h,
+                    cin: log_uniform(rng, cin.0, cin.1),
+                    cout: log_uniform(rng, cout.0, cout.1),
+                    kh,
+                    kw: kh,
+                    dtype,
+                },
+            });
+        }
+    };
+    gen("deepbench", 107, (1, 16), (7, 700), (1, 20), (1, 2048), (16, 2048), &mut rng);
+    gen("cnn", 584, (1, 64), (4, 768), (1, 11), (3, 832), (16, 512), &mut rng);
+    out
+}
+
+/// Fig. 3 / Table 6 BERT GEMM-1 shape: M = batch x seq, N = 768, K = 2304.
+pub fn bert_gemm1(batch: usize, seq: usize, dtype: DType) -> TensorProgram {
+    TensorProgram::Gemm { m: batch * seq, n: 768, k: 2304, dtype }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_counts_match_paper() {
+        assert_eq!(gemm_suite(DType::F32, 1).len(), 506);
+        assert_eq!(conv_suite(DType::F32, 1).len(), 691);
+        // 506 + 691 = 1197 operator configurations (paper §7.1)
+    }
+
+    #[test]
+    fn shapes_respect_published_ranges() {
+        for c in gemm_suite(DType::F32, 2) {
+            if let TensorProgram::Gemm { m, n, k, .. } = c.program {
+                match c.category {
+                    "transformer" => {
+                        assert!((1..=476).contains(&m));
+                        assert!((768..=4096).contains(&n));
+                        assert!((768..=4096).contains(&k));
+                    }
+                    "gnn" => assert!((2..=121).contains(&n)),
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_fmaps_admit_filters() {
+        for c in conv_suite(DType::F32, 3) {
+            if let TensorProgram::Conv2d { h, kh, .. } = c.program {
+                assert!(h >= kh);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = gemm_suite(DType::F32, 42);
+        let b = gemm_suite(DType::F32, 42);
+        assert_eq!(
+            a.iter().map(|c| c.program.id()).collect::<Vec<_>>(),
+            b.iter().map(|c| c.program.id()).collect::<Vec<_>>()
+        );
+    }
+}

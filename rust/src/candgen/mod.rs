@@ -1,0 +1,311 @@
+//! Bottom-up hardware-aware candidate generation (paper §5.1, Algorithm 2).
+//!
+//! For each backend of a hardware target, generate micro-kernel tile
+//! candidates level by level:
+//!
+//! * **L0** — tiles are multiples of the backend's ISA granularity
+//!   (`FilterByISA`), with the working set inside the level-0 budget.
+//! * **L ≥ 1** — `FilterByMultiples`: the sieve over the previous layer's
+//!   candidates; every candidate is an elementwise integer multiple of at
+//!   least one child, working set inside the level's budget, and within
+//!   the utilization window (§2.3: extremely low/high usage is pruned).
+//!
+//! The cross-level `children` map (the paper's "mapping mechanism") is
+//! kept for the analyzer: each (parent, child) edge is one scheduling
+//! strategy to cost.
+//!
+//! Offline candidates cover levels 0..n-1; the top (grid/process) level
+//! is configured at runtime from the concrete shape (§6.2).
+
+use std::collections::HashMap;
+
+use crate::hw::HwSpec;
+use crate::ir::DType;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    pub level: usize,
+    /// Contraction-view tile (m, n, k).
+    pub tile: [usize; 3],
+    /// Index into `HwSpec::backends`.
+    pub backend: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CandidateSet {
+    /// levels[l] = candidates at hierarchy level l (0 and 1 offline).
+    pub levels: Vec<Vec<Candidate>>,
+    /// children[l][i] = indices into levels[l-1] compatible with
+    /// levels[l][i] (children[0] is empty).
+    pub children: Vec<Vec<Vec<usize>>>,
+}
+
+impl CandidateSet {
+    pub fn total(&self) -> usize {
+        self.levels.iter().map(|v| v.len()).sum()
+    }
+
+    /// Strategy chains at the top offline level: (parent, child) pairs.
+    pub fn chains(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let top = self.levels.len() - 1;
+        self.children[top]
+            .iter()
+            .enumerate()
+            .flat_map(|(p, kids)| kids.iter().map(move |&c| (p, c)))
+    }
+}
+
+/// Multiplier ladder used for tile enumeration: dense early, geometric
+/// later — mirrors how hand tuners explore tiles, keeps counts bounded.
+pub fn ladder(max: usize) -> Vec<usize> {
+    const BASE: [usize; 18] =
+        [1, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 48, 64, 96, 128, 192];
+    let mut v: Vec<usize> = BASE.iter().copied().take_while(|&x| x <= max).collect();
+    let mut x = 256;
+    while x <= max {
+        v.push(x);
+        x *= 2;
+    }
+    v
+}
+
+/// Generate candidates for one (hardware, dtype) pair. Backends whose
+/// element width does not match the dtype are skipped (the adaptive
+/// runtime generates one set per dtype and picks between them, §6.2).
+pub fn generate(hw: &HwSpec, dtype: DType) -> CandidateSet {
+    let n_offline = hw.n_levels() - 1;
+    let mut set = CandidateSet {
+        levels: vec![Vec::new(); n_offline],
+        children: vec![Vec::new(); n_offline],
+    };
+    for (bi, backend) in hw.backends.iter().enumerate() {
+        if backend.dtype_bytes != dtype.bytes() {
+            continue;
+        }
+        // ---- L0: InitCands + FilterByISA ---------------------------------
+        let cap0 = hw.level(0).capacity_bytes;
+        let [im, inn, ik] = backend.isa;
+        let mut l0: Vec<Candidate> = Vec::new();
+        for &mm in &ladder(64) {
+            for &nm in &ladder(64) {
+                for &km in &ladder(64) {
+                    let tile = [im * mm, inn * nm, ik * km];
+                    let ws = HwSpec::gemm_working_set(tile, backend.dtype_bytes);
+                    if ws > cap0 {
+                        continue;
+                    }
+                    l0.push(Candidate { level: 0, tile, backend: bi });
+                }
+            }
+        }
+        let l0_offset = set.levels[0].len();
+        set.levels[0].extend(l0.iter().copied());
+        set.children[0].extend(std::iter::repeat(Vec::new()).take(l0.len()));
+
+        // ---- L >= 1: FilterByMultiples (sieve) ----------------------------
+        let mut prev: Vec<(usize, Candidate)> =
+            l0.iter().enumerate().map(|(i, c)| (l0_offset + i, *c)).collect();
+        for level in 1..n_offline {
+            let cap = hw.level(level).capacity_bytes;
+            let min_ws = (cap as f64 * hw.min_util) as u64;
+            // tile -> contributing child indices (the paper's map table)
+            let mut table: HashMap<[usize; 3], Vec<usize>> = HashMap::new();
+            for &(child_idx, child) in &prev {
+                let [m0, n0, k0] = child.tile;
+                for &mm in &ladder(256) {
+                    let m = m0 * mm;
+                    for &nm in &ladder(256) {
+                        let n = n0 * nm;
+                        // threads-per-block analog: spatial child tiles
+                        // running concurrently inside one L1 unit.
+                        if level == 1 && mm * nm > hw.max_l0_per_l1 as usize {
+                            continue;
+                        }
+                        for &km in &ladder(64) {
+                            let k = k0 * km;
+                            let tile = [m, n, k];
+                            let ws = HwSpec::gemm_working_set(
+                                tile,
+                                hw.backends[child.backend].dtype_bytes,
+                            );
+                            if ws > cap {
+                                break; // km ladder is ascending
+                            }
+                            if ws < min_ws {
+                                continue;
+                            }
+                            table.entry(tile).or_default().push(child_idx);
+                        }
+                    }
+                }
+            }
+            let mut tiles: Vec<[usize; 3]> = table.keys().copied().collect();
+            tiles.sort();
+            let offset = set.levels[level].len();
+            let mut next_prev = Vec::with_capacity(tiles.len());
+            for tile in tiles {
+                let mut kids = table.remove(&tile).unwrap();
+                kids.sort_unstable();
+                kids.dedup();
+                let cand = Candidate { level, tile, backend: bi };
+                let idx = set.levels[level].len();
+                set.levels[level].push(cand);
+                set.children[level].push(kids);
+                next_prev.push((idx, cand));
+            }
+            let _ = offset;
+            prev = next_prev;
+        }
+    }
+    set
+}
+
+/// Check a single (parent, child) pair against the Algorithm-2
+/// constraints — used by tests and by the manifest cross-check.
+pub fn is_valid_pair(hw: &HwSpec, parent: &Candidate, child: &Candidate) -> bool {
+    if parent.backend != child.backend || parent.level != child.level + 1 {
+        return false;
+    }
+    let ok_mult = parent
+        .tile
+        .iter()
+        .zip(child.tile.iter())
+        .all(|(&p, &c)| c > 0 && p % c == 0);
+    let backend = &hw.backends[parent.backend];
+    let ws_p = HwSpec::gemm_working_set(parent.tile, backend.dtype_bytes);
+    let ws_c = HwSpec::gemm_working_set(child.tile, backend.dtype_bytes);
+    let isa_ok = child
+        .tile
+        .iter()
+        .zip(backend.isa.iter())
+        .all(|(&t, &g)| t % g == 0);
+    ok_mult
+        && isa_ok
+        && ws_p <= hw.level(parent.level).capacity_bytes
+        && ws_c <= hw.level(child.level).capacity_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+    use crate::util::prop::{forall, prop_assert};
+
+    #[test]
+    fn ladder_is_sorted_unique() {
+        let l = ladder(512);
+        assert!(l.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(l[0], 1);
+        assert!(l.contains(&512));
+    }
+
+    #[test]
+    fn l0_candidates_respect_isa_and_capacity() {
+        let hw = presets::a100();
+        let set = generate(&hw, DType::F16);
+        assert!(!set.levels[0].is_empty());
+        for c in &set.levels[0] {
+            let b = &hw.backends[c.backend];
+            assert_eq!(b.name, "tensor_core_f16");
+            for (t, g) in c.tile.iter().zip(b.isa.iter()) {
+                assert_eq!(t % g, 0, "ISA granularity violated: {:?}", c.tile);
+            }
+            assert!(
+                HwSpec::gemm_working_set(c.tile, b.dtype_bytes)
+                    <= hw.level(0).capacity_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn l1_candidates_are_multiples_of_some_child() {
+        let hw = presets::a100();
+        let set = generate(&hw, DType::F16);
+        assert!(!set.levels[1].is_empty());
+        for (i, c) in set.levels[1].iter().enumerate() {
+            let kids = &set.children[1][i];
+            assert!(!kids.is_empty(), "orphan L1 candidate {:?}", c.tile);
+            for &k in kids {
+                assert!(
+                    is_valid_pair(&hw, c, &set.levels[0][k]),
+                    "invalid pair {:?} -> {:?}",
+                    c.tile,
+                    set.levels[0][k].tile
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_window_prunes_tiny_l1_tiles() {
+        let hw = presets::a100();
+        let set = generate(&hw, DType::F16);
+        let min_ws = (hw.level(1).capacity_bytes as f64 * hw.min_util) as u64;
+        for c in &set.levels[1] {
+            let ws = HwSpec::gemm_working_set(c.tile, 2);
+            assert!(ws >= min_ws, "under-utilizing tile survived: {:?}", c.tile);
+        }
+    }
+
+    #[test]
+    fn candidate_counts_track_isa_granularity() {
+        // Paper §7.4: CPU >> GPU-CudaCore > GPU-TensorCore candidate counts
+        // (17731 vs 2332 vs 392) because finer ISA granularity => larger
+        // space. The same ordering must emerge here.
+        let cpu = generate(&presets::xeon_8255c(), DType::F32).total();
+        let gpu_cc = generate(&presets::a100(), DType::F32).total();
+        let gpu_tc = generate(&presets::a100(), DType::F16).total();
+        assert!(cpu > gpu_cc, "cpu {} !> gpu_cc {}", cpu, gpu_cc);
+        assert!(gpu_cc > gpu_tc, "gpu_cc {} !> gpu_tc {}", gpu_cc, gpu_tc);
+    }
+
+    #[test]
+    fn dtype_filters_backends() {
+        let set = generate(&presets::a100(), DType::F32);
+        let hw = presets::a100();
+        for level in &set.levels {
+            for c in level {
+                assert_eq!(hw.backends[c.backend].name, "cuda_core_f32");
+            }
+        }
+    }
+
+    #[test]
+    fn real_testbed_generates_manifest_like_tiles() {
+        let hw = presets::cpu_pjrt();
+        let set = generate(&hw, DType::F32);
+        // The checked-in python manifest's L1 blocks must be producible.
+        for want in [[64usize, 256, 512], [128, 512, 512], [128, 768, 768]] {
+            assert!(
+                set.levels[1].iter().any(|c| c.tile == want),
+                "manifest block {:?} not generated",
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn prop_children_divide_parents() {
+        let hw = presets::a100();
+        let set = generate(&hw, DType::F16);
+        forall(
+            "children-divide-parents",
+            200,
+            0xC0FFEE,
+            |r, _| {
+                let i = r.usize(0, set.levels[1].len() - 1);
+                let kids = &set.children[1][i];
+                let k = kids[r.usize(0, kids.len() - 1)];
+                (i, k)
+            },
+            |&(i, k)| {
+                let p = set.levels[1][i].tile;
+                let c = set.levels[0][k].tile;
+                prop_assert(
+                    p.iter().zip(c.iter()).all(|(&a, &b)| a % b == 0),
+                    format!("{:?} not multiple of {:?}", p, c),
+                )
+            },
+        );
+    }
+}

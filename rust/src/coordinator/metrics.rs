@@ -1,0 +1,135 @@
+//! Serving metrics: latency percentiles, throughput, overhead breakdown
+//! (feeds Fig. 14's scheduling-vs-execution split).
+
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// Per-request total latency, seconds.
+    lat: Vec<f64>,
+    /// Per-request scheduling (selection + batching) seconds.
+    sched: Vec<f64>,
+    /// Per-request kernel execution seconds.
+    exec: Vec<f64>,
+    /// FLOPs served.
+    pub flops: f64,
+    /// Wall-clock span of the run.
+    pub span_secs: f64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, latency: f64, sched: f64, exec: f64, flops: f64) {
+        self.lat.push(latency);
+        self.sched.push(sched);
+        self.exec.push(exec);
+        self.flops += flops;
+    }
+
+    pub fn count(&self) -> usize {
+        self.lat.len()
+    }
+
+    fn pct(sorted: &[f64], p: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        sorted[idx]
+    }
+
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let mut s = self.lat.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (Self::pct(&s, 0.5), Self::pct(&s, 0.95), Self::pct(&s, 0.99))
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        if self.lat.is_empty() {
+            0.0
+        } else {
+            self.lat.iter().sum::<f64>() / self.lat.len() as f64
+        }
+    }
+
+    /// Fraction of serving time spent scheduling (Fig. 14).
+    pub fn sched_fraction(&self) -> f64 {
+        let s: f64 = self.sched.iter().sum();
+        let e: f64 = self.exec.iter().sum();
+        if s + e == 0.0 {
+            0.0
+        } else {
+            s / (s + e)
+        }
+    }
+
+    pub fn total_sched_secs(&self) -> f64 {
+        self.sched.iter().sum()
+    }
+
+    pub fn total_exec_secs(&self) -> f64 {
+        self.exec.iter().sum()
+    }
+
+    /// Requests per second over the run span.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.span_secs <= 0.0 {
+            0.0
+        } else {
+            self.count() as f64 / self.span_secs
+        }
+    }
+
+    pub fn gflops_per_sec(&self) -> f64 {
+        if self.span_secs <= 0.0 {
+            0.0
+        } else {
+            self.flops / self.span_secs / 1e9
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let (p50, p95, p99) = self.latency_percentiles();
+        format!(
+            "n={} mean={:?} p50={:?} p95={:?} p99={:?} sched%={:.2} thpt={:.1} rps {:.2} GFLOP/s",
+            self.count(),
+            Duration::from_secs_f64(self.mean_latency()),
+            Duration::from_secs_f64(p50),
+            Duration::from_secs_f64(p95),
+            Duration::from_secs_f64(p99),
+            100.0 * self.sched_fraction(),
+            self.throughput_rps(),
+            self.gflops_per_sec(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::default();
+        for i in 1..=100 {
+            m.record(i as f64, 0.1, i as f64 - 0.1, 1e9);
+        }
+        let (p50, p95, p99) = m.latency_percentiles();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(m.count(), 100);
+    }
+
+    #[test]
+    fn sched_fraction_sane() {
+        let mut m = Metrics::default();
+        m.record(1.0, 0.25, 0.75, 0.0);
+        assert!((m.sched_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_do_not_panic() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_latency(), 0.0);
+        assert_eq!(m.throughput_rps(), 0.0);
+        let _ = m.summary();
+    }
+}

@@ -1,0 +1,15 @@
+//! Runtime stage (paper §6.2, Fig. 6 right): shape → micro-kernel
+//! selection, kernel construction (grid + padding), adaptive backend
+//! choice, and the dynamic-shape serving loop.
+//!
+//! Everything here is sample-free: the only inputs are the offline
+//! [`crate::compiler::MicroKernelLibrary`] and the concrete runtime
+//! shape. Selection is a pure analytical pass over the compact kernel
+//! set (microseconds — Fig. 14's scheduling sliver).
+
+pub mod metrics;
+pub mod select;
+pub mod server;
+
+pub use select::{HwMode, Selection, Selector};
+pub use server::{Request, ServeOutcome, ServerConfig, ServingStats};

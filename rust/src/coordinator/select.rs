@@ -1,0 +1,330 @@
+//! Runtime micro-kernel selection + kernel construction (paper §6.2).
+//!
+//! Given the concrete (M, N, K) at request time, the selector evaluates
+//! every library kernel with the analytical model — the offline stage
+//! already folded empirical measurements into each kernel's `base_cost`
+//! — and picks the argmin of estimated end-to-end time, including
+//! padding waste (the padded problem is the top tile of the chain) and
+//! per-launch overhead. Grid configuration falls out of the chosen tile
+//! (`ceil(M/bm) x ceil(N/bn)` blocks, `ceil(K/bk)` reduction steps).
+
+use std::time::Instant;
+
+use crate::compiler::{MicroKernel, MicroKernelLibrary};
+use crate::cost;
+use crate::hw::HwSpec;
+use crate::ir::{ceil_div, round_up, Contraction};
+
+/// Backend restriction (paper Fig. 16 modes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HwMode {
+    /// Consider every library (the paper's default "Adaptive").
+    Adaptive,
+    /// Only libraries whose backend name matches.
+    Only(&'static str),
+}
+
+/// The constructed kernel for one request.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// Index of the owning library in the selector.
+    pub lib: usize,
+    /// Index of the micro-kernel within that library.
+    pub kernel: usize,
+    /// Problem shape padded up to L1-tile multiples.
+    pub padded: [usize; 3],
+    /// Launch grid: (M blocks, N blocks, K reduction steps).
+    pub grid: [usize; 3],
+    /// Analytical end-to-end estimate, seconds.
+    pub est_secs: f64,
+    /// Wall-clock spent selecting (Fig. 14 "scheduling" component).
+    pub select_secs: f64,
+}
+
+/// Precomputed per-kernel constants for the allocation-free selection
+/// hot path (§Perf: one `FastKernel` evaluation is ~25 ns, so scanning
+/// a few hundred kernels stays well under the smallest kernel time).
+#[derive(Debug, Clone)]
+struct FastKernel {
+    lib: usize,
+    kernel: usize,
+    l1: [usize; 3],
+    base_cost: f64,
+    /// dtype bytes of the library (load-slab coefficient).
+    elem_bytes: f64,
+    /// 1 / (top-level bandwidth in B/s).
+    inv_bw: f64,
+    /// level-1 unit count (parallel units the spatial grid maps onto).
+    units: usize,
+    /// launch overhead already scaled by the backend's launch factor.
+    launch: f64,
+    /// true when one executable call per (M, N) block is dispatched
+    /// (the real PJRT constructor).
+    per_block_launch: bool,
+}
+
+impl FastKernel {
+    /// Eq. 2–4 at the top (grid) level, specialized and allocation-free.
+    #[inline]
+    fn estimate(&self, c: Contraction) -> (f64, [usize; 3], [usize; 3]) {
+        let grid = [
+            ceil_div(c.m, self.l1[0]),
+            ceil_div(c.n, self.l1[1]),
+            ceil_div(c.k, self.l1[2]),
+        ];
+        let padded =
+            [grid[0] * self.l1[0], grid[1] * self.l1[1], grid[2] * self.l1[2]];
+        // Eq. 2 at the grid level: load the A/B slabs of one reduction
+        // step, pipelined against the block subchain.
+        let t_load = (padded[0] * self.l1[2] + self.l1[2] * padded[1]) as f64
+            * self.elem_bytes
+            * self.inv_bw;
+        let t_store = (padded[0] * padded[1]) as f64 * 4.0 * self.inv_bw;
+        let n_t = grid[2] as f64;
+        let t_temporal = t_load
+            + (n_t - 1.0) * t_load.max(self.base_cost)
+            + self.base_cost
+            + t_store;
+        // Eq. 3.
+        let f_parallel = ceil_div(grid[0] * grid[1], self.units) as f64;
+        let launches =
+            if self.per_block_launch { (grid[0] * grid[1]) as f64 } else { 1.0 };
+        (f_parallel * t_temporal + self.launch * launches, padded, grid)
+    }
+}
+
+/// The runtime selector: one or more libraries (one per backend/dtype)
+/// over a single hardware target.
+pub struct Selector {
+    pub hw: HwSpec,
+    pub libraries: Vec<MicroKernelLibrary>,
+    /// Added per grid-block launch (measured on the real testbed;
+    /// simulator value on the paper testbeds).
+    pub launch_overhead: f64,
+    /// Flattened fast-path table over all libraries.
+    fast: Vec<FastKernel>,
+}
+
+impl Selector {
+    pub fn new(hw: HwSpec, libraries: Vec<MicroKernelLibrary>) -> Selector {
+        let launch_overhead = match hw.name {
+            "a100" => 4e-6,
+            "xeon_8255c" => 1e-6,
+            _ => 30e-6,
+        };
+        let per_block_launch = hw.name == "cpu_pjrt";
+        let top_bw = hw.levels.last().unwrap().load_bw_gbps * 1e9;
+        let units = hw.level(hw.n_levels() - 2).unit_count as usize;
+        let mut fast = Vec::new();
+        for (li, lib) in libraries.iter().enumerate() {
+            for (ki, k) in lib.kernels.iter().enumerate() {
+                fast.push(FastKernel {
+                    lib: li,
+                    kernel: ki,
+                    l1: k.l1,
+                    base_cost: k.base_cost,
+                    elem_bytes: lib.dtype.bytes() as f64,
+                    inv_bw: 1.0 / top_bw,
+                    units,
+                    launch: launch_overhead * hw.backends[k.backend].launch_factor,
+                    per_block_launch,
+                });
+            }
+        }
+        Selector { hw, libraries, launch_overhead, fast }
+    }
+
+    /// Estimated end-to-end seconds for one kernel on one problem.
+    pub fn estimate(&self, lib_idx: usize, k: &MicroKernel, c: Contraction) -> (f64, [usize; 3], [usize; 3]) {
+        let lib = &self.libraries[lib_idx];
+        let padded = [
+            round_up(c.m, k.l1[0]),
+            round_up(c.n, k.l1[1]),
+            round_up(c.k, k.l1[2]),
+        ];
+        let grid = [
+            ceil_div(c.m, k.l1[0]),
+            ceil_div(c.n, k.l1[1]),
+            ceil_div(c.k, k.l1[2]),
+        ];
+        let chain = k.chain(padded);
+        // On GPU/CPU targets one launch covers the whole grid; on the
+        // real PJRT path the constructor dispatches one executable call
+        // per (M, N) block, so the overhead scales with the grid.
+        let launches = if self.hw.name == "cpu_pjrt" {
+            (grid[0] * grid[1]) as f64
+        } else {
+            1.0
+        };
+        let lf = self.hw.backends[k.backend].launch_factor;
+        let secs = cost::cost_from(&self.hw, lib.dtype, &chain, 2, k.base_cost)
+            .total_secs
+            + self.launch_overhead * lf * launches;
+        (secs, padded, grid)
+    }
+
+    /// Select the best micro-kernel for a runtime shape (§6.2) via the
+    /// precomputed fast path (no allocation in the scan loop).
+    pub fn select(&self, c: Contraction, mode: HwMode) -> Option<Selection> {
+        let t0 = Instant::now();
+        let mut best: Option<(f64, &FastKernel, [usize; 3], [usize; 3])> = None;
+        match mode {
+            HwMode::Adaptive => {
+                for fk in &self.fast {
+                    let (secs, padded, grid) = fk.estimate(c);
+                    if best.as_ref().map(|b| secs < b.0).unwrap_or(true) {
+                        best = Some((secs, fk, padded, grid));
+                    }
+                }
+            }
+            HwMode::Only(name) => {
+                for fk in &self.fast {
+                    let k = &self.libraries[fk.lib].kernels[fk.kernel];
+                    if self.hw.backends[k.backend].name != name {
+                        continue;
+                    }
+                    let (secs, padded, grid) = fk.estimate(c);
+                    if best.as_ref().map(|b| secs < b.0).unwrap_or(true) {
+                        best = Some((secs, fk, padded, grid));
+                    }
+                }
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        best.map(|(secs, fk, padded, grid)| Selection {
+            lib: fk.lib,
+            kernel: fk.kernel,
+            padded,
+            grid,
+            est_secs: secs,
+            select_secs: dt,
+        })
+    }
+
+    pub fn kernel(&self, sel: &Selection) -> &MicroKernel {
+        &self.libraries[sel.lib].kernels[sel.kernel]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::cost::hybrid::AnalyzerConfig;
+    use crate::hw::presets;
+    use crate::ir::DType;
+    use crate::profiler::SimProfiler;
+    use crate::sim::Simulator;
+    use crate::util::prop::{forall, prop_assert};
+
+    fn selector_a100() -> Selector {
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let f32lib =
+            compile(&hw, DType::F32, &cfg, &mut prof, &CompileOpts::default()).library;
+        let f16lib =
+            compile(&hw, DType::F16, &cfg, &mut prof, &CompileOpts::default()).library;
+        Selector::new(hw, vec![f32lib, f16lib])
+    }
+
+    fn gemm(m: usize, n: usize, k: usize) -> Contraction {
+        Contraction { m, n, k, dtype: DType::F32 }
+    }
+
+    #[test]
+    fn selects_for_arbitrary_shapes() {
+        let s = selector_a100();
+        for &(m, n, k) in &[(1, 768, 768), (77, 3072, 768), (4096, 4096, 4096), (5, 5, 5)] {
+            let sel = s.select(gemm(m, n, k), HwMode::Adaptive).unwrap();
+            // Padding invariants: padded >= shape, exact tile multiples.
+            let kern = s.kernel(&sel);
+            assert!(sel.padded[0] >= m && sel.padded[1] >= n && sel.padded[2] >= k);
+            for d in 0..3 {
+                assert_eq!(sel.padded[d] % kern.l1[d], 0);
+                assert_eq!(sel.grid[d], sel.padded[d] / kern.l1[d]);
+            }
+            assert!(sel.est_secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn adaptive_beats_or_matches_fixed_modes() {
+        // Fig. 16: the adaptive mode's estimate is min over backends.
+        let s = selector_a100();
+        for &m in &[1usize, 2, 4, 8, 16] {
+            let c = gemm(m, 2048, 1024);
+            let ad = s.select(c, HwMode::Adaptive).unwrap().est_secs;
+            let cc = s.select(c, HwMode::Only("cuda_core_f32")).unwrap().est_secs;
+            let tc = s.select(c, HwMode::Only("tensor_core_f16")).unwrap().est_secs;
+            assert!(ad <= cc + 1e-12 && ad <= tc + 1e-12);
+        }
+    }
+
+    #[test]
+    fn skinny_shapes_pick_small_m_tiles() {
+        let s = selector_a100();
+        let sel = s.select(gemm(2, 4096, 1024), HwMode::Adaptive).unwrap();
+        let kern = s.kernel(&sel);
+        assert!(
+            kern.l1[0] <= 32,
+            "M=2 should not pick a tall tile, got {:?}",
+            kern.l1
+        );
+    }
+
+    #[test]
+    fn selection_is_fast() {
+        let s = selector_a100();
+        let sel = s.select(gemm(384, 768, 2304), HwMode::Adaptive).unwrap();
+        assert!(
+            sel.select_secs < 2e-3,
+            "selection too slow: {}s over {} kernels",
+            sel.select_secs,
+            s.libraries.iter().map(|l| l.kernels.len()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn fast_path_matches_reference_estimate() {
+        // The allocation-free FastKernel::estimate must agree with the
+        // reference cost_from-based Selector::estimate exactly.
+        let s = selector_a100();
+        for &(m, n, k) in &[(1usize, 768usize, 768usize), (77, 2304, 768), (4096, 4096, 4096)] {
+            let c = gemm(m, n, k);
+            let sel = s.select(c, HwMode::Adaptive).unwrap();
+            let kern = s.kernel(&sel);
+            let (ref_secs, ref_padded, ref_grid) = s.estimate(sel.lib, kern, c);
+            assert!((ref_secs - sel.est_secs).abs() < 1e-12 * ref_secs.max(1e-30));
+            assert_eq!(ref_padded, sel.padded);
+            assert_eq!(ref_grid, sel.grid);
+        }
+    }
+
+    #[test]
+    fn prop_padding_waste_bounded_by_one_tile() {
+        let s = selector_a100();
+        forall(
+            "padding-bounded",
+            60,
+            0xBEEF,
+            |r, size| {
+                (
+                    r.usize(1, 64 * size.max(1)),
+                    r.usize(1, 4096),
+                    r.usize(1, 4096),
+                )
+            },
+            |&(m, n, k)| {
+                let sel = s.select(gemm(m, n, k), HwMode::Adaptive).unwrap();
+                let kern = s.kernel(&sel);
+                prop_assert(
+                    sel.padded[0] - m < kern.l1[0]
+                        && sel.padded[1] - n < kern.l1[1]
+                        && sel.padded[2] - k < kern.l1[2],
+                    format!("padding exceeds a tile: {:?} for {:?}", sel.padded, (m, n, k)),
+                )
+            },
+        );
+    }
+}

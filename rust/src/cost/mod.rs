@@ -1,0 +1,248 @@
+//! Analytical cost model (paper §5.2, Eqs. 2–4) and the hybrid
+//! analytical–empirical analyzer.
+//!
+//! A *strategy* is a chain of tiles, one per hierarchy level, innermost
+//! first: `[t0, t1, tN]` where `tN` is the (padded) problem shape. The
+//! model recurses bottom-up:
+//!
+//! ```text
+//! T_temporal(L) = T_load + (|TemporalLoop|-1) * max(T_load, Cost_{L-1})
+//!                 + Cost_{L-1} + T_store                       (Eq. 2)
+//! F_parallel(L) = ceil(|ParallelLoop| / |HardwareUnit(L)|)     (Eq. 3)
+//! Cost(L)       = F_parallel(L) * T_temporal(L)                (Eq. 4)
+//! ```
+//!
+//! At level 0 the recursion bottoms out in the ISA instruction stream
+//! (MMA / FMA / pallas dot), costed from the backend's per-unit peak.
+//! The double-buffered pipeline shape of Eq. 2 (next load overlapping
+//! current compute) is exactly what the `max()` expresses.
+
+pub mod hybrid;
+
+use crate::hw::{Backend, HwSpec};
+use crate::ir::{ceil_div, DType};
+
+/// A full strategy chain: `tiles[l]` is the (m, n, k) tile at level l;
+/// `tiles[last]` is the padded problem shape. All levels use `backend`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Strategy {
+    pub tiles: Vec<[usize; 3]>,
+    pub backend: usize,
+}
+
+impl Strategy {
+    pub fn new(tiles: Vec<[usize; 3]>, backend: usize) -> Strategy {
+        Strategy { tiles, backend }
+    }
+
+    /// Integer-multiple nesting sanity check (levels need not divide the
+    /// top problem shape — the constructor pads there — but offline
+    /// levels must nest exactly).
+    pub fn is_nested(&self) -> bool {
+        self.tiles.windows(2).all(|w| {
+            w[0].iter().zip(w[1].iter()).all(|(&c, &p)| c > 0 && p % c == 0)
+        })
+    }
+}
+
+/// Cost model output, seconds. `per_level_secs[l]` is Cost(L) of the
+/// recursion truncated at level l (used by Fig. 14's breakdown).
+#[derive(Debug, Clone)]
+pub struct CostReport {
+    pub total_secs: f64,
+    pub per_level_secs: Vec<f64>,
+}
+
+/// Level-0 compute cost: the tile's FLOPs at the backend's per-L0-unit
+/// peak, padded up to ISA granularity (MMA-shape padding, §6.2).
+pub fn l0_compute_secs(hw: &HwSpec, backend: &Backend, tile: [usize; 3]) -> f64 {
+    let padded: f64 = tile
+        .iter()
+        .zip(backend.isa.iter())
+        .map(|(&t, &g)| (ceil_div(t.max(1), g) * g) as f64)
+        .product();
+    let flops = 2.0 * padded;
+    flops / (backend.peak_per_l0_unit(hw) * 1e9)
+}
+
+/// Bytes loaded per reduction step at a level: the A and B slabs of the
+/// child-k extent across the parent's spatial extent.
+fn load_bytes_per_step(parent: [usize; 3], child_k: usize, dtype: DType) -> f64 {
+    let [m, n, _] = parent;
+    ((m * child_k + child_k * n) * dtype.bytes()) as f64
+}
+
+/// Store bytes at a level: the C tile written back once (f32 acc).
+fn store_bytes(parent: [usize; 3]) -> f64 {
+    (parent[0] * parent[1] * 4) as f64
+}
+
+/// Evaluate Eqs. 2–4 for a strategy on a hardware target.
+///
+/// `l0_override`: measured level-0 cost from the empirical profiler —
+/// the hybrid analyzer passes `Some(secs)` for chains whose innermost
+/// tile has been profiled, replacing the analytical bottom (§5.2).
+pub fn cost(
+    hw: &HwSpec,
+    dtype: DType,
+    strat: &Strategy,
+    l0_override: Option<f64>,
+) -> CostReport {
+    debug_assert!(strat.is_nested(), "strategy tiles must nest: {:?}", strat);
+    let backend = &hw.backends[strat.backend];
+    let mut per_level = Vec::with_capacity(strat.tiles.len());
+
+    // Level 0: instruction stream, fragment loads pipelined with issue.
+    let cost_below = match l0_override {
+        Some(secs) => secs,
+        None => {
+            let t0 = strat.tiles[0];
+            let frag_bytes =
+                ((t0[0] * t0[2] + t0[2] * t0[1]) * dtype.bytes()) as f64;
+            let t_load = frag_bytes / (hw.level(0).load_bw_gbps * 1e9);
+            let compute = l0_compute_secs(hw, backend, t0);
+            compute.max(t_load)
+        }
+    };
+    per_level.push(cost_below);
+    let report = cost_from(hw, dtype, strat, 1, cost_below);
+    per_level.extend(report.per_level_secs);
+    CostReport { total_secs: report.total_secs.max(cost_below), per_level_secs: per_level }
+}
+
+/// Continue the Eq. 2–4 recursion from `start_level`, given the cost of
+/// the fully-nested subchain below it (`cost_below`). Used by the hybrid
+/// analyzer to splice empirically-measured subchain costs into the
+/// analytical upper levels (§5.2).
+pub fn cost_from(
+    hw: &HwSpec,
+    dtype: DType,
+    strat: &Strategy,
+    start_level: usize,
+    mut cost_below: f64,
+) -> CostReport {
+    let mut per_level = Vec::with_capacity(strat.tiles.len() - start_level);
+    for l in start_level..strat.tiles.len() {
+        let parent = strat.tiles[l];
+        let child = strat.tiles[l - 1];
+        // Contraction view: spatial child iterations are parallel over
+        // this level's child units; reduction iterations are temporal.
+        let spatial_iters =
+            ceil_div(parent[0], child[0]) * ceil_div(parent[1], child[1]);
+        let reduce_iters = ceil_div(parent[2], child[2]);
+        let units = hw.level(l - 1).unit_count as usize;
+
+        let bw = hw.level(l).load_bw_gbps * 1e9;
+        let t_load = load_bytes_per_step(parent, child[2], dtype) / bw;
+        let t_store = store_bytes(parent) / bw;
+
+        // Eq. 3: parallel amplification (spatial tiles over units).
+        let f_parallel = ceil_div(spatial_iters, units) as f64;
+
+        // Eq. 2 over the reduction (temporal) loop.
+        let n_t = reduce_iters.max(1) as f64;
+        let t_temporal =
+            t_load + (n_t - 1.0) * t_load.max(cost_below) + cost_below + t_store;
+
+        // Eq. 4.
+        cost_below = f_parallel * t_temporal;
+        per_level.push(cost_below);
+    }
+    CostReport { total_secs: cost_below, per_level_secs: per_level }
+}
+
+/// Simple whole-problem roofline: max(compute-bound, memory-bound).
+pub fn roofline_secs(hw: &HwSpec, backend: &Backend, c: crate::ir::Contraction) -> f64 {
+    let compute = c.flops() / (backend.peak_gflops * 1e9);
+    let top = hw.levels.last().unwrap();
+    let memory = c.min_bytes() / (top.load_bw_gbps * 1e9);
+    compute.max(memory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+    use crate::ir::Contraction;
+
+    fn a100_tc_strategy(problem: [usize; 3]) -> (HwSpec, Strategy) {
+        let hw = presets::a100();
+        let bi = hw.backend_idx("tensor_core_f16").unwrap();
+        (hw, Strategy::new(vec![[16, 8, 16], [64, 64, 32], problem], bi))
+    }
+
+    #[test]
+    fn nesting_check() {
+        let (_, s) = a100_tc_strategy([1024, 1024, 1024]);
+        assert!(s.is_nested());
+        let bad = Strategy::new(vec![[16, 8, 16], [60, 64, 32]], 0);
+        assert!(!bad.is_nested());
+    }
+
+    #[test]
+    fn cost_is_positive_and_monotonic_in_problem_size() {
+        let (hw, s1) = a100_tc_strategy([512, 512, 512]);
+        let (_, s2) = a100_tc_strategy([2048, 2048, 2048]);
+        let c1 = cost(&hw, DType::F16, &s1, None).total_secs;
+        let c2 = cost(&hw, DType::F16, &s2, None).total_secs;
+        assert!(c1 > 0.0);
+        assert!(c2 > 8.0 * c1, "64x flops should be >8x cost: {} vs {}", c1, c2);
+    }
+
+    #[test]
+    fn cost_never_beats_roofline_badly() {
+        // The model includes load/store overheads, so it must be at
+        // least ~half the roofline for a balanced large GEMM.
+        let (hw, s) = a100_tc_strategy([4096, 4096, 4096]);
+        let backend = &hw.backends[s.backend];
+        let rl = roofline_secs(
+            &hw,
+            backend,
+            Contraction { m: 4096, n: 4096, k: 4096, dtype: DType::F16 },
+        );
+        let c = cost(&hw, DType::F16, &s, None).total_secs;
+        assert!(c >= rl * 0.5, "model {} vs roofline {}", c, rl);
+    }
+
+    #[test]
+    fn l0_override_replaces_bottom() {
+        let (hw, s) = a100_tc_strategy([512, 512, 512]);
+        let base = cost(&hw, DType::F16, &s, None);
+        let forced = cost(&hw, DType::F16, &s, Some(base.per_level_secs[0] * 10.0));
+        assert!(forced.total_secs > base.total_secs);
+        assert_eq!(forced.per_level_secs[0], base.per_level_secs[0] * 10.0);
+    }
+
+    #[test]
+    fn parallel_amplification_quantizes() {
+        // 109 rows of CTA tiles on 108 SMs must cost ~2x of 108 (Eq. 3).
+        let hw = presets::a100();
+        let bi = hw.backend_idx("cuda_core_f32").unwrap();
+        let mk_strat = |grid_m: usize| {
+            Strategy::new(vec![[8, 8, 8], [64, 64, 64], [64 * grid_m, 64, 64]], bi)
+        };
+        let c108 = cost(&hw, DType::F32, &mk_strat(108), None).total_secs;
+        let c109 = cost(&hw, DType::F32, &mk_strat(109), None).total_secs;
+        assert!(c109 > 1.8 * c108, "{} vs {}", c108, c109);
+    }
+
+    #[test]
+    fn isa_padding_penalizes_misaligned_l0() {
+        let hw = presets::a100();
+        let tc = hw.backend("tensor_core_f16").unwrap();
+        let aligned = l0_compute_secs(&hw, tc, [16, 8, 16]);
+        let misaligned = l0_compute_secs(&hw, tc, [17, 9, 17]);
+        assert!(misaligned > 4.0 * aligned);
+    }
+
+    #[test]
+    fn per_level_costs_accumulate() {
+        let hw = presets::a100();
+        let bi = hw.backend_idx("tensor_core_f16").unwrap();
+        let s = Strategy::new(vec![[16, 8, 16], [128, 128, 32], [1024, 1024, 4096]], bi);
+        let c = cost(&hw, DType::F16, &s, None);
+        assert_eq!(c.per_level_secs.len(), 3);
+        assert!(c.per_level_secs[2] >= c.per_level_secs[1]);
+        assert_eq!(c.per_level_secs[2], c.total_secs);
+    }
+}

@@ -1,0 +1,177 @@
+//! Hardware hierarchy model (paper §2.3, Table 2).
+//!
+//! Every target — the paper's A100 GPU and Xeon 8255c CPU (simulated) and
+//! this machine's CPU-PJRT testbed (real) — is described by the same
+//! 3-level [`HwSpec`]: level 0 is the compute/register tier (Warp/ALU),
+//! level 1 the on-chip staging tier (SharedMem / CacheBuf / VMEM-analog),
+//! level 2 the device/global tier. Candidate generation (Algorithm 2),
+//! the analytical cost model (Eqs. 2–4) and the performance simulator all
+//! read hardware limits exclusively from these structs.
+
+pub mod presets;
+
+/// One tier of the memory/compute hierarchy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemLevel {
+    /// Display name ("reg", "smem", "global", ...).
+    pub name: &'static str,
+    /// Working-set budget for a candidate tile at this level, per unit,
+    /// in bytes (paper: "assessing memory usage against layer-specific
+    /// limits").
+    pub capacity_bytes: u64,
+    /// Per-unit bandwidth for loading from the level above, GB/s.
+    pub load_bw_gbps: f64,
+    /// Parallel execution units at this level, per unit of the level
+    /// above (warps per SM, SMs per device, cores per socket, ...).
+    pub unit_count: u32,
+}
+
+/// A compute backend reachable from level 0 (paper §6.2: CUDA cores vs
+/// Tensor cores; the runtime selects adaptively between them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Backend {
+    pub name: &'static str,
+    /// Whole-chip peak, GFLOP/s.
+    pub peak_gflops: f64,
+    /// ISA instruction granularity (FilterByISA, Algorithm 2): candidate
+    /// L0 tiles must be multiples of (m, n, k).
+    pub isa: [usize; 3],
+    /// Bytes per input element.
+    pub dtype_bytes: usize,
+    /// Multiplier on kernel-launch overhead for this backend (tensor-
+    /// core kernels pay extra fragment-fill/swizzle setup per launch —
+    /// the effect that lets CUDA cores win tiny-M GEMMs in Fig. 16).
+    pub launch_factor: f64,
+}
+
+impl Backend {
+    /// Peak GFLOP/s available to a single level-0 unit.
+    pub fn peak_per_l0_unit(&self, spec: &HwSpec) -> f64 {
+        let total_units: u64 = spec.levels.iter().map(|l| l.unit_count as u64).product();
+        self.peak_gflops / total_units as f64
+    }
+}
+
+/// A full hardware target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwSpec {
+    pub name: &'static str,
+    /// levels[0] = compute tier ... levels[last] = global tier. Always 3
+    /// tiers in this repo (paper §6.1: "for both CPU and GPU, we set the
+    /// hierarchy level to three").
+    pub levels: Vec<MemLevel>,
+    pub backends: Vec<Backend>,
+    /// Utilization window for candidate pruning (paper §2.3/Fig. 5):
+    /// candidates whose per-level working set falls below `min_util` of
+    /// capacity are wasteful; above 1.0 they spill. Expressed as a
+    /// fraction of `capacity_bytes`.
+    pub min_util: f64,
+    /// Max level-0 tiles that may execute concurrently inside one
+    /// level-1 unit (the paper's "1024 threads-per-block" constraint:
+    /// 32 warps/CTA on A100).
+    pub max_l0_per_l1: u32,
+}
+
+impl HwSpec {
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn level(&self, l: usize) -> &MemLevel {
+        &self.levels[l]
+    }
+
+    pub fn backend(&self, name: &str) -> Option<&Backend> {
+        self.backends.iter().find(|b| b.name == name)
+    }
+
+    pub fn backend_idx(&self, name: &str) -> Option<usize> {
+        self.backends.iter().position(|b| b.name == name)
+    }
+
+    /// Total parallel units at `level` across the whole chip
+    /// (e.g. warps: 4 * 108 on A100).
+    pub fn total_units_at(&self, level: usize) -> u64 {
+        self.levels[level..].iter().map(|l| l.unit_count as u64).product()
+    }
+
+    /// GEMM working-set bytes for a tile at a given level: the A slab,
+    /// B slab and C accumulator that must co-reside at that tier.
+    pub fn gemm_working_set(tile: [usize; 3], in_bytes: usize) -> u64 {
+        let [m, n, k] = tile;
+        // C accumulates in f32 regardless of input dtype.
+        (m * k * in_bytes + k * n * in_bytes + m * n * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+    use super::*;
+
+    #[test]
+    fn all_presets_have_three_levels() {
+        for spec in [presets::a100(), presets::xeon_8255c(), presets::cpu_pjrt()] {
+            assert_eq!(spec.n_levels(), 3, "{}", spec.name);
+            assert!(!spec.backends.is_empty());
+            for b in &spec.backends {
+                assert!(b.peak_gflops > 0.0);
+                assert!(b.isa.iter().all(|&g| g > 0));
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_increases_up_the_hierarchy() {
+        for spec in [presets::a100(), presets::xeon_8255c(), presets::cpu_pjrt()] {
+            for w in spec.levels.windows(2) {
+                assert!(
+                    w[0].capacity_bytes < w[1].capacity_bytes,
+                    "{}: {} !< {}",
+                    spec.name,
+                    w[0].name,
+                    w[1].name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_unit_bandwidth_is_positive_and_inner_tier_fastest() {
+        // levels[0].load_bw is per-L0-unit and must exceed the per-unit
+        // share of the staging tier; the top level holds the aggregate
+        // DRAM bandwidth used by the whole-problem roofline.
+        for spec in [presets::a100(), presets::xeon_8255c(), presets::cpu_pjrt()] {
+            assert!(spec.levels.iter().all(|l| l.load_bw_gbps > 0.0));
+            assert!(
+                spec.levels[0].load_bw_gbps >= spec.levels[1].load_bw_gbps,
+                "{}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn working_set_math() {
+        // 64x128x256 f32: A 64*256*4 + B 256*128*4 + C 64*128*4
+        let ws = HwSpec::gemm_working_set([64, 128, 256], 4);
+        assert_eq!(ws, (64 * 256 * 4 + 256 * 128 * 4 + 64 * 128 * 4) as u64);
+    }
+
+    #[test]
+    fn a100_tensor_core_is_faster_than_cuda_core() {
+        let a100 = presets::a100();
+        let cc = a100.backend("cuda_core_f32").unwrap();
+        let tc = a100.backend("tensor_core_f16").unwrap();
+        assert!(tc.peak_gflops > 10.0 * cc.peak_gflops);
+        assert_eq!(tc.isa, [16, 8, 16]); // mma.sync.m16n8k16
+    }
+
+    #[test]
+    fn total_units() {
+        let a100 = presets::a100();
+        assert_eq!(a100.total_units_at(2), 1);
+        assert_eq!(a100.total_units_at(1), 108);
+        assert_eq!(a100.total_units_at(0), 4 * 108);
+    }
+}

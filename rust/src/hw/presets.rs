@@ -1,0 +1,163 @@
+//! Hardware presets (paper Table 2 + this machine's real testbed).
+
+use super::{Backend, HwSpec, MemLevel};
+
+/// NVIDIA Ampere A100-40GB (paper Table 2).
+///
+/// Hierarchy mapping (paper Table 1): L0 = Warp/registers, L1 =
+/// CTA/shared memory, L2 = Grid/global memory.
+pub fn a100() -> HwSpec {
+    HwSpec {
+        name: "a100",
+        levels: vec![
+            MemLevel {
+                name: "reg",
+                // 256 KB register file per SM shared by 4 scheduler
+                // partitions x 8 co-resident warps at full occupancy: a
+                // warp-level candidate's A/B fragments + C accumulator
+                // must fit the per-warp share.
+                capacity_bytes: 256 * 1024 / 32,
+                load_bw_gbps: 4500.0, // shared->reg per warp-scheduler
+                unit_count: 4,        // warp schedulers per SM
+            },
+            MemLevel {
+                name: "smem",
+                capacity_bytes: 48 * 1024, // 48 KB/SM (Table 2)
+                load_bw_gbps: 14.4,        // 1555 GB/s global / 108 SMs
+                unit_count: 108,           // SMs
+            },
+            MemLevel {
+                name: "global",
+                capacity_bytes: 40 * 1024 * 1024 * 1024,
+                load_bw_gbps: 1555.0, // HBM2e aggregate (PCIe ingress unmodeled)
+                unit_count: 1,
+            },
+        ],
+        backends: vec![
+            Backend {
+                name: "cuda_core_f32",
+                peak_gflops: 19_500.0,
+                isa: [4, 4, 1], // FFMA with float4 vectorization granularity
+                dtype_bytes: 4,
+                launch_factor: 1.0,
+            },
+            Backend {
+                name: "tensor_core_f16",
+                peak_gflops: 312_000.0,
+                isa: [16, 8, 16], // mma.sync.aligned.m16n8k16
+                dtype_bytes: 2,
+                launch_factor: 3.0, // fragment fill + swizzle setup
+            },
+        ],
+        min_util: 0.25,
+        max_l0_per_l1: 32, // 1024 threads / 32-thread warps per CTA
+    }
+}
+
+/// Intel Xeon Platinum 8255C, 48 cores (paper Table 2).
+///
+/// Hierarchy mapping (paper Table 1): L0 = ALU/registers, L1 = thread
+/// with CacheBuf (per-core L2 budget), L2 = process/multi-core.
+pub fn xeon_8255c() -> HwSpec {
+    HwSpec {
+        name: "xeon_8255c",
+        levels: vec![
+            MemLevel {
+                name: "reg",
+                capacity_bytes: 2 * 1024, // 2 KB vector regs/core (Table 2)
+                load_bw_gbps: 400.0,      // L1/L2 -> reg per core
+                unit_count: 1,            // one vector pipe domain per core
+            },
+            MemLevel {
+                name: "cachebuf",
+                // paper §4.2: CacheBuffer sized within L2 limits (1 MB/core)
+                capacity_bytes: 1024 * 1024,
+                load_bw_gbps: 2.9, // ~140 GB/s DRAM / 48 cores
+                unit_count: 48,    // cores
+            },
+            MemLevel {
+                name: "global",
+                capacity_bytes: 250 * 1024 * 1024 * 1024,
+                load_bw_gbps: 140.0, // 6-channel DDR4-2933 aggregate
+                unit_count: 1,
+            },
+        ],
+        backends: vec![Backend {
+            name: "avx512_f32",
+            peak_gflops: 7_344.0,
+            isa: [1, 16, 1], // one ZMM of f32 lanes
+            dtype_bytes: 4,
+            launch_factor: 1.0,
+        }],
+        min_util: 0.25,
+        // L0 has no parallel binding on CPU (Table 1: "-"): register
+        // blocking inside a thread is serial, so no concurrency cap.
+        max_l0_per_l1: 4096,
+    }
+}
+
+/// The REAL testbed: this machine's single-core CPU PJRT client.
+///
+/// TPU-flavoured adaptation (DESIGN.md §3): the on-chip tier is a
+/// VMEM-analog working-set budget (sized so XLA CPU keeps tiles
+/// L2-resident), and the ISA granularity is the Pallas sublane/lane tile
+/// the micro-kernels are built on — (8, 128, 128) plays the role the MMA
+/// shape plays on the A100. Peak numbers are calibrated by
+//  `profiler::calibrate` and are intentionally conservative defaults.
+pub fn cpu_pjrt() -> HwSpec {
+    HwSpec {
+        name: "cpu_pjrt",
+        levels: vec![
+            MemLevel {
+                // dot tier: the working set one XLA-native dot (the MXU
+                // analog on this testbed) consumes — L2-cache resident.
+                // Block-sized inner tiles are the hardware-aware choice
+                // here (EXPERIMENTS.md §Perf: 17x over sub-tiling).
+                name: "reg",
+                capacity_bytes: 4 * 1024 * 1024,
+                load_bw_gbps: 40.0,
+                unit_count: 1,
+            },
+            MemLevel {
+                name: "vmem", // staging working-set budget (L3-resident)
+                capacity_bytes: 8 * 1024 * 1024,
+                load_bw_gbps: 12.0,
+                unit_count: 1,
+            },
+            MemLevel {
+                name: "dram",
+                capacity_bytes: 8 * 1024 * 1024 * 1024,
+                load_bw_gbps: 12.0, // single-channel DDR
+                unit_count: 1,
+            },
+        ],
+        backends: vec![
+            Backend {
+                name: "mxu_f32",
+                peak_gflops: 40.0,
+                isa: [8, 128, 128], // pallas sublane/lane/contraction tile
+                dtype_bytes: 4,
+                launch_factor: 1.0,
+            },
+            Backend {
+                name: "mxu_bf16",
+                peak_gflops: 60.0,
+                isa: [8, 128, 128],
+                dtype_bytes: 2,
+                launch_factor: 1.0,
+            },
+        ],
+        min_util: 0.01,
+        max_l0_per_l1: 4096, // single core: pallas grid steps are serial
+    }
+}
+
+/// All simulated paper testbeds (the real one is `cpu_pjrt`).
+pub fn by_name(name: &str) -> Option<HwSpec> {
+    match name {
+        "a100" | "sim-a100" => Some(a100()),
+        "xeon_8255c" | "sim-xeon" => Some(xeon_8255c()),
+        "cpu_pjrt" | "real" => Some(cpu_pjrt()),
+        _ => None,
+    }
+}

@@ -1,0 +1,394 @@
+//! Tensor-program IR and the `rKernel` unified abstraction (paper §4).
+//!
+//! A [`TensorProgram`] is the operator-level input (GEMM or Conv2d with
+//! some dimensions dynamic). Vortex canonicalizes every program to a
+//! *contraction view* — (M, N, K) with loop classes Parallel /
+//! TemporalSpatial / TemporalReduction — which is what the candidate
+//! generator, cost model and runtime constructor operate on. Conv maps
+//! via implicit GEMM (im2col), mirroring how the paper folds Conv's loop
+//! nest into the same recursion (§4.2, Table 1).
+//!
+//! [`RKernel`] is the top-down recursive notation of Fig. 10/Algorithm 1:
+//! per-level metadata (loop classes, analyzer kind, load/store/compute
+//! stage descriptors) that the bottom-up constructor instantiates with
+//! concrete tiles.
+
+use std::fmt;
+
+/// Element type of a tensor program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    Bf16,
+    F16,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::Bf16 | DType::F16 => 2,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::Bf16 => "bf16",
+            DType::F16 => "f16",
+        }
+    }
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "bf16" => Some(DType::Bf16),
+            "f16" => Some(DType::F16),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Loop classification (Algorithm 1: PL / TSL / TRL).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopKind {
+    /// Parallel loop set: distributed over hardware units at a level.
+    Parallel,
+    /// Temporal spatial: serial, non-reduction (output-tiling) loops.
+    TemporalSpatial,
+    /// Temporal reduction: serial accumulation loops.
+    TemporalReduction,
+}
+
+/// An operator-level tensor program with (possibly) dynamic dims.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum TensorProgram {
+    /// C[M,N] = A[M,K] @ B[K,N]
+    Gemm { m: usize, n: usize, k: usize, dtype: DType },
+    /// NHWC valid conv: x[N,H,W,Cin] * w[KH,KW,Cin,Cout], stride 1.
+    Conv2d {
+        n: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        dtype: DType,
+    },
+}
+
+/// The canonical contraction view all levels operate on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Contraction {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype: DType,
+}
+
+impl Contraction {
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Bytes touched once (A + B read, C written), ignoring re-reads.
+    pub fn min_bytes(&self) -> f64 {
+        let e = self.dtype.bytes() as f64;
+        (self.m * self.k) as f64 * e + (self.k * self.n) as f64 * e
+            + (self.m * self.n) as f64 * 4.0
+    }
+
+    pub fn dims(&self) -> [usize; 3] {
+        [self.m, self.n, self.k]
+    }
+}
+
+impl TensorProgram {
+    pub fn dtype(&self) -> DType {
+        match *self {
+            TensorProgram::Gemm { dtype, .. } => dtype,
+            TensorProgram::Conv2d { dtype, .. } => dtype,
+        }
+    }
+
+    /// Canonicalize to the contraction view (implicit GEMM for conv).
+    pub fn contraction(&self) -> Contraction {
+        match *self {
+            TensorProgram::Gemm { m, n, k, dtype } => Contraction { m, n, k, dtype },
+            TensorProgram::Conv2d { n, h, w, cin, cout, kh, kw, dtype } => {
+                let oh = h.saturating_sub(kh) + 1;
+                let ow = w.saturating_sub(kw) + 1;
+                Contraction {
+                    m: n * oh * ow,
+                    n: cout,
+                    k: kh * kw * cin,
+                    dtype,
+                }
+            }
+        }
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.contraction().flops()
+    }
+
+    /// Human-readable id used in logs and benchmark CSVs.
+    pub fn id(&self) -> String {
+        match *self {
+            TensorProgram::Gemm { m, n, k, dtype } => {
+                format!("gemm_m{}n{}k{}_{}", m, n, k, dtype)
+            }
+            TensorProgram::Conv2d { n, h, w, cin, cout, kh, kw, dtype } => format!(
+                "conv_n{}h{}w{}c{}f{}k{}x{}_{}",
+                n, h, w, cin, cout, kh, kw, dtype
+            ),
+        }
+    }
+
+    /// Loop classification at one hierarchy level (Algorithm 1 sets).
+    /// In the contraction view: M/N tiles are parallel at the top two
+    /// levels and temporal-spatial at L0; K is always temporal-reduction.
+    pub fn loop_kinds(&self, level: usize) -> [(char, LoopKind); 3] {
+        let spatial = if level == 0 {
+            LoopKind::TemporalSpatial
+        } else {
+            LoopKind::Parallel
+        };
+        [
+            ('m', spatial),
+            ('n', spatial),
+            ('k', LoopKind::TemporalReduction),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rKernel: the unified recursive abstraction (paper Fig. 10 / Algorithm 1)
+// ---------------------------------------------------------------------------
+
+/// Analyzer choice per level (paper Fig. 10 `ANALYZE_TYPE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnalyzeType {
+    Empirical,
+    Analytical,
+}
+
+/// Load/store stage descriptor (paper Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// e.g. GlobalMem -> SharedMem / CacheBuf / VMEM
+    Transfer { from: &'static str, to: &'static str },
+    /// '-' in Table 1.
+    NoOp,
+}
+
+/// Compute stage at level 0 (paper Table 1 "Lower Level rKernel" column
+/// bottoms out in an instruction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeStage {
+    /// Named ISA op: "mma.sync.m16n8k16", "avx512_fma", "pallas_dot".
+    Instruction(&'static str),
+    /// Recurse into the next level down.
+    LowerRKernel,
+}
+
+/// Per-level metadata of the recursive kernel template.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMeta {
+    pub layer_depth: usize,
+    /// (axis name, loop kind) — the map<axis, LOOP_TYPE> of Fig. 10.
+    pub loop_types: Vec<(char, LoopKind)>,
+    pub analyzer: AnalyzeType,
+    pub load: Stage,
+    pub store: Stage,
+    pub compute: ComputeStage,
+    /// Parallel binding name (Table 1): "warp", "cta", "grid", "thread",
+    /// "process", or "-".
+    pub binding: &'static str,
+}
+
+/// The full rKernel template for a (program, hardware) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RKernel {
+    pub hw_name: &'static str,
+    pub layers: Vec<LayerMeta>, // index = layer depth (0 = innermost)
+}
+
+impl RKernel {
+    /// Instantiate the paper's Table 1 for a hardware target.
+    /// `empirical_levels` selects the hybrid analyzer split (§5.2).
+    pub fn for_hw(hw: &crate::hw::HwSpec, empirical_levels: &[usize]) -> RKernel {
+        let an = |l: usize| {
+            if empirical_levels.contains(&l) {
+                AnalyzeType::Empirical
+            } else {
+                AnalyzeType::Analytical
+            }
+        };
+        let (bindings, instr): ([&'static str; 3], &'static str) = match hw.name {
+            "a100" => (["warp", "cta", "grid"], "mma.sync.m16n8k16"),
+            "xeon_8255c" => (["-", "thread", "process"], "avx512_fma"),
+            _ => (["-", "vmem_block", "grid"], "pallas_dot"),
+        };
+        let names: Vec<&'static str> = hw.levels.iter().map(|l| l.name).collect();
+        let layers = (0..hw.n_levels())
+            .map(|l| LayerMeta {
+                layer_depth: l,
+                loop_types: vec![
+                    (
+                        'm',
+                        if l == 0 {
+                            LoopKind::TemporalSpatial
+                        } else {
+                            LoopKind::Parallel
+                        },
+                    ),
+                    (
+                        'n',
+                        if l == 0 {
+                            LoopKind::TemporalSpatial
+                        } else {
+                            LoopKind::Parallel
+                        },
+                    ),
+                    ('k', LoopKind::TemporalReduction),
+                ],
+                analyzer: an(l),
+                load: if l + 1 < hw.n_levels() {
+                    Stage::Transfer { from: names[l + 1], to: names[l] }
+                } else {
+                    Stage::NoOp
+                },
+                store: if l + 1 < hw.n_levels() {
+                    Stage::Transfer { from: names[l], to: names[l + 1] }
+                } else {
+                    Stage::NoOp
+                },
+                compute: if l == 0 {
+                    ComputeStage::Instruction(instr)
+                } else {
+                    ComputeStage::LowerRKernel
+                },
+                binding: bindings[l],
+            })
+            .collect();
+        RKernel { hw_name: hw.name, layers }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shape algebra shared by the constructor and the baselines
+// ---------------------------------------------------------------------------
+
+/// Round `x` up to a multiple of `q` (q > 0).
+pub fn round_up(x: usize, q: usize) -> usize {
+    debug_assert!(q > 0);
+    x.div_ceil(q) * q
+}
+
+/// Ceil division.
+pub fn ceil_div(x: usize, q: usize) -> usize {
+    debug_assert!(q > 0);
+    x.div_ceil(q)
+}
+
+/// Fraction of padded work that is waste when `shape` is padded up to
+/// tile multiples: 1 - prod(shape) / prod(padded).
+pub fn padding_waste(shape: [usize; 3], tile: [usize; 3]) -> f64 {
+    let real: f64 = shape.iter().map(|&d| d as f64).product();
+    let padded: f64 = shape
+        .iter()
+        .zip(tile.iter())
+        .map(|(&d, &t)| round_up(d, t) as f64)
+        .product();
+    1.0 - real / padded
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn conv_maps_to_implicit_gemm() {
+        let c = TensorProgram::Conv2d {
+            n: 2,
+            h: 10,
+            w: 10,
+            cin: 4,
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            dtype: DType::F32,
+        }
+        .contraction();
+        assert_eq!(c.m, 2 * 8 * 8);
+        assert_eq!(c.n, 8);
+        assert_eq!(c.k, 3 * 3 * 4);
+    }
+
+    #[test]
+    fn gemm_flops() {
+        let p = TensorProgram::Gemm { m: 2, n: 3, k: 4, dtype: DType::F32 };
+        assert_eq!(p.flops(), 48.0);
+    }
+
+    #[test]
+    fn loop_kinds_match_table1() {
+        let p = TensorProgram::Gemm { m: 8, n: 8, k: 8, dtype: DType::F32 };
+        // L0: m/n temporal-spatial, k reduction (warp-level serial loops)
+        assert_eq!(p.loop_kinds(0)[0].1, LoopKind::TemporalSpatial);
+        assert_eq!(p.loop_kinds(0)[2].1, LoopKind::TemporalReduction);
+        // L1/L2: m/n parallel over units
+        assert_eq!(p.loop_kinds(1)[0].1, LoopKind::Parallel);
+        assert_eq!(p.loop_kinds(2)[1].1, LoopKind::Parallel);
+    }
+
+    #[test]
+    fn rkernel_table1_gpu_row() {
+        let rk = RKernel::for_hw(&presets::a100(), &[0, 1]);
+        assert_eq!(rk.layers.len(), 3);
+        assert_eq!(rk.layers[0].binding, "warp");
+        assert_eq!(rk.layers[1].binding, "cta");
+        assert_eq!(rk.layers[2].binding, "grid");
+        assert_eq!(
+            rk.layers[0].compute,
+            ComputeStage::Instruction("mma.sync.m16n8k16")
+        );
+        assert_eq!(rk.layers[2].compute, ComputeStage::LowerRKernel);
+        assert_eq!(rk.layers[2].load, Stage::NoOp); // Table 1: '-' at L2
+        assert_eq!(rk.layers[0].analyzer, AnalyzeType::Empirical);
+        assert_eq!(rk.layers[2].analyzer, AnalyzeType::Analytical);
+    }
+
+    #[test]
+    fn rkernel_cpu_default_is_empirical_l0_only() {
+        let rk = RKernel::for_hw(&presets::xeon_8255c(), &[0]);
+        assert_eq!(rk.layers[0].analyzer, AnalyzeType::Empirical);
+        assert_eq!(rk.layers[1].analyzer, AnalyzeType::Analytical);
+        assert_eq!(rk.layers[1].binding, "thread");
+        assert_eq!(rk.layers[2].binding, "process");
+    }
+
+    #[test]
+    fn shape_algebra() {
+        assert_eq!(round_up(5, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(ceil_div(9, 8), 2);
+        assert!((padding_waste([5, 8, 8], [8, 8, 8]) - (1.0 - 5.0 / 8.0)).abs() < 1e-12);
+        assert_eq!(padding_waste([8, 8, 8], [8, 8, 8]), 0.0);
+    }
+
+    #[test]
+    fn dtype_round_trip() {
+        for d in [DType::F32, DType::Bf16, DType::F16] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("f64"), None);
+    }
+}

@@ -1,0 +1,33 @@
+//! # Vortex — sample-free dynamic-shape tensor program optimization
+//!
+//! Reproduction of *"Vortex: Efficient Sample-Free Dynamic Tensor Program
+//! Optimization via Hardware-aware Strategy Space Hierarchization"*
+//! (cs.DC 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the Vortex compiler and runtime: hardware
+//!   hierarchy model ([`hw`]), `rKernel` IR ([`ir`]), bottom-up candidate
+//!   generation ([`candgen`]), analytical + hybrid cost analysis
+//!   ([`cost`]), offline library construction ([`compiler`]), runtime
+//!   shape→kernel selection and kernel construction ([`coordinator`]),
+//!   baselines ([`baselines`]), model-level workloads ([`models`]) and
+//!   the paper's benchmark harness ([`bench`]).
+//! * **Layer 2 (python/compile)** — jax graphs lowered AOT to HLO text.
+//! * **Layer 1 (python/compile/kernels)** — Pallas micro-kernels.
+//!
+//! Python never runs at serving time: [`runtime`] loads the AOT
+//! artifacts via the PJRT CPU client and the coordinator composes them
+//! over dynamic shapes.
+
+pub mod baselines;
+pub mod bench;
+pub mod candgen;
+pub mod compiler;
+pub mod coordinator;
+pub mod cost;
+pub mod hw;
+pub mod ir;
+pub mod models;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod util;

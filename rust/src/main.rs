@@ -1,0 +1,337 @@
+//! `vortex` — CLI for the Vortex reproduction.
+//!
+//! Subcommands:
+//!   compile   Run the offline stage for a testbed; print library stats.
+//!   select    Select a micro-kernel for one shape and explain it.
+//!   run       Execute a dynamic-shape GEMM on the REAL PJRT engine.
+//!   serve     Dynamic-batch serving loop over a synthetic trace.
+//!   bench     Regenerate a paper table/figure ("all" for everything).
+//!   info      Print hardware presets + rKernel mapping (Table 1).
+
+use std::path::{Path, PathBuf};
+
+use vortex::bench;
+use vortex::compiler::{compile, CompileOpts};
+use vortex::coordinator::{self, HwMode, Selector};
+use vortex::cost::hybrid::AnalyzerConfig;
+use vortex::hw::presets;
+use vortex::ir::{Contraction, DType, RKernel, TensorProgram};
+use vortex::profiler::SimProfiler;
+use vortex::runtime::{build_real_library, gemm_host_ref, RealEngine};
+use vortex::sim::Simulator;
+use vortex::util::cli::Args;
+use vortex::util::rng::Rng;
+use vortex::util::table::Table;
+
+const USAGE: &str = "\
+vortex — sample-free dynamic-shape tensor program optimization (reproduction)
+
+USAGE:
+  vortex compile  [--testbed sim-a100|sim-xeon|real] [--dtype f32|f16|bf16]
+                  [--analyzer default|analytical|e0|e1]
+                  [--dump-library PATH] [--emit-manifest PATH]
+  vortex select   --m M --n N --k K [--testbed ...] [--dtype ...] [--mode adaptive|cuda|tensor]
+  vortex run      --m M --n N --k K [--artifacts DIR] [--verify]
+  vortex serve    [--requests N] [--mean-gap-us U] [--max-batch B]
+  vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|all>
+                  [--out results/] [--seed S] [--full]
+  vortex info
+";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "compile" => cmd_compile(&args),
+        "select" => cmd_select(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "info" => cmd_info(),
+        _ => print!("{USAGE}"),
+    }
+}
+
+fn testbed_of(args: &Args) -> vortex::hw::HwSpec {
+    let name = args.get_or("testbed", "sim-a100");
+    presets::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown testbed {name}; using sim-a100");
+        presets::a100()
+    })
+}
+
+fn dtype_of(args: &Args, hw: &vortex::hw::HwSpec) -> DType {
+    match args.get("dtype") {
+        Some(d) => DType::parse(d).expect("bad --dtype"),
+        None => {
+            if hw.name == "a100" {
+                DType::F16
+            } else {
+                DType::F32
+            }
+        }
+    }
+}
+
+fn analyzer_of(args: &Args, hw: &vortex::hw::HwSpec) -> AnalyzerConfig {
+    match args.get_or("analyzer", "default") {
+        "analytical" => AnalyzerConfig::analytical_only(),
+        "e0" => AnalyzerConfig::empirical(0),
+        "e1" => AnalyzerConfig::empirical(1),
+        _ => AnalyzerConfig::default_for(hw),
+    }
+}
+
+fn cmd_compile(args: &Args) {
+    let hw = testbed_of(args);
+    let dtype = dtype_of(args, &hw);
+    let cfg = analyzer_of(args, &hw);
+    let seed = args.get_u64("seed", 7);
+    println!(
+        "offline compile: hw={} dtype={} analyzer={}",
+        hw.name,
+        dtype,
+        cfg.label()
+    );
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+    let r = compile(&hw, dtype, &cfg, &mut prof, &CompileOpts::default());
+    let mut t = Table::new("compile report", &["metric", "value"]);
+    t.row(vec!["candidates (Algorithm 2)".into(), r.candidates_total.to_string()]);
+    t.row(vec!["chains analyzed".into(), r.chains_analyzed.to_string()]);
+    t.row(vec!["profile queries".into(), r.profile_queries.to_string()]);
+    t.row(vec!["library kernels".into(), r.library.kernels.len().to_string()]);
+    t.row(vec![
+        "offline time (modeled on target)".into(),
+        vortex::util::table::fmt_secs(r.offline_secs),
+    ]);
+    t.row(vec![
+        "wall time here".into(),
+        vortex::util::table::fmt_secs(r.wall_secs),
+    ]);
+    t.print();
+    if let Some(path) = args.get("dump-library") {
+        std::fs::write(path, r.library.to_json().dump()).expect("write library");
+        println!("library written to {path}");
+    }
+    if let Some(path) = args.get("emit-manifest") {
+        // Regenerate the python micro-kernel manifest from this compile:
+        // the gemm_acc entries aot.py lowers for the REAL testbed. The
+        // inner tile equals the block (EXPERIMENTS.md §Perf L1).
+        use vortex::util::json::Json;
+        let entries: Vec<Json> = r
+            .library
+            .kernels
+            .iter()
+            .map(|k| {
+                Json::obj(vec![
+                    ("name", Json::str(k.artifact_name(dtype))),
+                    ("kind", Json::str("gemm_acc")),
+                    (
+                        "params",
+                        Json::obj(vec![
+                            ("bm", Json::num(k.l1[0] as f64)),
+                            ("bn", Json::num(k.l1[1] as f64)),
+                            ("bk", Json::num(k.l1[2] as f64)),
+                            ("tm", Json::num(k.l1[0] as f64)),
+                            ("tn", Json::num(k.l1[1] as f64)),
+                            ("tk", Json::num(k.l1[2] as f64)),
+                            ("in_dtype", Json::str(dtype.name())),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        let manifest = Json::obj(vec![
+            (
+                "comment",
+                Json::arr(vec![Json::str(
+                    "generated by `vortex compile --emit-manifest` — gemm_acc                      blocks only; merge softmax/conv/encoder entries by hand",
+                )]),
+            ),
+            ("entries", Json::arr(entries)),
+        ]);
+        std::fs::write(path, manifest.dump()).expect("write manifest");
+        println!("micro-kernel manifest written to {path}");
+    }
+}
+
+fn cmd_select(args: &Args) {
+    let hw = testbed_of(args);
+    let dtype = dtype_of(args, &hw);
+    let cfg = analyzer_of(args, &hw);
+    let seed = args.get_u64("seed", 7);
+    let c = Contraction {
+        m: args.get_usize("m", 128),
+        n: args.get_usize("n", 768),
+        k: args.get_usize("k", 768),
+        dtype,
+    };
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+    let mut libs =
+        vec![compile(&hw, dtype, &cfg, &mut prof, &CompileOpts::default()).library];
+    if hw.name == "a100" && dtype == DType::F16 {
+        libs.push(
+            compile(&hw, DType::F32, &cfg, &mut prof, &CompileOpts::default()).library,
+        );
+    }
+    let selector = Selector::new(hw.clone(), libs);
+    let mode = match args.get_or("mode", "adaptive") {
+        "cuda" => HwMode::Only("cuda_core_f32"),
+        "tensor" => HwMode::Only("tensor_core_f16"),
+        _ => HwMode::Adaptive,
+    };
+    let sel = selector.select(c, mode).expect("selection");
+    let k = selector.kernel(&sel);
+    let mut t = Table::new(
+        &format!("selection for GEMM m={} n={} k={} on {}", c.m, c.n, c.k, hw.name),
+        &["field", "value"],
+    );
+    t.row(vec!["backend".into(), hw.backends[k.backend].name.into()]);
+    t.row(vec!["L0 tile".into(), format!("{:?}", k.l0)]);
+    t.row(vec!["L1 tile".into(), format!("{:?}", k.l1)]);
+    t.row(vec!["padded problem".into(), format!("{:?}", sel.padded)]);
+    t.row(vec!["grid".into(), format!("{:?}", sel.grid)]);
+    t.row(vec!["estimated time".into(), vortex::util::table::fmt_secs(sel.est_secs)]);
+    t.row(vec![
+        "selection overhead".into(),
+        vortex::util::table::fmt_secs(sel.select_secs),
+    ]);
+    t.print();
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn cmd_run(args: &Args) {
+    let (m, n, k) = (
+        args.get_usize("m", 77),
+        args.get_usize("n", 768),
+        args.get_usize("k", 768),
+    );
+    let engine = RealEngine::load(&artifacts_dir(args)).expect("engine");
+    let hw = presets::cpu_pjrt();
+    println!("profiling micro-kernel blocks on the real engine...");
+    let lib = build_real_library(&engine, &hw, DType::F32, 2).expect("library");
+    let selector = Selector::new(hw, vec![lib]);
+    let c = Contraction { m, n, k, dtype: DType::F32 };
+    let sel = selector.select(c, HwMode::Adaptive).expect("selection");
+    let kern = selector.kernel(&sel);
+    println!(
+        "selected block {:?} (L0 {:?}), grid {:?}, padded {:?}",
+        kern.l1, kern.l0, sel.grid, sel.padded
+    );
+    let mut rng = Rng::new(42);
+    let a = rng.normal_f32_vec(m * k);
+    let b = rng.normal_f32_vec(k * n);
+    let t0 = std::time::Instant::now();
+    let out = engine
+        .gemm_dynamic(&a, &b, (m, n, k), kern.l1, DType::F32)
+        .expect("gemm");
+    let dt = t0.elapsed().as_secs_f64();
+    let gflops = 2.0 * m as f64 * n as f64 * k as f64 / dt / 1e9;
+    println!(
+        "real GEMM {}x{}x{} in {:.2} ms -> {:.2} GFLOP/s (select {:.1} us)",
+        m,
+        n,
+        k,
+        dt * 1e3,
+        gflops,
+        sel.select_secs * 1e6
+    );
+    if args.has_flag("verify") {
+        let want = gemm_host_ref(&a, &b, m, n, k);
+        let worst = out
+            .iter()
+            .zip(want.iter())
+            .map(|(g, w)| ((g - w).abs() / (1.0 + w.abs())) as f64)
+            .fold(0.0, f64::max);
+        println!(
+            "verification: worst rel err {:.2e} — {}",
+            worst,
+            if worst < 1e-3 { "OK" } else { "FAIL" }
+        );
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let n_req = args.get_usize("requests", 200);
+    let gap = args.get_f64("mean-gap-us", 500.0) * 1e-6;
+    let max_batch = args.get_usize("max-batch", 8);
+    let seed = args.get_u64("seed", 7);
+    let hw = presets::a100();
+    let cfg = AnalyzerConfig::default_for(&hw);
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+    let lib = compile(&hw, DType::F32, &cfg, &mut prof, &CompileOpts::default()).library;
+    let selector = Selector::new(hw.clone(), vec![lib]);
+    let trace = coordinator::server::gen_trace(n_req, gap, 1, 476, seed);
+    let mut engine = coordinator::server::SimEngine { sim: Simulator::new(hw, seed) };
+    let scfg = coordinator::ServerConfig { max_batch, ..Default::default() };
+    let stats = coordinator::server::serve_trace(&mut engine, &selector, &scfg, &trace);
+    println!(
+        "served {} requests in {} batches (mean batch {:.2})",
+        n_req,
+        stats.batches,
+        stats.mean_batch()
+    );
+    println!("{}", stats.metrics.summary());
+}
+
+fn cmd_bench(args: &Args) {
+    let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let out = PathBuf::from(args.get_or("out", "results"));
+    let seed = args.get_u64("seed", 7);
+    let fast = !args.has_flag("full");
+    let tables = bench::run(name, &out, seed, fast);
+    for t in tables {
+        println!();
+        t.print();
+    }
+    println!("\nCSV series written under {}/", out.display());
+}
+
+fn cmd_info() {
+    for hw in [presets::a100(), presets::xeon_8255c(), presets::cpu_pjrt()] {
+        let mut t = Table::new(
+            &format!("hardware preset: {}", hw.name),
+            &["level", "name", "capacity", "bw GB/s", "units", "binding", "analyzer"],
+        );
+        let rk = RKernel::for_hw(&hw, &[0, 1]);
+        for (i, l) in hw.levels.iter().enumerate() {
+            t.row(vec![
+                format!("L{}", i),
+                l.name.into(),
+                format!("{}", l.capacity_bytes),
+                format!("{}", l.load_bw_gbps),
+                l.unit_count.to_string(),
+                rk.layers[i].binding.into(),
+                format!("{:?}", rk.layers[i].analyzer),
+            ]);
+        }
+        t.print();
+        for b in &hw.backends {
+            println!(
+                "  backend {}: {} GFLOP/s peak, ISA {:?}, {}B elems",
+                b.name, b.peak_gflops, b.isa, b.dtype_bytes
+            );
+        }
+        println!();
+    }
+    let p = TensorProgram::Conv2d {
+        n: 8,
+        h: 56,
+        w: 56,
+        cin: 64,
+        cout: 128,
+        kh: 3,
+        kw: 3,
+        dtype: DType::F32,
+    };
+    println!(
+        "implicit-GEMM example: {} -> contraction {:?}",
+        p.id(),
+        p.contraction().dims()
+    );
+}

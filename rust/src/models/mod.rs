@@ -1,0 +1,221 @@
+//! Model-level workloads (paper §7.3, Fig. 13): per-model operator
+//! traces parameterized by the dynamic dimension (sequence length for
+//! language models, batch size for CNNs).
+//!
+//! Each trace is the list of [`TensorProgram`]s one forward pass
+//! executes; the benchmark harness runs a trace through any engine
+//! (Vortex selector or a baseline planner) and sums simulated — or
+//! real — per-op times.
+
+use crate::ir::{DType, TensorProgram};
+
+/// A named dynamic-shape model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Model {
+    Bert,
+    BertLarge,
+    Gpt2,
+    AlexNet,
+    ResNet50,
+    GoogleNet,
+}
+
+impl Model {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Model::Bert => "bert",
+            Model::BertLarge => "bert-large",
+            Model::Gpt2 => "gpt2",
+            Model::AlexNet => "alexnet",
+            Model::ResNet50 => "resnet50",
+            Model::GoogleNet => "googlenet",
+        }
+    }
+
+    pub fn is_language_model(&self) -> bool {
+        matches!(self, Model::Bert | Model::BertLarge | Model::Gpt2)
+    }
+
+    pub fn all() -> [Model; 6] {
+        [
+            Model::Bert,
+            Model::BertLarge,
+            Model::Gpt2,
+            Model::AlexNet,
+            Model::ResNet50,
+            Model::GoogleNet,
+        ]
+    }
+}
+
+fn gemm(m: usize, n: usize, k: usize, dtype: DType) -> TensorProgram {
+    TensorProgram::Gemm { m, n, k, dtype }
+}
+
+fn conv(
+    n: usize,
+    hw_: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    dtype: DType,
+) -> TensorProgram {
+    TensorProgram::Conv2d { n, h: hw_, w: hw_, cin, cout, kh: k, kw: k, dtype }
+}
+
+/// Transformer encoder/decoder stack trace. `m` = batch * seq rows.
+fn transformer_trace(
+    layers: usize,
+    d: usize,
+    ff: usize,
+    heads: usize,
+    seq: usize,
+    batch: usize,
+    dtype: DType,
+) -> Vec<TensorProgram> {
+    let m = batch * seq;
+    let hd = d / heads;
+    let mut ops = Vec::new();
+    for _ in 0..layers {
+        // Fused QKV projection (the paper's "first GEMM of Bert":
+        // M = batch x seq, K = d, N = 3d — reported there transposed).
+        ops.push(gemm(m, 3 * d, d, dtype));
+        // Attention scores + context, one batched GEMM per head group.
+        ops.push(gemm(batch * heads * seq, seq, hd, dtype));
+        ops.push(gemm(batch * heads * seq, hd, seq, dtype));
+        // Output projection + MLP.
+        ops.push(gemm(m, d, d, dtype));
+        ops.push(gemm(m, ff, d, dtype));
+        ops.push(gemm(m, d, ff, dtype));
+    }
+    ops
+}
+
+/// Operator trace of one forward pass. `dynamic` is the sequence length
+/// (language models, batch fixed at 1 as in Fig. 13) or the batch size
+/// (CNNs).
+pub fn trace(model: Model, dynamic: usize, dtype: DType) -> Vec<TensorProgram> {
+    match model {
+        Model::Bert => transformer_trace(12, 768, 3072, 12, dynamic, 1, dtype),
+        Model::BertLarge => transformer_trace(24, 1024, 4096, 16, dynamic, 1, dtype),
+        Model::Gpt2 => transformer_trace(12, 768, 3072, 12, dynamic, 1, dtype),
+        Model::AlexNet => {
+            let b = dynamic;
+            vec![
+                // (feature-map sizes after each stage, valid-conv view)
+                conv(b, 55, 3, 64, 11, dtype),
+                conv(b, 27, 64, 192, 5, dtype),
+                conv(b, 13, 192, 384, 3, dtype),
+                conv(b, 13, 384, 256, 3, dtype),
+                conv(b, 13, 256, 256, 3, dtype),
+                gemm(b, 4096, 9216, dtype),
+                gemm(b, 4096, 4096, dtype),
+                gemm(b, 1000, 4096, dtype),
+            ]
+        }
+        Model::ResNet50 => {
+            let b = dynamic;
+            let mut ops = vec![conv(b, 112, 3, 64, 7, dtype)];
+            // One representative bottleneck per stage x repeats.
+            for &(hw_, cin, cmid, reps) in
+                &[(56, 64, 64, 3), (28, 256, 128, 4), (14, 512, 256, 6), (7, 1024, 512, 3)]
+            {
+                for _ in 0..reps {
+                    ops.push(conv(b, hw_, cin, cmid, 1, dtype));
+                    ops.push(conv(b, hw_, cmid, cmid, 3, dtype));
+                    ops.push(conv(b, hw_, cmid, cmid * 4, 1, dtype));
+                }
+            }
+            ops.push(gemm(b, 1000, 2048, dtype));
+            ops
+        }
+        Model::GoogleNet => {
+            let b = dynamic;
+            let mut ops = vec![
+                conv(b, 112, 3, 64, 7, dtype),
+                conv(b, 56, 64, 192, 3, dtype),
+            ];
+            // Inception blocks: mixed 1x1 / 3x3 / 5x5 branches.
+            for &(hw_, cin) in &[(28usize, 192usize), (28, 256), (14, 480), (14, 512), (14, 528), (7, 832)]
+            {
+                ops.push(conv(b, hw_, cin, 64, 1, dtype));
+                ops.push(conv(b, hw_, cin, 96, 1, dtype));
+                ops.push(conv(b, hw_, 96, 128, 3, dtype));
+                ops.push(conv(b, hw_, cin, 16, 1, dtype));
+                ops.push(conv(b, hw_, 16, 32, 5, dtype));
+            }
+            ops.push(gemm(b, 1000, 1024, dtype));
+            ops
+        }
+    }
+}
+
+/// The paper's dynamic ranges: 17 sequence lengths in [1, 476] for LLMs;
+/// batch sizes 1, 4, 8, ..., 64 for CNNs (§7.1).
+pub fn dynamic_range(model: Model) -> Vec<usize> {
+    if model.is_language_model() {
+        let mut v: Vec<usize> = (0..17).map(|i| 1 + i * 475 / 16).collect();
+        v.dedup();
+        v
+    } else {
+        let mut v = vec![1];
+        v.extend((1..=16).map(|i| i * 4));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_nonempty_and_flops_scale_with_dynamic_dim() {
+        for m in Model::all() {
+            let small: f64 = trace(m, 4, DType::F32).iter().map(|p| p.flops()).sum();
+            let large: f64 = trace(m, 64, DType::F32).iter().map(|p| p.flops()).sum();
+            assert!(small > 0.0, "{:?}", m);
+            assert!(large > 2.0 * small, "{:?}: {} !> 2*{}", m, large, small);
+        }
+    }
+
+    #[test]
+    fn bert_trace_has_six_gemms_per_layer() {
+        let ops = trace(Model::Bert, 128, DType::F32);
+        assert_eq!(ops.len(), 12 * 6);
+        // QKV projection of layer 0.
+        assert_eq!(
+            ops[0],
+            TensorProgram::Gemm { m: 128, n: 2304, k: 768, dtype: DType::F32 }
+        );
+    }
+
+    #[test]
+    fn bert_large_is_bigger_than_bert() {
+        let b: f64 = trace(Model::Bert, 128, DType::F32).iter().map(|p| p.flops()).sum();
+        let bl: f64 =
+            trace(Model::BertLarge, 128, DType::F32).iter().map(|p| p.flops()).sum();
+        assert!(bl > 2.0 * b);
+    }
+
+    #[test]
+    fn cnn_traces_are_conv_dominated() {
+        for m in [Model::AlexNet, Model::ResNet50, Model::GoogleNet] {
+            let ops = trace(m, 8, DType::F32);
+            let convs = ops
+                .iter()
+                .filter(|p| matches!(p, TensorProgram::Conv2d { .. }))
+                .count();
+            assert!(convs * 2 > ops.len(), "{:?}", m);
+        }
+    }
+
+    #[test]
+    fn dynamic_ranges_match_paper() {
+        let seqs = dynamic_range(Model::Bert);
+        assert_eq!(seqs.first(), Some(&1));
+        assert_eq!(seqs.last(), Some(&476));
+        assert_eq!(seqs.len(), 17);
+        let batches = dynamic_range(Model::ResNet50);
+        assert_eq!(batches, vec![1, 4, 8, 12, 16, 20, 24, 28, 32, 36, 40, 44, 48, 52, 56, 60, 64]);
+    }
+}

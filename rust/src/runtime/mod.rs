@@ -1,0 +1,567 @@
+//! Real execution runtime: the PJRT side of the three-layer stack.
+//!
+//! Loads the AOT artifacts (`artifacts/*.hlo.txt` + `manifest.json`)
+//! produced once by `python/compile/aot.py`, compiles them on the PJRT
+//! CPU client (`xla` crate), and exposes the *kernel constructor*
+//! execution path: a dynamic-shape GEMM is served by padding to the
+//! selected micro-kernel's block, looping the launch grid, and chaining
+//! the `gemm_acc` block executable over K super-blocks — the runtime
+//! stage of the paper realized with real binaries. Python is never on
+//! this path.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax
+//! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ir::{ceil_div, DType};
+use crate::util::json::Json;
+
+/// Tensor I/O spec recorded by aot.py for every artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT artifact (a static-shape compiled computation).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub params: Json,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactEntry {
+    pub fn param_usize(&self, key: &str) -> Option<usize> {
+        self.params.get(key)?.as_usize()
+    }
+
+    /// (bm, bn, bk) for gemm-family artifacts.
+    pub fn block(&self) -> Option<[usize; 3]> {
+        Some([
+            self.param_usize("bm")?,
+            self.param_usize("bn")?,
+            self.param_usize("bk")?,
+        ])
+    }
+
+    pub fn in_dtype(&self) -> DType {
+        self.params
+            .get("in_dtype")
+            .and_then(|v| v.as_str())
+            .and_then(DType::parse)
+            .unwrap_or(DType::F32)
+    }
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn parse_io(v: &Json) -> Option<Vec<IoSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|io| {
+            Some(IoSpec {
+                shape: io
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Option<Vec<_>>>()?,
+                dtype: io.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {:?} (run `make artifacts`)", path))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {}", path.display(), e))?;
+        let entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| {
+                Some(ArtifactEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    kind: e.get("kind")?.as_str()?.to_string(),
+                    file: e.get("file")?.as_str()?.to_string(),
+                    params: e.get("params")?.clone(),
+                    inputs: parse_io(e.get("inputs")?)?,
+                    outputs: parse_io(e.get("outputs")?)?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("malformed manifest entry"))?;
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All gemm_acc blocks of a dtype, as (block, artifact name).
+    pub fn gemm_acc_blocks(&self, dtype: DType) -> Vec<([usize; 3], String)> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "gemm_acc" && e.in_dtype() == dtype)
+            .filter_map(|e| Some((e.block()?, e.name.clone())))
+            .collect()
+    }
+}
+
+/// The real engine: PJRT CPU client + lazily compiled executables.
+pub struct RealEngine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl RealEngine {
+    pub fn load(artifacts_dir: &Path) -> Result<RealEngine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(RealEngine { client, manifest, exes: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (once) and return the executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {} not in manifest", name))?;
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    /// Build a literal of `dtype` with the given dims from f32 host data.
+    fn literal(&self, data: &[f32], dims: &[i64], dtype: DType) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(data).reshape(dims)?;
+        match dtype {
+            DType::F32 => Ok(lit),
+            DType::Bf16 => Ok(lit.convert(xla::PrimitiveType::Bf16)?),
+            DType::F16 => Ok(lit.convert(xla::PrimitiveType::F16)?),
+        }
+    }
+
+    fn spec_dtype(spec: &IoSpec) -> DType {
+        match spec.dtype.as_str() {
+            "bfloat16" | "bf16" => DType::Bf16,
+            "float16" | "f16" => DType::F16,
+            _ => DType::F32,
+        }
+    }
+
+    /// Run a 1-output artifact on f32 host buffers; returns f32 data.
+    /// Inputs are converted to each declared input dtype.
+    pub fn run_raw(&self, name: &str, inputs: &[(&[f32], Vec<i64>)]) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {} not in manifest", name))?
+            .clone();
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                name,
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let lits = inputs
+            .iter()
+            .zip(entry.inputs.iter())
+            .map(|((data, dims), spec)| self.literal(data, dims, Self::spec_dtype(spec)))
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = if result.shape()?.is_tuple() {
+            result.to_tuple1()?
+        } else {
+            result
+        };
+        let out = match out.ty()? {
+            xla::ElementType::F32 => out,
+            _ => out.convert(xla::PrimitiveType::F32)?,
+        };
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Dynamic-shape GEMM via the kernel constructor: pad to the block,
+    /// loop the grid, chain `gemm_acc` over K super-blocks (paper §6.2).
+    ///
+    /// `a` is row-major (m x k), `b` is (k x n); returns row-major
+    /// (m x n) f32.
+    ///
+    /// §Perf fast path (f32): A/B blocks are uploaded to device buffers
+    /// once and reused across the grid (B blocks are hit `gm` times),
+    /// the accumulator stays device-resident across the K chain (the
+    /// untupled output buffer feeds the next call directly), and a
+    /// single shared zero buffer seeds every (M, N) block.
+    pub fn gemm_dynamic(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        (m, n, k): (usize, usize, usize),
+        block: [usize; 3],
+        dtype: DType,
+    ) -> Result<Vec<f32>> {
+        if dtype != DType::F32 {
+            return self.gemm_dynamic_literal(a, b, (m, n, k), block, dtype);
+        }
+        let [bm, bn, bk] = block;
+        let name = format!("gemm_acc_{}x{}x{}_{}", bm, bn, bk, dtype.name());
+        if self.manifest.find(&name).is_none() {
+            bail!("no artifact for block {:?} {}", block, dtype.name());
+        }
+        let exe = self.executable(&name)?;
+        let (gm, gn, gk) = (ceil_div(m, bm), ceil_div(n, bn), ceil_div(k, bk));
+
+        // Pre-upload B blocks: indexed [ki][ni], reused for every mi.
+        let mut b_blk = vec![0f32; bk * bn];
+        let mut b_bufs: Vec<Vec<xla::PjRtBuffer>> = Vec::with_capacity(gk);
+        for ki in 0..gk {
+            let k0 = ki * bk;
+            let kdep = bk.min(k - k0);
+            let mut row = Vec::with_capacity(gn);
+            for ni in 0..gn {
+                let n0 = ni * bn;
+                let ncols = bn.min(n - n0);
+                if kdep < bk || ncols < bn {
+                    b_blk.iter_mut().for_each(|x| *x = 0.0);
+                }
+                for r in 0..kdep {
+                    let src = (k0 + r) * n + n0;
+                    b_blk[r * bn..r * bn + ncols].copy_from_slice(&b[src..src + ncols]);
+                }
+                row.push(self.client.buffer_from_host_buffer(&b_blk, &[bk, bn], None)?);
+            }
+            b_bufs.push(row);
+        }
+
+        let zeros = vec![0f32; bm * bn];
+        let zero_buf = self.client.buffer_from_host_buffer(&zeros, &[bm, bn], None)?;
+        let mut a_blk = vec![0f32; bm * bk];
+        let mut out = vec![0f32; m * n];
+        for mi in 0..gm {
+            let m0 = mi * bm;
+            let mrows = bm.min(m - m0);
+            // Upload this row's A blocks once; reused for every ni.
+            let mut a_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(gk);
+            for ki in 0..gk {
+                let k0 = ki * bk;
+                let kdep = bk.min(k - k0);
+                if kdep < bk || mrows < bm {
+                    a_blk.iter_mut().for_each(|x| *x = 0.0);
+                }
+                for r in 0..mrows {
+                    let src = (m0 + r) * k + k0;
+                    a_blk[r * bk..r * bk + kdep].copy_from_slice(&a[src..src + kdep]);
+                }
+                a_bufs.push(self.client.buffer_from_host_buffer(&a_blk, &[bm, bk], None)?);
+            }
+            for ni in 0..gn {
+                let n0 = ni * bn;
+                let ncols = bn.min(n - n0);
+                // Device-resident accumulator chain over K.
+                let mut c_buf: Option<xla::PjRtBuffer> = None;
+                for ki in 0..gk {
+                    let c_in = c_buf.as_ref().unwrap_or(&zero_buf);
+                    let mut res =
+                        exe.execute_b(&[&a_bufs[ki], &b_bufs[ki][ni], c_in])?;
+                    c_buf = Some(res.swap_remove(0).swap_remove(0));
+                }
+                let lit = c_buf.unwrap().to_literal_sync()?;
+                let c_blk = lit.to_vec::<f32>()?;
+                for r in 0..mrows {
+                    let dst = (m0 + r) * n + n0;
+                    out[dst..dst + ncols]
+                        .copy_from_slice(&c_blk[r * bn..r * bn + ncols]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Literal-based reference path (all dtypes); also the baseline for
+    /// the §Perf before/after comparison.
+    pub fn gemm_dynamic_literal(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        (m, n, k): (usize, usize, usize),
+        block: [usize; 3],
+        dtype: DType,
+    ) -> Result<Vec<f32>> {
+        let [bm, bn, bk] = block;
+        let name = format!("gemm_acc_{}x{}x{}_{}", bm, bn, bk, dtype.name());
+        if self.manifest.find(&name).is_none() {
+            bail!("no artifact for block {:?} {}", block, dtype.name());
+        }
+        let (gm, gn, gk) = (ceil_div(m, bm), ceil_div(n, bn), ceil_div(k, bk));
+        let mut out = vec![0f32; m * n];
+        let mut a_blk = vec![0f32; bm * bk];
+        let mut b_blk = vec![0f32; bk * bn];
+        let zeros = vec![0f32; bm * bn];
+        for mi in 0..gm {
+            let m0 = mi * bm;
+            let mrows = bm.min(m - m0);
+            for ni in 0..gn {
+                let n0 = ni * bn;
+                let ncols = bn.min(n - n0);
+                let mut c_blk = zeros.clone();
+                for ki in 0..gk {
+                    let k0 = ki * bk;
+                    let kdep = bk.min(k - k0);
+                    // Gather A block (zero-padded).
+                    a_blk.iter_mut().for_each(|x| *x = 0.0);
+                    for r in 0..mrows {
+                        let src = (m0 + r) * k + k0;
+                        a_blk[r * bk..r * bk + kdep]
+                            .copy_from_slice(&a[src..src + kdep]);
+                    }
+                    // Gather B block (zero-padded).
+                    b_blk.iter_mut().for_each(|x| *x = 0.0);
+                    for r in 0..kdep {
+                        let src = (k0 + r) * n + n0;
+                        b_blk[r * bn..r * bn + ncols]
+                            .copy_from_slice(&b[src..src + ncols]);
+                    }
+                    c_blk = self.run_raw(
+                        &name,
+                        &[
+                            (&a_blk, vec![bm as i64, bk as i64]),
+                            (&b_blk, vec![bk as i64, bn as i64]),
+                            (&c_blk, vec![bm as i64, bn as i64]),
+                        ],
+                    )?;
+                }
+                // Scatter C block (crop padding).
+                for r in 0..mrows {
+                    let dst = (m0 + r) * n + n0;
+                    out[dst..dst + ncols]
+                        .copy_from_slice(&c_blk[r * bn..r * bn + ncols]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Wall-clock one artifact launch (min over `reps`), seconds.
+    /// This is the real-testbed empirical L0/L1 profiling primitive.
+    pub fn time_artifact(&self, name: &str, reps: usize) -> Result<f64> {
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {} not in manifest", name))?
+            .clone();
+        let bufs: Vec<(Vec<f32>, Vec<i64>)> = entry
+            .inputs
+            .iter()
+            .map(|spec| {
+                let n: usize = spec.shape.iter().product();
+                (
+                    vec![0.1f32; n.max(1)],
+                    spec.shape.iter().map(|&d| d as i64).collect(),
+                )
+            })
+            .collect();
+        let refs: Vec<(&[f32], Vec<i64>)> =
+            bufs.iter().map(|(d, s)| (d.as_slice(), s.clone())).collect();
+        // Warm-up (compiles on first use).
+        self.run_raw(&entry.name, &refs)?;
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            self.run_raw(&entry.name, &refs)?;
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        Ok(best)
+    }
+}
+
+/// Build the real-testbed micro-kernel library: every `gemm_acc` block
+/// in the manifest is wall-clock profiled (`reps` launches, min taken)
+/// — this is the empirical half of the hybrid analyzer running on real
+/// hardware instead of the simulator. The L0 tile is the Pallas inner
+/// tile (tm, tn, tk) recorded by aot.py.
+pub fn build_real_library(
+    engine: &RealEngine,
+    hw: &crate::hw::HwSpec,
+    dtype: DType,
+    reps: usize,
+) -> Result<crate::compiler::MicroKernelLibrary> {
+    use crate::compiler::{MicroKernel, MicroKernelLibrary};
+    let backend_name = match dtype {
+        DType::F32 => "mxu_f32",
+        _ => "mxu_bf16",
+    };
+    let backend = hw
+        .backend_idx(backend_name)
+        .ok_or_else(|| anyhow!("hw {} lacks backend {}", hw.name, backend_name))?;
+    let mut kernels = Vec::new();
+    for (block, name) in engine.manifest.gemm_acc_blocks(dtype) {
+        let entry = engine.manifest.find(&name).unwrap();
+        let l0 = [
+            entry.param_usize("tm").unwrap_or(8),
+            entry.param_usize("tn").unwrap_or(128),
+            entry.param_usize("tk").unwrap_or(128),
+        ];
+        let base_cost = engine.time_artifact(&name, reps)?;
+        kernels.push(MicroKernel { l0, l1: block, backend, base_cost });
+    }
+    if kernels.is_empty() {
+        bail!("manifest has no gemm_acc blocks for {}", dtype.name());
+    }
+    kernels.sort_by(|a, b| (a.l1, a.l0).cmp(&(b.l1, b.l0)));
+    Ok(MicroKernelLibrary {
+        hw_name: hw.name.to_string(),
+        dtype,
+        analyzer: crate::cost::hybrid::AnalyzerConfig::empirical(1),
+        kernels,
+    })
+}
+
+/// Dynamic-shape convolution on the real engine via implicit GEMM:
+/// im2col in Rust (the data-layout half Vortex folds into the rKernel
+/// recursion, §4.2) + the dynamic GEMM kernel constructor for compute.
+///
+/// `x` is NHWC row-major (n, h, w, cin); `w` is (kh, kw, cin, cout);
+/// valid padding, stride 1. Returns NHWC (n, oh, ow, cout) f32.
+pub fn conv2d_dynamic(
+    engine: &RealEngine,
+    selector: &crate::coordinator::Selector,
+    x: &[f32],
+    w: &[f32],
+    (n, h, wd, cin): (usize, usize, usize, usize),
+    (kh, kw, cout): (usize, usize, usize),
+) -> Result<Vec<f32>> {
+    if h < kh || wd < kw {
+        bail!("feature map {}x{} smaller than filter {}x{}", h, wd, kh, kw);
+    }
+    let (oh, ow) = (h - kh + 1, wd - kw + 1);
+    let (m, kdim) = (n * oh * ow, kh * kw * cin);
+    // im2col patch matrix: row (b, oy, ox) -> taps in (i, j, c) order,
+    // matching the filter reshaped as (kh*kw*cin, cout) row-major.
+    let mut patches = vec![0f32; m * kdim];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((b * oh + oy) * ow + ox) * kdim;
+                for i in 0..kh {
+                    // one contiguous (kw * cin)-wide slab per filter row
+                    let src = ((b * h + oy + i) * wd + ox) * cin;
+                    let dst = row + i * kw * cin;
+                    patches[dst..dst + kw * cin]
+                        .copy_from_slice(&x[src..src + kw * cin]);
+                }
+            }
+        }
+    }
+    // Select the micro-kernel for the implicit-GEMM shape and run the
+    // constructor (w is already (kh*kw*cin, cout) row-major).
+    let c = crate::ir::Contraction { m, n: cout, k: kdim, dtype: DType::F32 };
+    let sel = selector
+        .select(c, crate::coordinator::HwMode::Adaptive)
+        .ok_or_else(|| anyhow!("no kernel for conv contraction {:?}", c))?;
+    let kern = selector.kernel(&sel);
+    engine.gemm_dynamic(&patches, w, (m, cout, kdim), kern.l1, DType::F32)
+}
+
+/// Reference row-major triple-loop GEMM for verification in tests.
+pub fn gemm_host_ref(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            let row = l * n;
+            let out = i * n;
+            for j in 0..n {
+                c[out + j] += av * b[row + j];
+            }
+        }
+    }
+    c
+}
+
+/// Reference direct NHWC valid convolution (for verification).
+pub fn conv2d_host_ref(
+    x: &[f32],
+    w: &[f32],
+    (n, h, wd, cin): (usize, usize, usize, usize),
+    (kh, kw, cout): (usize, usize, usize),
+) -> Vec<f32> {
+    let (oh, ow) = (h - kh + 1, wd - kw + 1);
+    let mut out = vec![0f32; n * oh * ow * cout];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((b * oh + oy) * ow + ox) * cout;
+                for i in 0..kh {
+                    for j in 0..kw {
+                        let src = ((b * h + oy + i) * wd + ox + j) * cin;
+                        for ci in 0..cin {
+                            let xv = x[src + ci];
+                            let wrow = ((i * kw + j) * cin + ci) * cout;
+                            for co in 0..cout {
+                                out[dst + co] += xv * w[wrow + co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_ref_gemm_known_values() {
+        // [[1,2],[3,4]] @ I = same matrix
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(gemm_host_ref(&a, &b, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn manifest_parse_rejects_garbage() {
+        let dir = std::env::temp_dir().join("vortex_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"entries\": [{}]}").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Micro-benchmark harness substrate (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`]
+//! directly. Reports min/median/mean/p95 over timed iterations after a
+//! warm-up phase, and supports throughput annotation (flops or items).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        Stats {
+            iters: n,
+            min: samples[0],
+            median: samples[n / 2],
+            mean,
+            p95: samples[(n * 95 / 100).min(n - 1)],
+        }
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    /// Stop early once this much wall time has been spent measuring.
+    pub max_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, iters: 30, max_time: Duration::from_secs(10) }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, iters: 10, max_time: Duration::from_secs(3) }
+    }
+
+    /// Time `f`, print a one-line report, return the stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let start = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            if start.elapsed() > self.max_time && samples.len() >= 5 {
+                break;
+            }
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "bench {name:<44} min {:>10} med {:>10} mean {:>10} p95 {:>10} ({} iters)",
+            fmt_dur(stats.min),
+            fmt_dur(stats.median),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p95),
+            stats.iters,
+        );
+        stats
+    }
+
+    /// Like `run`, additionally reporting GFLOP/s from `flops` per call.
+    pub fn run_flops<F: FnMut()>(&self, name: &str, flops: f64, f: F) -> Stats {
+        let stats = self.run(name, f);
+        let gflops = flops / stats.median.as_secs_f64() / 1e9;
+        println!("      {name:<44} {:.2} GFLOP/s (median)", gflops);
+        stats
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{}ns", ns)
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![
+            Duration::from_micros(5),
+            Duration::from_micros(1),
+            Duration::from_micros(3),
+        ]);
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.median, Duration::from_micros(3));
+        assert!(s.p95 >= s.median);
+    }
+
+    #[test]
+    fn run_counts_iters() {
+        let b = Bench { warmup: 1, iters: 7, max_time: Duration::from_secs(60) };
+        let mut n = 0;
+        let s = b.run("test", || n += 1);
+        assert_eq!(s.iters, 7);
+        assert_eq!(n, 8); // warmup + iters
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12ns");
+        assert!(fmt_dur(Duration::from_micros(12)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(12)).ends_with("ms"));
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates for the offline environment (DESIGN.md §4):
+//! JSON, PRNG, CLI parsing, bench harness, tables, property testing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

