@@ -59,7 +59,7 @@ fn serve_batch(
             let w = &weights[wi % weights.len()];
             wi += 1;
             let out = engine
-                .gemm_dynamic(&act, &w[..k * n], (x_rows, n, k), kern.l1, DType::F32)
+                .gemm_dynamic(&act, &w[..k * n], (x_rows, n, k), kern.l1.to3(), DType::F32)
                 .expect("gemm");
             if verify && wi == 1 {
                 let want = gemm_host_ref(&act, &w[..k * n], x_rows, n, k);

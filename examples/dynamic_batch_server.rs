@@ -59,6 +59,7 @@ fn main() {
         let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 7));
         let lib = compile(
             &hw,
+            vortex::ir::OpKind::Gemm,
             DType::F32,
             &AnalyzerConfig::default_for(&hw),
             &mut prof,
@@ -123,14 +124,14 @@ fn main() {
                         &a_max[..rows_cap * k],
                         &w,
                         (rows_cap, n, k),
-                        kern.l1,
+                        kern.l1.to3(),
                         DType::F32,
                     )
                     .expect("gemm");
                 t_exec.elapsed().as_secs_f64()
             }
             Exec::Sim { sim } => {
-                sim.execute(selector.libraries[sel.lib].dtype, &kern.chain(sel.padded))
+                sim.execute(selector.libraries[sel.lib].dtype, &selector.chain(&sel))
             }
         };
         let done = Instant::now();

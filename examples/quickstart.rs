@@ -24,6 +24,7 @@ fn main() {
     let mut profiler = SimProfiler::new(Simulator::new(hw.clone(), 7));
     let report = compile(
         &hw,
+        vortex::ir::OpKind::Gemm,
         DType::F16,
         &analyzer,
         &mut profiler,

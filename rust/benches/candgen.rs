@@ -3,7 +3,7 @@
 
 use vortex::candgen;
 use vortex::hw::presets;
-use vortex::ir::DType;
+use vortex::ir::{DType, OpKind};
 use vortex::util::bench::{black_box, Bench};
 
 fn main() {
@@ -14,9 +14,16 @@ fn main() {
         ("candgen/a100_tc_f16", presets::a100(), DType::F16),
         ("candgen/cpu_pjrt_f32", presets::cpu_pjrt(), DType::F32),
     ] {
-        let set = candgen::generate(&hw, dt);
+        let set = candgen::generate(&hw, OpKind::Gemm, dt);
         b.run(&format!("{name} ({} cands)", set.total()), || {
-            black_box(candgen::generate(&hw, dt));
+            black_box(candgen::generate(&hw, OpKind::Gemm, dt));
         });
     }
+
+    // The 4-axis batched-GEMM space (operator-generic candgen).
+    let hw = presets::a100();
+    let set = candgen::generate(&hw, OpKind::BatchedGemm, DType::F16);
+    b.run(&format!("candgen/a100_bgemm_f16 ({} cands)", set.total()), || {
+        black_box(candgen::generate(&hw, OpKind::BatchedGemm, DType::F16));
+    });
 }

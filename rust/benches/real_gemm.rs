@@ -37,7 +37,7 @@ fn main() {
             || {
                 black_box(
                     engine
-                        .gemm_dynamic(&a, &bmat, (m, n, k), kern.l1, DType::F32)
+                        .gemm_dynamic(&a, &bmat, (m, n, k), kern.l1.to3(), DType::F32)
                         .unwrap(),
                 );
             },

@@ -1,0 +1,63 @@
+//! Minimal offline stand-in for the `anyhow` crate: just the API
+//! subset the vortex runtime uses (`anyhow!`, `bail!`, `Context`,
+//! `Result`). No backtraces, no error chains — a single message.
+
+use std::fmt;
+
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Attach context to a failure, anyhow-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", c, e)))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", f(), e)))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}

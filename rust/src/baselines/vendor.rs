@@ -54,6 +54,7 @@ pub fn tuned_table(
     let mut prof = SimProfiler::new(sim.clone());
     let lib = compile(
         hw,
+        crate::ir::OpKind::Gemm,
         dtype,
         &AnalyzerConfig::analytical_only(),
         &mut prof,
@@ -69,17 +70,17 @@ pub fn tuned_table(
             .filter(|k| k.backend == backend)
             .min_by(|a, b| {
                 let t = |k: &crate::compiler::MicroKernel| {
-                    let padded = [
+                    let padded = crate::ir::Tile::from3([
                         round_up(c.m, k.l1[0]),
                         round_up(c.n, k.l1[1]),
                         round_up(c.k, k.l1[2]),
-                    ];
-                    sim.execute(dtype, &k.chain(padded))
+                    ]);
+                    sim.execute(dtype, &k.chain(crate::ir::OpKind::Gemm, padded))
                 };
                 t(a).partial_cmp(&t(b)).unwrap()
             })
             .expect("non-empty library");
-        table.push(VendorKernel { l0: best.l0, l1: best.l1 });
+        table.push(VendorKernel { l0: best.l0.to3(), l1: best.l1.to3() });
     }
     // Sort biggest-first so the dispatcher prefers steady-state kernels.
     table.sort_by_key(|k| std::cmp::Reverse(k.l1[0] * k.l1[1] * k.l1[2]));

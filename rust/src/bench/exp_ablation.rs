@@ -25,7 +25,7 @@ use crate::compiler::{compile, CompileOpts};
 use crate::coordinator::{HwMode, Selector};
 use crate::cost::hybrid::AnalyzerConfig;
 use crate::hw::HwSpec;
-use crate::ir::DType;
+use crate::ir::{DType, OpKind};
 use crate::profiler::SimProfiler;
 use crate::sim::Simulator;
 use crate::util::table::{fmt_secs, Table};
@@ -36,7 +36,7 @@ use crate::util::table::{fmt_secs, Table};
 fn space_without_util_window(hw: &HwSpec, dtype: DType) -> usize {
     let mut relaxed = hw.clone();
     relaxed.min_util = 0.0;
-    candgen::generate(&relaxed, dtype).total()
+    candgen::generate(&relaxed, OpKind::Gemm, dtype).total()
 }
 
 fn space_without_isa_filter(hw: &HwSpec, dtype: DType) -> usize {
@@ -45,7 +45,7 @@ fn space_without_isa_filter(hw: &HwSpec, dtype: DType) -> usize {
     for b in &mut relaxed.backends {
         b.isa = [1, 1, 1];
     }
-    candgen::generate(&relaxed, dtype).total()
+    candgen::generate(&relaxed, OpKind::Gemm, dtype).total()
 }
 
 pub fn ablation(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
@@ -55,7 +55,7 @@ pub fn ablation(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
     let sim = Simulator::new(hw.clone(), seed);
 
     // --- candidate-space ablation ---------------------------------------
-    let full = candgen::generate(&hw, dtype).total();
+    let full = candgen::generate(&hw, OpKind::Gemm, dtype).total();
     let no_util = space_without_util_window(&hw, dtype);
     let no_isa = space_without_isa_filter(&hw, dtype);
     let mut t1 = Table::new(
@@ -89,6 +89,7 @@ pub fn ablation(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
         let mut prof = SimProfiler::new(Simulator::new(hw_variant.clone(), seed));
         let r = compile(
             hw_variant,
+            OpKind::Gemm,
             dtype,
             &AnalyzerConfig::default_for(hw_variant),
             &mut prof,
@@ -99,9 +100,8 @@ pub fn ablation(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
             .iter()
             .map(|&c| {
                 let s = sel.select(c, HwMode::Adaptive).unwrap();
-                let k = sel.kernel(&s);
                 // truth always on the REAL hardware model
-                sim.execute(dtype, &k.chain(s.padded))
+                sim.execute(dtype, &sel.chain(&s))
             })
             .sum();
         t2.row(vec![

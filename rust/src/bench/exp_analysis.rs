@@ -11,7 +11,7 @@ use crate::bench::workloads;
 use crate::compiler::{compile, CompileOpts, MicroKernelLibrary};
 use crate::coordinator::{HwMode, Selector};
 use crate::cost::hybrid::AnalyzerConfig;
-use crate::ir::{Contraction, DType};
+use crate::ir::{Contraction, DType, OpKind};
 use crate::profiler::SimProfiler;
 use crate::sim::Simulator;
 use crate::util::table::{fmt_secs, fmt_x, Table};
@@ -27,7 +27,7 @@ pub fn offline(out_dir: &Path, seed: u64, dietcode_trials: usize) -> Vec<Table> 
         let hw = tb.hw();
         let cfg = AnalyzerConfig::default_for(&hw);
         let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
-        let r = compile(&hw, tb.dtype(), &cfg, &mut prof, &CompileOpts::default());
+        let r = compile(&hw, OpKind::Gemm, tb.dtype(), &cfg, &mut prof, &CompileOpts::default());
         t.row(vec![
             "vortex".into(),
             tb.label().into(),
@@ -86,9 +86,8 @@ pub fn fig14(out_dir: &Path, seed: u64) -> Vec<Table> {
     for &d in &[64usize, 128, 256, 512, 1024, 2048, 4096] {
         let c = Contraction { m: d, n: d, k: d, dtype: DType::F16 };
         let sel = selector.select(c, *mode).unwrap();
-        let k = selector.kernel(&sel);
         let lib = &selector.libraries[sel.lib];
-        let exec = sim.execute(lib.dtype, &k.chain(sel.padded));
+        let exec = sim.execute(lib.dtype, &selector.chain(&sel));
         t.row(vec![
             d.to_string(),
             format!("{:.1}", sel.select_secs * 1e6),
@@ -108,8 +107,8 @@ pub fn fig15(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
     let sim = Simulator::new(hw.clone(), seed);
     let cfg = AnalyzerConfig::default_for(&hw);
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
-    let lib =
-        compile(&hw, DType::F16, &cfg, &mut prof, &CompileOpts::default()).library;
+    let lib = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut prof, &CompileOpts::default())
+        .library;
     let selector = Selector::new(hw.clone(), vec![lib.clone()]);
 
     let cases: Vec<Contraction> = workloads::gemm_suite(DType::F16, seed)
@@ -122,12 +121,12 @@ pub fn fig15(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
 
     // True (simulator) time of a library kernel on a case.
     let truth = |k: &crate::compiler::MicroKernel, c: Contraction| -> f64 {
-        let padded = [
+        let padded = crate::ir::Tile::from3([
             crate::ir::round_up(c.m, k.l1[0]),
             crate::ir::round_up(c.n, k.l1[1]),
             crate::ir::round_up(c.k, k.l1[2]),
-        ];
-        sim.execute(DType::F16, &k.chain(padded))
+        ]);
+        sim.execute(DType::F16, &k.chain(OpKind::Gemm, padded))
     };
 
     // Oracle: per-case best-true kernel (profiling-based static compile).
@@ -238,6 +237,7 @@ pub fn table7(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
             let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
             let r = compile(
                 &hw,
+                OpKind::Gemm,
                 tb.dtype(),
                 cfg,
                 &mut prof,
@@ -248,8 +248,7 @@ pub fn table7(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
                 .iter()
                 .map(|&c| {
                     let s = sel.select(c, HwMode::Only(tb.backend_name())).unwrap();
-                    let k = sel.kernel(&s);
-                    sim.execute(tb.dtype(), &k.chain(s.padded))
+                    sim.execute(tb.dtype(), &sel.chain(&s))
                 })
                 .sum();
             (r.offline_secs, total)
@@ -289,7 +288,7 @@ pub fn fig16(out_dir: &Path, seed: u64) -> Vec<Table> {
         let k = selector.kernel(&sel);
         let lib = &selector.libraries[sel.lib];
         (
-            sim.execute(lib.dtype, &k.chain(sel.padded)),
+            sim.execute(lib.dtype, &selector.chain(&sel)),
             selector.hw.backends[k.backend].name,
         )
     };

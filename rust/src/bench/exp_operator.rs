@@ -7,12 +7,12 @@ use crate::baselines::dietcode::DietCode;
 use crate::baselines::vendor::VendorLib;
 use crate::baselines::PlanEngine;
 use crate::bench::harness::{
-    baseline_engines, vortex_engine, SpeedupAgg, Testbed,
+    baseline_engines, vortex_engine, vortex_engine_ops, SpeedupAgg, Testbed,
 };
 use crate::bench::workloads;
 use crate::cost::Strategy;
 use crate::hw::HwSpec;
-use crate::ir::{Contraction, DType};
+use crate::ir::{Contraction, DType, OpKind};
 use crate::profiler::SimProfiler;
 use crate::sim::Simulator;
 use crate::util::table::{fmt_x, Table};
@@ -170,6 +170,61 @@ pub fn table5(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
     let _ = fig12.write_csv(&out_dir.join("fig12.csv"));
     let _ = summary.write_csv(&out_dir.join("table5.csv"));
     vec![summary]
+}
+
+/// Operator-generality study: GEMM, batched GEMM and Conv2d each
+/// compiled through the SAME candgen → compile → select pipeline (one
+/// native library per op) and executed in the simulator. Demonstrates
+/// the hierarchized strategy space over every registered op — the
+/// extension point every new workload plugs into.
+pub fn ops(out_dir: &Path, seed: u64) -> Vec<Table> {
+    let tb = Testbed::GpuTensorCore;
+    let sim = Simulator::new(tb.hw(), seed);
+    let engine = vortex_engine_ops(tb, seed, &[OpKind::Gemm, OpKind::BatchedGemm, OpKind::Conv2d]);
+    let crate::bench::harness::Engine::Vortex { selector, .. } = &engine else {
+        unreachable!()
+    };
+    let mut t = Table::new(
+        "Operator generality — per-op libraries through one pipeline (GPU Tensor Core)",
+        &["op", "libraries", "kernels", "cases", "geomean GFLOPS"],
+    );
+    for op in OpKind::ALL {
+        let cases: Vec<workloads::Case> = match op {
+            OpKind::Gemm => workloads::gemm_suite(tb.dtype(), seed)
+                .into_iter()
+                .step_by(40)
+                .collect(),
+            OpKind::BatchedGemm => workloads::batched_gemm_suite(tb.dtype(), seed)
+                .into_iter()
+                .step_by(16)
+                .collect(),
+            OpKind::Conv2d => workloads::conv_suite(tb.dtype(), seed)
+                .into_iter()
+                .step_by(55)
+                .collect(),
+        };
+        let libs = selector.libraries.iter().filter(|l| l.op == op).count();
+        let kernels: usize = selector
+            .libraries
+            .iter()
+            .filter(|l| l.op == op)
+            .map(|l| l.kernels.len())
+            .sum();
+        let mut log_gflops = 0.0;
+        for case in &cases {
+            let secs = engine.time_program(&sim, &case.program);
+            log_gflops += (case.program.flops() / secs / 1e9).ln();
+        }
+        t.row(vec![
+            op.name().into(),
+            libs.to_string(),
+            kernels.to_string(),
+            cases.len().to_string(),
+            format!("{:.1}", (log_gflops / cases.len() as f64).exp()),
+        ]);
+    }
+    let _ = t.write_csv(&out_dir.join("ops.csv"));
+    vec![t]
 }
 
 /// Table 6: Vortex vs DietCode across M ranges, with DietCode sampled

@@ -13,7 +13,7 @@ use crate::compiler::{compile, CompileOpts};
 use crate::coordinator::{HwMode, Selector};
 use crate::cost::hybrid::AnalyzerConfig;
 use crate::hw::{presets, HwSpec};
-use crate::ir::{Contraction, DType, TensorProgram};
+use crate::ir::{Contraction, DType, IterSpace, OpKind, TensorProgram};
 use crate::profiler::SimProfiler;
 use crate::sim::Simulator;
 
@@ -75,7 +75,8 @@ impl Engine {
         }
     }
 
-    /// Simulated end-to-end time for one op (execution + scheduling).
+    /// Simulated end-to-end time for one iteration space (execution +
+    /// scheduling).
     ///
     /// Scheduling overhead is *modeled* (2 us — the paper's Fig. 14
     /// scale on the A100 host), not the wall-clock of `select()` on
@@ -83,17 +84,22 @@ impl Engine {
     /// microseconds would double-count hardware differences. The real
     /// wall-clock selection cost is reported separately by Fig. 14 and
     /// the runtime_select bench.
-    pub fn time(&self, sim: &Simulator, c: Contraction) -> f64 {
+    pub fn time_space(&self, sim: &Simulator, space: IterSpace) -> f64 {
         const VORTEX_SCHED_OVERHEAD: f64 = 2e-6;
         match self {
             Engine::Vortex { selector, mode } => {
-                let sel = selector.select(c, *mode).expect("vortex select");
-                let k = selector.kernel(&sel);
+                // An op with no native library is served through its
+                // folded contraction view (batch → M) by the GEMM
+                // libraries — coverage is never lost, precision is.
+                let sel = selector
+                    .select(space, *mode)
+                    .or_else(|| selector.select(space.contraction(), *mode))
+                    .expect("vortex select");
                 let lib = &selector.libraries[sel.lib];
-                sim.execute(lib.dtype, &k.chain(sel.padded)) + VORTEX_SCHED_OVERHEAD
+                sim.execute(lib.dtype, &selector.chain(&sel)) + VORTEX_SCHED_OVERHEAD
             }
             Engine::Baseline(b) => {
-                let chain = b.plan(c);
+                let chain = b.plan(space.contraction());
                 let dtype = if sim.hw.backends[chain.backend].dtype_bytes == 2 {
                     DType::F16
                 } else {
@@ -104,32 +110,40 @@ impl Engine {
         }
     }
 
+    pub fn time(&self, sim: &Simulator, c: Contraction) -> f64 {
+        self.time_space(sim, IterSpace::from(c))
+    }
+
     pub fn time_program(&self, sim: &Simulator, p: &TensorProgram) -> f64 {
-        self.time(sim, p.contraction())
+        self.time_space(sim, p.space())
     }
 }
 
-/// Build the Vortex engine for a testbed (offline compile, §5).
-pub fn vortex_engine(tb: Testbed, seed: u64) -> Engine {
+/// Build the Vortex engine for a testbed (offline compile, §5), one
+/// library per (op x dtype) the testbed serves.
+pub fn vortex_engine_ops(tb: Testbed, seed: u64, ops: &[OpKind]) -> Engine {
     let hw = tb.hw();
     let cfg = AnalyzerConfig::default_for(&hw);
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
     let mut libs = Vec::new();
-    match tb {
-        Testbed::GpuTensorCore => {
-            // Adaptive across tensor + cuda cores (paper §6.2).
-            libs.push(
-                compile(&hw, DType::F16, &cfg, &mut prof, &CompileOpts::default())
+    for &op in ops {
+        match tb {
+            Testbed::GpuTensorCore => {
+                // Adaptive across tensor + cuda cores (paper §6.2).
+                libs.push(
+                    compile(&hw, op, DType::F16, &cfg, &mut prof, &CompileOpts::default())
+                        .library,
+                );
+                libs.push(
+                    compile(&hw, op, DType::F32, &cfg, &mut prof, &CompileOpts::default())
+                        .library,
+                );
+            }
+            _ => libs.push(
+                compile(&hw, op, tb.dtype(), &cfg, &mut prof, &CompileOpts::default())
                     .library,
-            );
-            libs.push(
-                compile(&hw, DType::F32, &cfg, &mut prof, &CompileOpts::default())
-                    .library,
-            );
+            ),
         }
-        _ => libs.push(
-            compile(&hw, tb.dtype(), &cfg, &mut prof, &CompileOpts::default()).library,
-        ),
     }
     let mode = match tb {
         // "Cuda Core Only" comparisons restrict Vortex too (Table 5).
@@ -137,6 +151,14 @@ pub fn vortex_engine(tb: Testbed, seed: u64) -> Engine {
         _ => HwMode::Adaptive,
     };
     Engine::Vortex { selector: Selector::new(hw, libs), mode }
+}
+
+/// Build the default (GEMM-space) Vortex engine for a testbed. Conv
+/// selects through these libraries via the implicit-GEMM fallback;
+/// workloads needing native batched/conv libraries use
+/// [`vortex_engine_ops`].
+pub fn vortex_engine(tb: Testbed, seed: u64) -> Engine {
+    vortex_engine_ops(tb, seed, &[OpKind::Gemm])
 }
 
 /// Baselines applicable to a testbed + operator kind (Table 5 rows).

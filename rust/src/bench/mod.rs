@@ -19,7 +19,7 @@ use crate::util::table::Table;
 /// All experiment names, in paper order.
 pub const EXPERIMENTS: &[&str] = &[
     "fig3", "fig5", "table5", "table6", "fig13", "offline", "fig14", "fig15",
-    "table7", "fig16", "ablation",
+    "table7", "fig16", "ablation", "ops",
 ];
 
 /// Run one experiment (or "all"). `fast` subsamples the big suites so a
@@ -39,6 +39,7 @@ pub fn run(name: &str, out_dir: &Path, seed: u64, fast: bool) -> Vec<Table> {
         "table7" => exp_analysis::table7(out_dir, seed, frac),
         "fig16" => exp_analysis::fig16(out_dir, seed),
         "ablation" => exp_ablation::ablation(out_dir, seed, frac),
+        "ops" => exp_operator::ops(out_dir, seed),
         "all" => {
             let mut all = Vec::new();
             for e in EXPERIMENTS {

@@ -85,6 +85,48 @@ pub fn conv_suite(dtype: DType, seed: u64) -> Vec<Case> {
     out
 }
 
+/// Batched-GEMM suite (200 cases): attention-style batched contractions
+/// with dynamic batch x heads and sequence length — the QK^T score and
+/// score x V context products every transformer layer executes. These
+/// exercise the operator-generic strategy space over a genuinely
+/// 4-axis iteration space (batch axis parallel, no cross-batch reuse).
+pub fn batched_gemm_suite(dtype: DType, seed: u64) -> Vec<Case> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let heads = [32usize, 64, 128]; // per-head dims of common models
+    for _ in 0..100 {
+        // scores: S[b, s, s] = Q[b, s, hd] @ K^T[b, hd, s]
+        let s = log_uniform(&mut rng, 1, 476);
+        let hd = heads[rng.usize(0, heads.len() - 1)];
+        out.push(Case {
+            category: "attention_score",
+            program: TensorProgram::BatchedGemm {
+                b: log_uniform(&mut rng, 1, 192),
+                m: s,
+                n: s,
+                k: hd,
+                dtype,
+            },
+        });
+    }
+    for _ in 0..100 {
+        // context: C[b, s, hd] = S[b, s, s] @ V[b, s, hd]
+        let s = log_uniform(&mut rng, 1, 476);
+        let hd = heads[rng.usize(0, heads.len() - 1)];
+        out.push(Case {
+            category: "attention_ctx",
+            program: TensorProgram::BatchedGemm {
+                b: log_uniform(&mut rng, 1, 192),
+                m: s,
+                n: hd,
+                k: s,
+                dtype,
+            },
+        });
+    }
+    out
+}
+
 /// Fig. 3 / Table 6 BERT GEMM-1 shape: M = batch x seq, N = 768, K = 2304.
 pub fn bert_gemm1(batch: usize, seq: usize, dtype: DType) -> TensorProgram {
     TensorProgram::Gemm { m: batch * seq, n: 768, k: 2304, dtype }
@@ -99,6 +141,23 @@ mod tests {
         assert_eq!(gemm_suite(DType::F32, 1).len(), 506);
         assert_eq!(conv_suite(DType::F32, 1).len(), 691);
         // 506 + 691 = 1197 operator configurations (paper §7.1)
+        assert_eq!(batched_gemm_suite(DType::F32, 1).len(), 200);
+    }
+
+    #[test]
+    fn batched_suite_shapes_are_attention_like() {
+        for c in batched_gemm_suite(DType::F16, 5) {
+            let crate::ir::TensorProgram::BatchedGemm { b, m, n, k, .. } = c.program
+            else {
+                panic!("non-batched case in batched suite");
+            };
+            assert!((1..=192).contains(&b));
+            assert!((1..=476).contains(&m));
+            match c.category {
+                "attention_score" => assert!([32, 64, 128].contains(&k) && n == m),
+                _ => assert!([32, 64, 128].contains(&n) && k == m),
+            }
+        }
     }
 
     #[test]

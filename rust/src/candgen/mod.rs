@@ -1,14 +1,23 @@
-//! Bottom-up hardware-aware candidate generation (paper §5.1, Algorithm 2).
+//! Bottom-up hardware-aware candidate generation (paper §5.1,
+//! Algorithm 2), operator-generic.
 //!
 //! For each backend of a hardware target, generate micro-kernel tile
-//! candidates level by level:
+//! candidates over the op's iteration-space axes, level by level:
 //!
 //! * **L0** — tiles are multiples of the backend's ISA granularity
-//!   (`FilterByISA`), with the working set inside the level-0 budget.
-//! * **L ≥ 1** — `FilterByMultiples`: the sieve over the previous layer's
-//!   candidates; every candidate is an elementwise integer multiple of at
-//!   least one child, working set inside the level's budget, and within
-//!   the utilization window (§2.3: extremely low/high usage is pruned).
+//!   lifted onto the op's axes (`FilterByISA`; batch axes have
+//!   granularity 1), with the op's working set inside the level-0
+//!   budget.
+//! * **L ≥ 1** — `FilterByMultiples`: the sieve over the previous
+//!   layer's candidates; every candidate is an elementwise integer
+//!   multiple of at least one child, working set inside the level's
+//!   budget, and within the utilization window (§2.3: extremely
+//!   low/high usage is pruned).
+//!
+//! Per-axis multiplier ladders come from the axis ROLE: spatial axes
+//! use the wide ladder, the reduction axis the deep-K ladder, and batch
+//! axes a short ladder (batch tiling only aids occupancy — there is no
+//! operand reuse across it — so a handful of extents suffices).
 //!
 //! The cross-level `children` map (the paper's "mapping mechanism") is
 //! kept for the analyzer: each (parent, child) edge is one scheduling
@@ -20,13 +29,13 @@
 use std::collections::HashMap;
 
 use crate::hw::HwSpec;
-use crate::ir::DType;
+use crate::ir::{AxisRole, DType, OpKind, Tile};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Candidate {
     pub level: usize,
-    /// Contraction-view tile (m, n, k).
-    pub tile: [usize; 3],
+    /// Tile over the op's iteration-space axes.
+    pub tile: Tile,
     /// Index into `HwSpec::backends`.
     pub backend: usize,
 }
@@ -69,10 +78,63 @@ pub fn ladder(max: usize) -> Vec<usize> {
     v
 }
 
-/// Generate candidates for one (hardware, dtype) pair. Backends whose
-/// element width does not match the dtype are skipped (the adaptive
-/// runtime generates one set per dtype and picks between them, §6.2).
-pub fn generate(hw: &HwSpec, dtype: DType) -> CandidateSet {
+/// Per-axis multiplier ladder for one (role, level).
+fn axis_ladder(role: AxisRole, level: usize) -> Vec<usize> {
+    match (role, level) {
+        // Batch: no reuse across it, small extents suffice.
+        (AxisRole::Batch, _) => vec![1, 2, 4],
+        (AxisRole::Spatial, 0) => ladder(64),
+        (AxisRole::Spatial, _) => ladder(256),
+        (AxisRole::Reduction, _) => ladder(64),
+    }
+}
+
+/// Visit every tile `base * mults` over the per-axis ladders, last axis
+/// innermost. The visitor returns `false` to break the innermost loop
+/// (ascending reduction ladder + working set monotone in the reduction
+/// extent ⇒ once over capacity, the rest of the innermost ladder is
+/// too).
+fn for_each_tile(
+    base: Tile,
+    ladders: &[Vec<usize>],
+    f: &mut impl FnMut(Tile, &[usize]) -> bool,
+) {
+    fn rec(
+        axis: usize,
+        base: Tile,
+        ladders: &[Vec<usize>],
+        mults: &mut [usize],
+        tile: &mut Tile,
+        f: &mut impl FnMut(Tile, &[usize]) -> bool,
+    ) {
+        for &m in &ladders[axis] {
+            mults[axis] = m;
+            tile[axis] = base[axis] * m;
+            if axis + 1 == ladders.len() {
+                if !f(*tile, mults) {
+                    break;
+                }
+            } else {
+                rec(axis + 1, base, ladders, mults, tile, f);
+            }
+        }
+    }
+    let mut mults = vec![1usize; ladders.len()];
+    let mut tile = base;
+    rec(0, base, ladders, &mut mults, &mut tile, f);
+}
+
+/// Generate candidates for one (hardware, op, dtype) triple. Backends
+/// whose element width does not match the dtype are skipped (the
+/// adaptive runtime generates one set per dtype and picks between them,
+/// §6.2).
+pub fn generate(hw: &HwSpec, op: OpKind, dtype: DType) -> CandidateSet {
+    let spec = op.spec();
+    debug_assert_eq!(
+        spec.axes().last().map(|a| a.role),
+        Some(AxisRole::Reduction),
+        "candgen requires the reduction axis last"
+    );
     let n_offline = hw.n_levels() - 1;
     let mut set = CandidateSet {
         levels: vec![Vec::new(); n_offline],
@@ -84,20 +146,17 @@ pub fn generate(hw: &HwSpec, dtype: DType) -> CandidateSet {
         }
         // ---- L0: InitCands + FilterByISA ---------------------------------
         let cap0 = hw.level(0).capacity_bytes;
-        let [im, inn, ik] = backend.isa;
+        let isa = spec.isa_tile(backend.isa);
+        let l0_ladders: Vec<Vec<usize>> =
+            spec.axes().iter().map(|a| axis_ladder(a.role, 0)).collect();
         let mut l0: Vec<Candidate> = Vec::new();
-        for &mm in &ladder(64) {
-            for &nm in &ladder(64) {
-                for &km in &ladder(64) {
-                    let tile = [im * mm, inn * nm, ik * km];
-                    let ws = HwSpec::gemm_working_set(tile, backend.dtype_bytes);
-                    if ws > cap0 {
-                        continue;
-                    }
-                    l0.push(Candidate { level: 0, tile, backend: bi });
-                }
+        for_each_tile(isa, &l0_ladders, &mut |tile, _| {
+            if spec.working_set(tile, backend.dtype_bytes) > cap0 {
+                return false;
             }
-        }
+            l0.push(Candidate { level: 0, tile, backend: bi });
+            true
+        });
         let l0_offset = set.levels[0].len();
         set.levels[0].extend(l0.iter().copied());
         set.children[0].extend(std::iter::repeat(Vec::new()).take(l0.len()));
@@ -108,40 +167,43 @@ pub fn generate(hw: &HwSpec, dtype: DType) -> CandidateSet {
         for level in 1..n_offline {
             let cap = hw.level(level).capacity_bytes;
             let min_ws = (cap as f64 * hw.min_util) as u64;
+            let ladders: Vec<Vec<usize>> = spec
+                .axes()
+                .iter()
+                .map(|a| axis_ladder(a.role, level))
+                .collect();
             // tile -> contributing child indices (the paper's map table)
-            let mut table: HashMap<[usize; 3], Vec<usize>> = HashMap::new();
+            let mut table: HashMap<Tile, Vec<usize>> = HashMap::new();
             for &(child_idx, child) in &prev {
-                let [m0, n0, k0] = child.tile;
-                for &mm in &ladder(256) {
-                    let m = m0 * mm;
-                    for &nm in &ladder(256) {
-                        let n = n0 * nm;
-                        // threads-per-block analog: spatial child tiles
-                        // running concurrently inside one L1 unit.
-                        if level == 1 && mm * nm > hw.max_l0_per_l1 as usize {
-                            continue;
-                        }
-                        for &km in &ladder(64) {
-                            let k = k0 * km;
-                            let tile = [m, n, k];
-                            let ws = HwSpec::gemm_working_set(
-                                tile,
-                                hw.backends[child.backend].dtype_bytes,
-                            );
-                            if ws > cap {
-                                break; // km ladder is ascending
-                            }
-                            if ws < min_ws {
-                                continue;
-                            }
-                            table.entry(tile).or_default().push(child_idx);
+                let elem = hw.backends[child.backend].dtype_bytes;
+                for_each_tile(child.tile, &ladders, &mut |tile, mults| {
+                    // threads-per-block analog: parallel (batch+spatial)
+                    // child tiles running concurrently inside one L1 unit.
+                    if level == 1 {
+                        let conc: usize = spec
+                            .axes()
+                            .iter()
+                            .zip(mults)
+                            .filter(|(a, _)| a.role != AxisRole::Reduction)
+                            .map(|(_, &m)| m)
+                            .product();
+                        if conc > hw.max_l0_per_l1 as usize {
+                            return true;
                         }
                     }
-                }
+                    let ws = spec.working_set(tile, elem);
+                    if ws > cap {
+                        return false; // reduction ladder is ascending
+                    }
+                    if ws < min_ws {
+                        return true;
+                    }
+                    table.entry(tile).or_default().push(child_idx);
+                    true
+                });
             }
-            let mut tiles: Vec<[usize; 3]> = table.keys().copied().collect();
+            let mut tiles: Vec<Tile> = table.keys().copied().collect();
             tiles.sort();
-            let offset = set.levels[level].len();
             let mut next_prev = Vec::with_capacity(tiles.len());
             for tile in tiles {
                 let mut kids = table.remove(&tile).unwrap();
@@ -153,7 +215,6 @@ pub fn generate(hw: &HwSpec, dtype: DType) -> CandidateSet {
                 set.children[level].push(kids);
                 next_prev.push((idx, cand));
             }
-            let _ = offset;
             prev = next_prev;
         }
     }
@@ -162,27 +223,25 @@ pub fn generate(hw: &HwSpec, dtype: DType) -> CandidateSet {
 
 /// Check a single (parent, child) pair against the Algorithm-2
 /// constraints — used by tests and by the manifest cross-check.
-pub fn is_valid_pair(hw: &HwSpec, parent: &Candidate, child: &Candidate) -> bool {
+pub fn is_valid_pair(
+    hw: &HwSpec,
+    op: OpKind,
+    parent: &Candidate,
+    child: &Candidate,
+) -> bool {
     if parent.backend != child.backend || parent.level != child.level + 1 {
         return false;
     }
-    let ok_mult = parent
-        .tile
-        .iter()
-        .zip(child.tile.iter())
-        .all(|(&p, &c)| c > 0 && p % c == 0);
+    let spec = op.spec();
     let backend = &hw.backends[parent.backend];
-    let ws_p = HwSpec::gemm_working_set(parent.tile, backend.dtype_bytes);
-    let ws_c = HwSpec::gemm_working_set(child.tile, backend.dtype_bytes);
-    let isa_ok = child
-        .tile
-        .iter()
-        .zip(backend.isa.iter())
-        .all(|(&t, &g)| t % g == 0);
-    ok_mult
+    let isa = spec.isa_tile(backend.isa);
+    let isa_ok = child.tile.is_multiple_of(isa);
+    parent.tile.is_multiple_of(child.tile)
         && isa_ok
-        && ws_p <= hw.level(parent.level).capacity_bytes
-        && ws_c <= hw.level(child.level).capacity_bytes
+        && spec.working_set(parent.tile, backend.dtype_bytes)
+            <= hw.level(parent.level).capacity_bytes
+        && spec.working_set(child.tile, backend.dtype_bytes)
+            <= hw.level(child.level).capacity_bytes
 }
 
 #[cfg(test)]
@@ -202,7 +261,7 @@ mod tests {
     #[test]
     fn l0_candidates_respect_isa_and_capacity() {
         let hw = presets::a100();
-        let set = generate(&hw, DType::F16);
+        let set = generate(&hw, OpKind::Gemm, DType::F16);
         assert!(!set.levels[0].is_empty());
         for c in &set.levels[0] {
             let b = &hw.backends[c.backend];
@@ -211,7 +270,7 @@ mod tests {
                 assert_eq!(t % g, 0, "ISA granularity violated: {:?}", c.tile);
             }
             assert!(
-                HwSpec::gemm_working_set(c.tile, b.dtype_bytes)
+                HwSpec::gemm_working_set(c.tile.to3(), b.dtype_bytes)
                     <= hw.level(0).capacity_bytes
             );
         }
@@ -220,14 +279,14 @@ mod tests {
     #[test]
     fn l1_candidates_are_multiples_of_some_child() {
         let hw = presets::a100();
-        let set = generate(&hw, DType::F16);
+        let set = generate(&hw, OpKind::Gemm, DType::F16);
         assert!(!set.levels[1].is_empty());
         for (i, c) in set.levels[1].iter().enumerate() {
             let kids = &set.children[1][i];
             assert!(!kids.is_empty(), "orphan L1 candidate {:?}", c.tile);
             for &k in kids {
                 assert!(
-                    is_valid_pair(&hw, c, &set.levels[0][k]),
+                    is_valid_pair(&hw, OpKind::Gemm, c, &set.levels[0][k]),
                     "invalid pair {:?} -> {:?}",
                     c.tile,
                     set.levels[0][k].tile
@@ -239,10 +298,10 @@ mod tests {
     #[test]
     fn utilization_window_prunes_tiny_l1_tiles() {
         let hw = presets::a100();
-        let set = generate(&hw, DType::F16);
+        let set = generate(&hw, OpKind::Gemm, DType::F16);
         let min_ws = (hw.level(1).capacity_bytes as f64 * hw.min_util) as u64;
         for c in &set.levels[1] {
-            let ws = HwSpec::gemm_working_set(c.tile, 2);
+            let ws = HwSpec::gemm_working_set(c.tile.to3(), 2);
             assert!(ws >= min_ws, "under-utilizing tile survived: {:?}", c.tile);
         }
     }
@@ -252,16 +311,16 @@ mod tests {
         // Paper §7.4: CPU >> GPU-CudaCore > GPU-TensorCore candidate counts
         // (17731 vs 2332 vs 392) because finer ISA granularity => larger
         // space. The same ordering must emerge here.
-        let cpu = generate(&presets::xeon_8255c(), DType::F32).total();
-        let gpu_cc = generate(&presets::a100(), DType::F32).total();
-        let gpu_tc = generate(&presets::a100(), DType::F16).total();
+        let cpu = generate(&presets::xeon_8255c(), OpKind::Gemm, DType::F32).total();
+        let gpu_cc = generate(&presets::a100(), OpKind::Gemm, DType::F32).total();
+        let gpu_tc = generate(&presets::a100(), OpKind::Gemm, DType::F16).total();
         assert!(cpu > gpu_cc, "cpu {} !> gpu_cc {}", cpu, gpu_cc);
         assert!(gpu_cc > gpu_tc, "gpu_cc {} !> gpu_tc {}", gpu_cc, gpu_tc);
     }
 
     #[test]
     fn dtype_filters_backends() {
-        let set = generate(&presets::a100(), DType::F32);
+        let set = generate(&presets::a100(), OpKind::Gemm, DType::F32);
         let hw = presets::a100();
         for level in &set.levels {
             for c in level {
@@ -273,11 +332,11 @@ mod tests {
     #[test]
     fn real_testbed_generates_manifest_like_tiles() {
         let hw = presets::cpu_pjrt();
-        let set = generate(&hw, DType::F32);
+        let set = generate(&hw, OpKind::Gemm, DType::F32);
         // The checked-in python manifest's L1 blocks must be producible.
         for want in [[64usize, 256, 512], [128, 512, 512], [128, 768, 768]] {
             assert!(
-                set.levels[1].iter().any(|c| c.tile == want),
+                set.levels[1].iter().any(|c| c.tile == Tile::from3(want)),
                 "manifest block {:?} not generated",
                 want
             );
@@ -285,9 +344,41 @@ mod tests {
     }
 
     #[test]
+    fn batched_gemm_candidates_have_rank_four_and_batch_extents() {
+        let hw = presets::a100();
+        let set = generate(&hw, OpKind::BatchedGemm, DType::F16);
+        assert!(!set.levels[0].is_empty());
+        assert!(!set.levels[1].is_empty());
+        for level in &set.levels {
+            for c in level {
+                assert_eq!(c.tile.rank(), 4, "{:?}", c.tile);
+            }
+        }
+        // The short batch ladder must actually surface b > 1 tiles.
+        assert!(
+            set.levels[0].iter().any(|c| c.tile[0] > 1),
+            "no batched L0 tile generated"
+        );
+    }
+
+    #[test]
+    fn conv_space_equals_gemm_space() {
+        // Conv2d optimizes over the implicit-GEMM contraction space, so
+        // Algorithm 2 must produce the identical tile set.
+        let hw = presets::a100();
+        let g = generate(&hw, OpKind::Gemm, DType::F16);
+        let c = generate(&hw, OpKind::Conv2d, DType::F16);
+        assert_eq!(g.total(), c.total());
+        assert_eq!(
+            g.levels[1].iter().map(|x| x.tile).collect::<Vec<_>>(),
+            c.levels[1].iter().map(|x| x.tile).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
     fn prop_children_divide_parents() {
         let hw = presets::a100();
-        let set = generate(&hw, DType::F16);
+        let set = generate(&hw, OpKind::Gemm, DType::F16);
         forall(
             "children-divide-parents",
             200,
@@ -302,10 +393,50 @@ mod tests {
                 let p = set.levels[1][i].tile;
                 let c = set.levels[0][k].tile;
                 prop_assert(
-                    p.iter().zip(c.iter()).all(|(&a, &b)| a % b == 0),
+                    p.is_multiple_of(c),
                     format!("{:?} not multiple of {:?}", p, c),
                 )
             },
         );
+    }
+
+    #[test]
+    fn prop_every_op_chain_satisfies_pair_invariants() {
+        // Satellite: for EVERY op, random (parent, child) edges from the
+        // generated set satisfy the Algorithm-2 invariants — children
+        // divide parents, ISA granularity holds, working sets fit the
+        // level capacities.
+        let hw = presets::a100();
+        for op in OpKind::ALL {
+            let set = generate(&hw, op, DType::F16);
+            assert!(!set.levels[1].is_empty(), "{} produced no L1 tiles", op);
+            forall(
+                "op-chain-invariants",
+                120,
+                0x5EED,
+                |r, _| {
+                    let i = r.usize(0, set.levels[1].len() - 1);
+                    let kids = &set.children[1][i];
+                    let k = kids[r.usize(0, kids.len() - 1)];
+                    (i, k)
+                },
+                |&(i, k)| {
+                    let p = &set.levels[1][i];
+                    let c = &set.levels[0][k];
+                    prop_assert(
+                        is_valid_pair(&hw, op, p, c),
+                        format!("{}: invalid pair {:?} -> {:?}", op, p.tile, c.tile),
+                    )?;
+                    let ws = op.spec().working_set(
+                        p.tile,
+                        hw.backends[p.backend].dtype_bytes,
+                    );
+                    prop_assert(
+                        ws <= hw.level(1).capacity_bytes,
+                        format!("{}: L1 working set {} spills", op, ws),
+                    )
+                },
+            );
+        }
     }
 }

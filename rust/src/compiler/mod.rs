@@ -1,27 +1,38 @@
-//! Vortex offline compilation pipeline (paper §5, Fig. 6 left).
+//! Vortex offline compilation pipeline (paper §5, Fig. 6 left),
+//! operator-generic.
 //!
-//! `compile()` runs the full offline stage for one (hardware, dtype)
-//! pair:
+//! `compile()` runs the full offline stage for one (hardware, op,
+//! dtype) triple:
 //!
-//! 1. bottom-up candidate generation ([`crate::candgen`], Algorithm 2);
+//! 1. bottom-up candidate generation ([`crate::candgen`], Algorithm 2)
+//!    over the op's iteration-space axes;
 //! 2. per-candidate strategy analysis with the hybrid analyzer
 //!    ([`crate::cost::hybrid`]) — the best child mapping is chosen for
-//!    every level-1 candidate and the subchain cost is recorded;
+//!    every level-1 candidate and the subchain cost is recorded. The
+//!    ranking pass is PARALLELIZED: the few distinct L0 subchains are
+//!    profiled once up front (sequentially, so profiler query/tuning
+//!    accounting stays exact), then the per-L1 child ranking — pure
+//!    arithmetic over those cached measurements — fans out across
+//!    threads; the winners' base costs are then profiled sequentially.
 //! 3. pruning to a compact [`MicroKernelLibrary`] (near-duplicate tiles
 //!    are bucketed by log-shape and only the most efficient survivor of
 //!    each bucket is kept), so runtime selection stays microseconds.
 //!
 //! The library is the *only* artifact the runtime stage needs — no shape
-//! samples anywhere (the paper's headline property).
+//! samples anywhere (the paper's headline property). With
+//! `CompileOpts::cache_dir` set, the library is persisted to disk keyed
+//! by (hw, op, dtype, analyzer) and later `compile()` calls load it
+//! back instead of re-running candgen + analysis.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::candgen;
 use crate::cost::hybrid::{hybrid_cost, AnalyzerConfig};
-use crate::cost::Strategy;
+use crate::cost::{self, Strategy};
 use crate::hw::HwSpec;
-use crate::ir::DType;
+use crate::ir::{DType, OpKind, Tile, MAX_AXES};
 use crate::profiler::Profiler;
 use crate::util::json::Json;
 
@@ -29,8 +40,8 @@ use crate::util::json::Json;
 /// estimated subchain cost (one L1 block's execution on one unit).
 #[derive(Debug, Clone, PartialEq)]
 pub struct MicroKernel {
-    pub l0: [usize; 3],
-    pub l1: [usize; 3],
+    pub l0: Tile,
+    pub l1: Tile,
     pub backend: usize,
     /// Cost of the [l0, l1] subchain, seconds (hybrid analyzer output).
     pub base_cost: f64,
@@ -38,7 +49,7 @@ pub struct MicroKernel {
 
 impl MicroKernel {
     pub fn flops(&self) -> f64 {
-        2.0 * self.l1.iter().map(|&d| d as f64).product::<f64>()
+        2.0 * self.l1.product_f64()
     }
 
     /// Throughput of the block itself, GFLOP/s.
@@ -47,16 +58,14 @@ impl MicroKernel {
     }
 
     /// The runtime strategy chain for a padded problem shape.
-    pub fn chain(&self, padded: [usize; 3]) -> Strategy {
-        Strategy::new(vec![self.l0, self.l1, padded], self.backend)
+    pub fn chain(&self, op: OpKind, padded: Tile) -> Strategy {
+        Strategy::for_op(op, vec![self.l0, self.l1, padded], self.backend)
     }
 
-    /// Artifact name convention shared with python/compile/aot.py.
-    pub fn artifact_name(&self, dtype: DType) -> String {
-        format!(
-            "gemm_acc_{}x{}x{}_{}",
-            self.l1[0], self.l1[1], self.l1[2], dtype.name()
-        )
+    /// Artifact name convention shared with python/compile/aot.py,
+    /// owned by the op.
+    pub fn artifact_name(&self, op: OpKind, dtype: DType) -> String {
+        op.spec().artifact_name(self.l1, dtype)
     }
 }
 
@@ -64,6 +73,7 @@ impl MicroKernel {
 #[derive(Debug, Clone)]
 pub struct MicroKernelLibrary {
     pub hw_name: String,
+    pub op: OpKind,
     pub dtype: DType,
     pub analyzer: AnalyzerConfig,
     pub kernels: Vec<MicroKernel>,
@@ -84,6 +94,29 @@ pub struct CompileReport {
     pub offline_secs: f64,
     /// Actual wall-clock spent in this process.
     pub wall_secs: f64,
+    /// True when the library was loaded from the on-disk cache (no
+    /// candgen / analysis / profiling ran).
+    pub from_cache: bool,
+    /// Wall-clock of the parallel ranking phase.
+    pub analysis_wall_secs: f64,
+    /// Sum of per-thread time inside the ranking phase; the ratio
+    /// `analysis_cpu_secs / analysis_wall_secs` is the achieved
+    /// parallel speedup.
+    pub analysis_cpu_secs: f64,
+    /// Worker threads used by the ranking phase.
+    pub analysis_threads: usize,
+}
+
+impl CompileReport {
+    /// Achieved speedup of the parallel ranking phase (1.0 when it ran
+    /// on one thread or was skipped).
+    pub fn analysis_speedup(&self) -> f64 {
+        if self.analysis_wall_secs > 0.0 {
+            (self.analysis_cpu_secs / self.analysis_wall_secs).max(1.0)
+        } else {
+            1.0
+        }
+    }
 }
 
 /// Pipeline options.
@@ -96,37 +129,135 @@ pub struct CompileOpts {
     pub profile_all_pairs: bool,
     /// Restrict the library to these L1 tiles (used on the real testbed
     /// to match the AOT artifact set). Empty = no restriction.
-    pub restrict_l1: Vec<[usize; 3]>,
+    pub restrict_l1: Vec<Tile>,
+    /// On-disk library cache directory. When set (and the options are
+    /// cacheable: default prune, no all-pairs, no restriction), compile
+    /// loads `<hw>_<op>_<dtype>_<analyzer>.json` if present and writes
+    /// it after a fresh build.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for CompileOpts {
     fn default() -> Self {
-        CompileOpts { prune: true, profile_all_pairs: false, restrict_l1: Vec::new() }
+        CompileOpts {
+            prune: true,
+            profile_all_pairs: false,
+            restrict_l1: Vec::new(),
+            cache_dir: None,
+        }
     }
 }
 
-fn log_bucket(tile: [usize; 3]) -> [u32; 3] {
-    [
-        (tile[0] as f64).log2().round() as u32,
-        (tile[1] as f64).log2().round() as u32,
-        (tile[2] as f64).log2().round() as u32,
-    ]
+impl CompileOpts {
+    /// Only canonical builds go through the cache: restricted or
+    /// all-pairs libraries are not representative of the key.
+    fn cacheable(&self) -> bool {
+        self.prune && !self.profile_all_pairs && self.restrict_l1.is_empty()
+    }
 }
 
-/// Run the offline stage.
+/// Fingerprint of everything the compiled library depends on besides
+/// the visible (hw name, op, dtype, analyzer) key: the full hardware
+/// spec contents (an `exp_ablation`-style relaxed clone shares the
+/// name but not the space) and the profiler's measurement identity
+/// (the simulator seed). Without this, a cache hit could silently
+/// return base costs measured under a different seed or spec.
+fn cache_fingerprint(hw: &HwSpec, profiler: &dyn Profiler) -> u64 {
+    let mut parts: Vec<u64> = vec![profiler.fingerprint()];
+    for l in &hw.levels {
+        parts.push(l.capacity_bytes);
+        parts.push(l.load_bw_gbps.to_bits());
+        parts.push(l.unit_count as u64);
+    }
+    for b in &hw.backends {
+        parts.push(b.peak_gflops.to_bits());
+        parts.extend(b.isa.iter().map(|&x| x as u64));
+        parts.push(b.dtype_bytes as u64);
+        parts.push(b.launch_factor.to_bits());
+    }
+    parts.push(hw.min_util.to_bits());
+    parts.push(hw.max_l0_per_l1 as u64);
+    crate::util::rng::hash_key(&parts)
+}
+
+/// Cache file path for one (hw, op, dtype, analyzer, fingerprint) key.
+pub fn cache_path(
+    dir: &Path,
+    hw: &HwSpec,
+    op: OpKind,
+    dtype: DType,
+    cfg: &AnalyzerConfig,
+    fingerprint: u64,
+) -> PathBuf {
+    dir.join(format!(
+        "{}_{}_{}_{}_{:016x}.json",
+        hw.name,
+        op.name(),
+        dtype.name(),
+        cfg.slug(),
+        fingerprint
+    ))
+}
+
+fn load_cached(
+    dir: &Path,
+    hw: &HwSpec,
+    op: OpKind,
+    dtype: DType,
+    cfg: &AnalyzerConfig,
+    fingerprint: u64,
+) -> Option<MicroKernelLibrary> {
+    let text =
+        std::fs::read_to_string(cache_path(dir, hw, op, dtype, cfg, fingerprint))
+            .ok()?;
+    let lib = MicroKernelLibrary::from_json(&Json::parse(&text).ok()?)?;
+    // The file name is the key, but trust only the content.
+    (lib.hw_name == hw.name && lib.op == op && lib.dtype == dtype && lib.analyzer == *cfg)
+        .then_some(lib)
+}
+
+fn log_bucket(tile: Tile) -> [u32; MAX_AXES] {
+    let mut out = [0u32; MAX_AXES];
+    for (o, &d) in out.iter_mut().zip(tile.dims()) {
+        *o = (d as f64).log2().round() as u32;
+    }
+    out
+}
+
+/// Run the offline stage for one (hardware, op, dtype) triple.
 pub fn compile(
     hw: &HwSpec,
+    op: OpKind,
     dtype: DType,
     cfg: &AnalyzerConfig,
     profiler: &mut dyn Profiler,
     opts: &CompileOpts,
 ) -> CompileReport {
     let wall0 = Instant::now();
+    let fp = cache_fingerprint(hw, profiler);
+    if let Some(dir) = opts.cache_dir.as_deref() {
+        if opts.cacheable() {
+            if let Some(library) = load_cached(dir, hw, op, dtype, cfg, fp) {
+                return CompileReport {
+                    library,
+                    candidates_total: 0,
+                    chains_analyzed: 0,
+                    profile_queries: 0,
+                    offline_secs: 0.0,
+                    wall_secs: wall0.elapsed().as_secs_f64(),
+                    from_cache: true,
+                    analysis_wall_secs: 0.0,
+                    analysis_cpu_secs: 0.0,
+                    analysis_threads: 0,
+                };
+            }
+        }
+    }
     let queries0 = profiler.queries();
     let tuning0 = profiler.tuning_secs();
 
-    // 1. Algorithm 2.
-    let set = candgen::generate(hw, dtype);
+    // 1. Algorithm 2 over the op's axes.
+    let set = candgen::generate(hw, op, dtype);
     let candidates_total = set.total();
 
     // 2. Strategy analysis: best child per L1 candidate. Children are
@@ -135,35 +266,118 @@ pub fn compile(
     // the configured fidelity — this is what keeps the paper's offline
     // query counts at ~(#L0 + #L1) instead of #chains. The
     // `profile_all_pairs` flag (Table 7 "Changed") measures every pair.
-    let rank_cfg = AnalyzerConfig {
-        empirical_up_to: cfg.empirical_up_to.map(|e| e.min(0)),
-    };
-    let mut kernels: Vec<MicroKernel> = Vec::new();
+    let rank_empirical = cfg.empirical_up_to.is_some();
+    let l1_list: Vec<usize> = (0..set.levels[1].len())
+        .filter(|&i| {
+            opts.restrict_l1.is_empty()
+                || opts.restrict_l1.contains(&set.levels[1][i].tile)
+        })
+        .collect();
+
+    // Per-L1 winner: (ranking cost, child index).
+    let mut winners: Vec<Option<(f64, usize)>> = vec![None; l1_list.len()];
     let mut chains = 0usize;
-    for (i, l1) in set.levels[1].iter().enumerate() {
-        if !opts.restrict_l1.is_empty() && !opts.restrict_l1.contains(&l1.tile) {
-            continue;
-        }
-        let children = &set.children[1][i];
-        let mut best: Option<(f64, usize)> = None;
-        for &ci in children {
-            chains += 1;
-            let child = set.levels[0][ci];
-            let sub = Strategy::new(vec![child.tile, l1.tile], l1.backend);
-            let c = if opts.profile_all_pairs {
-                // Table 7 "Changed": measure the full pair.
-                profiler.measure_subchain(dtype, &sub, 1)
-            } else {
-                hybrid_cost(hw, dtype, &sub, &rank_cfg, profiler)
-            };
-            if best.map(|(b, _)| c < b).unwrap_or(true) {
-                best = Some((c, ci));
+    let mut analysis_wall_secs = 0.0;
+    let mut analysis_cpu_secs = 0.0;
+    let mut analysis_threads = 1usize;
+
+    if opts.profile_all_pairs {
+        // Table 7 "Changed": measure the full pair, sequentially, so the
+        // profiler's query/tuning accounting stays exact.
+        for (slot, &i) in winners.iter_mut().zip(&l1_list) {
+            let l1 = set.levels[1][i];
+            for &ci in &set.children[1][i] {
+                chains += 1;
+                let child = set.levels[0][ci];
+                let sub =
+                    Strategy::for_op(op, vec![child.tile, l1.tile], l1.backend);
+                let c = profiler.measure_subchain(dtype, &sub, 1);
+                if slot.map(|(b, _)| c < b).unwrap_or(true) {
+                    *slot = Some((c, ci));
+                }
             }
         }
-        if let Some((_, ci)) = best {
+    } else {
+        // Phase A (sequential, profiler): measure each distinct L0
+        // subchain once — exactly the measurement set the ranking needs.
+        let mut l0_cost: HashMap<(Tile, usize), f64> = HashMap::new();
+        if rank_empirical {
+            for &i in &l1_list {
+                for &ci in &set.children[1][i] {
+                    let child = set.levels[0][ci];
+                    l0_cost.entry((child.tile, child.backend)).or_insert_with(|| {
+                        let sub =
+                            Strategy::for_op(op, vec![child.tile], child.backend);
+                        profiler.measure_subchain(dtype, &sub, 0)
+                    });
+                }
+            }
+        }
+        // Phase B (parallel, pure arithmetic): rank every child of every
+        // L1 candidate with Eq. 2–4 over the cached L0 measurements.
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .clamp(1, 16)
+            .min(l1_list.len().max(1));
+        let chunk = l1_list.len().div_ceil(threads).max(1);
+        let t_wall = Instant::now();
+        let (cpu_secs, pair_counts): (Vec<f64>, Vec<usize>) =
+            std::thread::scope(|s| {
+                let l0_cost = &l0_cost;
+                let set = &set;
+                let handles: Vec<_> = winners
+                    .chunks_mut(chunk)
+                    .zip(l1_list.chunks(chunk))
+                    .map(|(slots, idxs)| {
+                        s.spawn(move || {
+                            let t0 = Instant::now();
+                            let mut pairs = 0usize;
+                            for (slot, &i) in slots.iter_mut().zip(idxs) {
+                                let l1 = set.levels[1][i];
+                                for &ci in &set.children[1][i] {
+                                    pairs += 1;
+                                    let child = set.levels[0][ci];
+                                    let sub = Strategy::for_op(
+                                        op,
+                                        vec![child.tile, l1.tile],
+                                        l1.backend,
+                                    );
+                                    let c = if rank_empirical {
+                                        let base =
+                                            l0_cost[&(child.tile, child.backend)];
+                                        cost::cost_from(hw, dtype, &sub, 1, base)
+                                            .total_secs
+                                    } else {
+                                        cost::cost(hw, dtype, &sub, None).total_secs
+                                    };
+                                    if slot.map(|(b, _)| c < b).unwrap_or(true) {
+                                        *slot = Some((c, ci));
+                                    }
+                                }
+                            }
+                            (t0.elapsed().as_secs_f64(), pairs)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).unzip()
+            });
+        analysis_wall_secs = t_wall.elapsed().as_secs_f64();
+        analysis_cpu_secs = cpu_secs.iter().sum();
+        // Workers actually spawned (chunk rounding can yield fewer
+        // than the planned thread count).
+        analysis_threads = cpu_secs.len().max(1);
+        chains = pair_counts.iter().sum();
+    }
+
+    // Phase C (sequential, profiler): record each winner's chain cost at
+    // the configured fidelity.
+    let mut kernels: Vec<MicroKernel> = Vec::new();
+    for (slot, &i) in winners.iter().zip(&l1_list) {
+        if let Some((_, ci)) = *slot {
+            let l1 = set.levels[1][i];
             let child = set.levels[0][ci];
-            // Record the chain cost at the configured fidelity.
-            let sub = Strategy::new(vec![child.tile, l1.tile], l1.backend);
+            let sub = Strategy::for_op(op, vec![child.tile, l1.tile], l1.backend);
             let base_cost = hybrid_cost(hw, dtype, &sub, cfg, profiler);
             kernels.push(MicroKernel {
                 l0: child.tile,
@@ -176,7 +390,8 @@ pub fn compile(
 
     // 3. Pruning: best survivor per log-shape bucket.
     if opts.prune {
-        let mut buckets: HashMap<([u32; 3], usize), MicroKernel> = HashMap::new();
+        let mut buckets: HashMap<([u32; MAX_AXES], usize), MicroKernel> =
+            HashMap::new();
         for k in kernels.drain(..) {
             let key = (log_bucket(k.l1), k.backend);
             match buckets.get(&key) {
@@ -192,9 +407,10 @@ pub fn compile(
 
     let wall_secs = wall0.elapsed().as_secs_f64();
     let tuning = profiler.tuning_secs() - tuning0;
-    CompileReport {
+    let report = CompileReport {
         library: MicroKernelLibrary {
             hw_name: hw.name.to_string(),
+            op,
             dtype,
             analyzer: cfg.clone(),
             kernels,
@@ -204,19 +420,40 @@ pub fn compile(
         profile_queries: profiler.queries() - queries0,
         offline_secs: wall_secs + tuning,
         wall_secs,
+        from_cache: false,
+        analysis_wall_secs,
+        analysis_cpu_secs,
+        analysis_threads,
+    };
+    if let Some(dir) = opts.cache_dir.as_deref() {
+        if opts.cacheable() {
+            let _ = std::fs::create_dir_all(dir);
+            let _ = std::fs::write(
+                cache_path(dir, hw, op, dtype, cfg, fp),
+                report.library.to_json().dump(),
+            );
+        }
     }
+    report
 }
 
 // ---------------------------------------------------------------------------
 // Library (de)serialization — cached next to the artifacts
 // ---------------------------------------------------------------------------
 
+/// Current library schema version. v1 (implicit) had no "version"/"op"
+/// fields and was GEMM-only; v2 adds both.
+pub const LIBRARY_SCHEMA_VERSION: usize = 2;
+
 impl MicroKernelLibrary {
     pub fn to_json(&self) -> Json {
-        let tile =
-            |t: [usize; 3]| Json::arr(t.iter().map(|&x| Json::num(x as f64)).collect());
+        let tile = |t: Tile| {
+            Json::arr(t.iter().map(|&x| Json::num(x as f64)).collect())
+        };
         Json::obj(vec![
+            ("version", Json::num(LIBRARY_SCHEMA_VERSION as f64)),
             ("hw", Json::str(self.hw_name.clone())),
+            ("op", Json::str(self.op.name())),
             ("dtype", Json::str(self.dtype.name())),
             ("analyzer", Json::str(self.analyzer.label())),
             (
@@ -238,16 +475,33 @@ impl MicroKernelLibrary {
         ])
     }
 
+    /// Strict loader: unknown schema versions, unknown ops, unknown
+    /// analyzer labels and rank-mismatched tiles all return `None`
+    /// (never a silently-misclassified library). A missing "version" /
+    /// "op" means a legacy v1 GEMM-only file, which still loads.
     pub fn from_json(v: &Json) -> Option<MicroKernelLibrary> {
-        let tile = |v: &Json| -> Option<[usize; 3]> {
+        let version = match v.get("version") {
+            None => 1,
+            Some(x) => x.as_usize()?,
+        };
+        if !(1..=LIBRARY_SCHEMA_VERSION).contains(&version) {
+            return None;
+        }
+        let op = match v.get("op") {
+            None => OpKind::Gemm,
+            Some(o) => OpKind::parse(o.as_str()?)?,
+        };
+        let rank = op.spec().rank();
+        let tile = |v: &Json| -> Option<Tile> {
             let a = v.as_arr()?;
-            Some([a[0].as_usize()?, a[1].as_usize()?, a[2].as_usize()?])
+            if a.len() != rank {
+                return None;
+            }
+            let dims: Vec<usize> =
+                a.iter().map(|x| x.as_usize()).collect::<Option<Vec<_>>>()?;
+            Some(Tile::new(&dims))
         };
-        let analyzer = match v.get("analyzer")?.as_str()? {
-            "-" => AnalyzerConfig::analytical_only(),
-            "E: L0" => AnalyzerConfig::empirical(0),
-            _ => AnalyzerConfig::empirical(1),
-        };
+        let analyzer = AnalyzerConfig::parse_label(v.get("analyzer")?.as_str()?)?;
         let kernels = v
             .get("kernels")?
             .as_arr()?
@@ -263,6 +517,7 @@ impl MicroKernelLibrary {
             .collect::<Option<Vec<_>>>()?;
         Some(MicroKernelLibrary {
             hw_name: v.get("hw")?.as_str()?.to_string(),
+            op,
             dtype: DType::parse(v.get("dtype")?.as_str()?)?,
             analyzer,
             kernels,
@@ -277,16 +532,21 @@ mod tests {
     use crate::profiler::SimProfiler;
     use crate::sim::Simulator;
 
-    fn compile_tc() -> CompileReport {
+    fn compile_op(op: OpKind) -> CompileReport {
         let hw = presets::a100();
         let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
         compile(
             &hw,
+            op,
             DType::F16,
             &AnalyzerConfig::default_for(&hw),
             &mut prof,
             &CompileOpts::default(),
         )
+    }
+
+    fn compile_tc() -> CompileReport {
+        compile_op(OpKind::Gemm)
     }
 
     #[test]
@@ -299,6 +559,9 @@ mod tests {
             r.library.kernels.len()
         );
         assert!(r.candidates_total > r.library.kernels.len());
+        assert!(r.analysis_threads >= 1);
+        assert!(r.analysis_speedup() >= 1.0);
+        assert!(!r.from_cache);
     }
 
     #[test]
@@ -306,10 +569,10 @@ mod tests {
         let r = compile_tc();
         let hw = presets::a100();
         for k in &r.library.kernels {
-            let s = Strategy::new(vec![k.l0, k.l1], k.backend);
+            let s = Strategy::for_op(OpKind::Gemm, vec![k.l0, k.l1], k.backend);
             assert!(s.is_nested(), "{:?}", k);
             assert!(k.base_cost > 0.0);
-            let ws = crate::hw::HwSpec::gemm_working_set(k.l1, 2);
+            let ws = crate::hw::HwSpec::gemm_working_set(k.l1.to3(), 2);
             assert!(ws <= hw.level(1).capacity_bytes);
         }
     }
@@ -326,10 +589,18 @@ mod tests {
         let hw = presets::a100();
         let cfg = AnalyzerConfig::default_for(&hw);
         let mut p1 = SimProfiler::new(Simulator::new(hw.clone(), 5));
-        let r1 = compile(&hw, DType::F16, &cfg, &mut p1, &CompileOpts::default());
+        let r1 = compile(
+            &hw,
+            OpKind::Gemm,
+            DType::F16,
+            &cfg,
+            &mut p1,
+            &CompileOpts::default(),
+        );
         let mut p2 = SimProfiler::new(Simulator::new(hw.clone(), 5));
         let r2 = compile(
             &hw,
+            OpKind::Gemm,
             DType::F16,
             &cfg,
             &mut p2,
@@ -343,10 +614,14 @@ mod tests {
     fn restriction_matches_real_manifest_blocks() {
         let hw = presets::cpu_pjrt();
         let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
-        let blocks =
-            vec![[64, 256, 512], [128, 512, 512], [128, 768, 768], [16, 128, 256]];
+        let blocks: Vec<Tile> =
+            [[64, 256, 512], [128, 512, 512], [128, 768, 768], [16, 128, 256]]
+                .into_iter()
+                .map(Tile::from3)
+                .collect();
         let r = compile(
             &hw,
+            OpKind::Gemm,
             DType::F32,
             &AnalyzerConfig::default_for(&hw),
             &mut prof,
@@ -356,7 +631,7 @@ mod tests {
                 ..CompileOpts::default()
             },
         );
-        let tiles: Vec<[usize; 3]> = r.library.kernels.iter().map(|k| k.l1).collect();
+        let tiles: Vec<Tile> = r.library.kernels.iter().map(|k| k.l1).collect();
         for b in blocks {
             assert!(tiles.contains(&b), "block {:?} missing", b);
         }
@@ -370,5 +645,163 @@ mod tests {
         let lib = MicroKernelLibrary::from_json(&parsed).unwrap();
         assert_eq!(lib.kernels, r.library.kernels);
         assert_eq!(lib.hw_name, "a100");
+        assert_eq!(lib.op, OpKind::Gemm);
+    }
+
+    #[test]
+    fn batched_gemm_json_round_trips_rank_four_tiles() {
+        let r = compile_op(OpKind::BatchedGemm);
+        assert!(!r.library.kernels.is_empty());
+        let parsed = Json::parse(&r.library.to_json().dump()).unwrap();
+        let lib = MicroKernelLibrary::from_json(&parsed).unwrap();
+        assert_eq!(lib.op, OpKind::BatchedGemm);
+        assert_eq!(lib.kernels, r.library.kernels);
+        assert!(lib.kernels.iter().all(|k| k.l1.rank() == 4));
+    }
+
+    #[test]
+    fn legacy_v1_gemm_json_still_loads() {
+        // A pre-versioning library file: no "version", no "op".
+        let text = r#"{"analyzer":"E: L0, L1","dtype":"f16","hw":"a100",
+            "kernels":[{"backend":1,"base_cost":1e-6,
+                        "l0":[16,8,16],"l1":[64,64,32]}]}"#;
+        let lib = MicroKernelLibrary::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(lib.op, OpKind::Gemm);
+        assert_eq!(lib.kernels.len(), 1);
+        assert_eq!(lib.kernels[0].l1, Tile::from3([64, 64, 32]));
+        assert_eq!(lib.analyzer, AnalyzerConfig::empirical(1));
+    }
+
+    #[test]
+    fn strict_loader_rejects_unknown_input() {
+        let ok = compile_tc().library.to_json().dump();
+        // unknown analyzer label
+        let bad1 = ok.replace("E: L0, L1", "E: mystery");
+        assert!(
+            MicroKernelLibrary::from_json(&Json::parse(&bad1).unwrap()).is_none()
+        );
+        // unknown schema version
+        let bad2 = ok.replace("\"version\":2", "\"version\":99");
+        assert!(
+            MicroKernelLibrary::from_json(&Json::parse(&bad2).unwrap()).is_none()
+        );
+        // unknown op
+        let bad3 = ok.replace("\"op\":\"gemm\"", "\"op\":\"softmax\"");
+        assert!(
+            MicroKernelLibrary::from_json(&Json::parse(&bad3).unwrap()).is_none()
+        );
+    }
+
+    #[test]
+    fn disk_cache_round_trips_and_skips_recompilation() {
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let dir = std::env::temp_dir().join("vortex_lib_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = CompileOpts { cache_dir: Some(dir.clone()), ..CompileOpts::default() };
+        let mut p1 = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let r1 = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut p1, &opts);
+        assert!(!r1.from_cache);
+        let fp = cache_fingerprint(&hw, &p1);
+        assert!(cache_path(&dir, &hw, OpKind::Gemm, DType::F16, &cfg, fp).exists());
+        let mut p2 = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let r2 = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut p2, &opts);
+        assert!(r2.from_cache);
+        assert_eq!(p2.queries(), 0, "cached load must not profile");
+        assert_eq!(r2.library.kernels, r1.library.kernels);
+        // A different key (op) misses the cache.
+        let mut p3 = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let r3 = compile(&hw, OpKind::Conv2d, DType::F16, &cfg, &mut p3, &opts);
+        assert!(!r3.from_cache);
+        // A different measurement source (simulator seed) must miss too:
+        // its base costs would not match the cached library's.
+        let mut p4 = SimProfiler::new(Simulator::new(hw.clone(), 6));
+        let r4 = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut p4, &opts);
+        assert!(!r4.from_cache, "seed change aliased in the cache");
+        // ...and so must a mutated hardware spec sharing the name.
+        let mut relaxed = hw.clone();
+        relaxed.min_util = 0.0;
+        let mut p5 = SimProfiler::new(Simulator::new(relaxed.clone(), 5));
+        let r5 = compile(&relaxed, OpKind::Gemm, DType::F16, &cfg, &mut p5, &opts);
+        assert!(!r5.from_cache, "hw-spec change aliased in the cache");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parallel_ranking_matches_sequential_reference() {
+        // The hoisted Phase A/B fan-out must pick exactly the winners a
+        // sequential per-pair `hybrid_cost` ranking (the pre-refactor
+        // code path) picks, for every L1 candidate.
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let lib = compile(
+            &hw,
+            OpKind::Gemm,
+            DType::F16,
+            &cfg,
+            &mut prof,
+            &CompileOpts { prune: false, ..CompileOpts::default() },
+        )
+        .library;
+
+        // Sequential reference: rank every child with L0-empirical
+        // splicing, exactly as the old loop did.
+        let set = candgen::generate(&hw, OpKind::Gemm, DType::F16);
+        let rank_cfg = AnalyzerConfig::empirical(0);
+        let mut ref_prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let mut expected: Vec<(Tile, Tile)> = Vec::new();
+        for (i, l1) in set.levels[1].iter().enumerate() {
+            let mut best: Option<(f64, usize)> = None;
+            for &ci in &set.children[1][i] {
+                let child = set.levels[0][ci];
+                let sub = Strategy::for_op(
+                    OpKind::Gemm,
+                    vec![child.tile, l1.tile],
+                    l1.backend,
+                );
+                let c = hybrid_cost(&hw, DType::F16, &sub, &rank_cfg, &mut ref_prof);
+                if best.map(|(b, _)| c < b).unwrap_or(true) {
+                    best = Some((c, ci));
+                }
+            }
+            let (_, ci) = best.unwrap();
+            expected.push((set.levels[0][ci].tile, l1.tile));
+        }
+        let got: Vec<(Tile, Tile)> =
+            lib.kernels.iter().map(|k| (k.l0, k.l1)).collect();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn conv_compile_shares_gemm_measurements() {
+        // Conv2d's formulas delegate to Gemm, so compiling its library
+        // with a profiler already warmed by the GEMM compile must issue
+        // ZERO new measurements (measurement-op cache aliasing).
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let g = compile(
+            &hw,
+            OpKind::Gemm,
+            DType::F16,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        );
+        assert!(g.profile_queries > 0);
+        let c = compile(
+            &hw,
+            OpKind::Conv2d,
+            DType::F16,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        );
+        assert_eq!(c.profile_queries, 0, "conv re-measured gemm subchains");
+        // Same strategy space + same measurements => same tile chains.
+        let tiles =
+            |l: &MicroKernelLibrary| l.kernels.iter().map(|k| (k.l0, k.l1)).collect::<Vec<_>>();
+        assert_eq!(tiles(&g.library), tiles(&c.library));
     }
 }

@@ -1,19 +1,24 @@
-//! Runtime micro-kernel selection + kernel construction (paper §6.2).
+//! Runtime micro-kernel selection + kernel construction (paper §6.2),
+//! operator-generic.
 //!
-//! Given the concrete (M, N, K) at request time, the selector evaluates
-//! every library kernel with the analytical model — the offline stage
-//! already folded empirical measurements into each kernel's `base_cost`
-//! — and picks the argmin of estimated end-to-end time, including
-//! padding waste (the padded problem is the top tile of the chain) and
-//! per-launch overhead. Grid configuration falls out of the chosen tile
-//! (`ceil(M/bm) x ceil(N/bn)` blocks, `ceil(K/bk)` reduction steps).
+//! Given the concrete [`IterSpace`] at request time (op + dims), the
+//! selector evaluates every library kernel of that op with the
+//! analytical model — the offline stage already folded empirical
+//! measurements into each kernel's `base_cost` — and picks the argmin
+//! of estimated end-to-end time, including padding waste (the padded
+//! problem is the top tile of the chain) and per-launch overhead. Grid
+//! configuration falls out of the chosen tile via the op's padding
+//! math (`ceil(dim/tile)` per axis). A Conv2d space with no conv
+//! library loaded falls back to the GEMM libraries — conv's strategy
+//! space IS the implicit-GEMM contraction space, so the tiles are
+//! directly applicable (the im2col data movement is the runtime's job).
 
 use std::time::Instant;
 
 use crate::compiler::{MicroKernel, MicroKernelLibrary};
 use crate::cost;
 use crate::hw::HwSpec;
-use crate::ir::{ceil_div, round_up, Contraction};
+use crate::ir::{ceil_div, DType, IterSpace, OpKind, Tile};
 
 /// Backend restriction (paper Fig. 16 modes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,9 +37,9 @@ pub struct Selection {
     /// Index of the micro-kernel within that library.
     pub kernel: usize,
     /// Problem shape padded up to L1-tile multiples.
-    pub padded: [usize; 3],
-    /// Launch grid: (M blocks, N blocks, K reduction steps).
-    pub grid: [usize; 3],
+    pub padded: Tile,
+    /// Launch grid: blocks per axis (reduction axis = K chain steps).
+    pub grid: Tile,
     /// Analytical end-to-end estimate, seconds.
     pub est_secs: f64,
     /// Wall-clock spent selecting (Fig. 14 "scheduling" component).
@@ -42,23 +47,25 @@ pub struct Selection {
 }
 
 /// Precomputed per-kernel constants for the allocation-free selection
-/// hot path (§Perf: one `FastKernel` evaluation is ~25 ns, so scanning
-/// a few hundred kernels stays well under the smallest kernel time).
+/// hot path (§Perf: one `FastKernel` evaluation is tens of ns, so
+/// scanning a few hundred kernels stays well under the smallest kernel
+/// time). `Tile` is `Copy`, so the whole evaluation allocates nothing.
 #[derive(Debug, Clone)]
 struct FastKernel {
     lib: usize,
     kernel: usize,
-    l1: [usize; 3],
+    op: OpKind,
+    l1: Tile,
     base_cost: f64,
-    /// dtype bytes of the library (load-slab coefficient).
-    elem_bytes: f64,
+    /// dtype of the owning library (operand-slab coefficient).
+    dtype: DType,
     /// 1 / (top-level bandwidth in B/s).
     inv_bw: f64,
-    /// level-1 unit count (parallel units the spatial grid maps onto).
+    /// level-1 unit count (parallel units the block grid maps onto).
     units: usize,
     /// launch overhead already scaled by the backend's launch factor.
     launch: f64,
-    /// true when one executable call per (M, N) block is dispatched
+    /// true when one executable call per parallel block is dispatched
     /// (the real PJRT constructor).
     per_block_launch: bool,
 }
@@ -66,35 +73,30 @@ struct FastKernel {
 impl FastKernel {
     /// Eq. 2–4 at the top (grid) level, specialized and allocation-free.
     #[inline]
-    fn estimate(&self, c: Contraction) -> (f64, [usize; 3], [usize; 3]) {
-        let grid = [
-            ceil_div(c.m, self.l1[0]),
-            ceil_div(c.n, self.l1[1]),
-            ceil_div(c.k, self.l1[2]),
-        ];
-        let padded =
-            [grid[0] * self.l1[0], grid[1] * self.l1[1], grid[2] * self.l1[2]];
-        // Eq. 2 at the grid level: load the A/B slabs of one reduction
+    fn estimate(&self, dims: Tile) -> (f64, Tile, Tile) {
+        let spec = self.op.spec();
+        let grid = dims.ceil_div(self.l1);
+        let padded = grid.mul(self.l1);
+        // Eq. 2 at the grid level: load the input slabs of one reduction
         // step, pipelined against the block subchain.
-        let t_load = (padded[0] * self.l1[2] + self.l1[2] * padded[1]) as f64
-            * self.elem_bytes
-            * self.inv_bw;
-        let t_store = (padded[0] * padded[1]) as f64 * 4.0 * self.inv_bw;
-        let n_t = grid[2] as f64;
+        let t_load =
+            spec.load_bytes_per_step(padded, self.l1, self.dtype) * self.inv_bw;
+        let t_store = spec.store_bytes(padded) * self.inv_bw;
+        let n_t = spec.reduce_iters(padded, self.l1) as f64;
         let t_temporal = t_load
             + (n_t - 1.0) * t_load.max(self.base_cost)
             + self.base_cost
             + t_store;
         // Eq. 3.
-        let f_parallel = ceil_div(grid[0] * grid[1], self.units) as f64;
-        let launches =
-            if self.per_block_launch { (grid[0] * grid[1]) as f64 } else { 1.0 };
+        let blocks = spec.spatial_iters(padded, self.l1);
+        let f_parallel = ceil_div(blocks, self.units) as f64;
+        let launches = if self.per_block_launch { blocks as f64 } else { 1.0 };
         (f_parallel * t_temporal + self.launch * launches, padded, grid)
     }
 }
 
-/// The runtime selector: one or more libraries (one per backend/dtype)
-/// over a single hardware target.
+/// The runtime selector: one or more libraries (one per op x backend x
+/// dtype) over a single hardware target.
 pub struct Selector {
     pub hw: HwSpec,
     pub libraries: Vec<MicroKernelLibrary>,
@@ -121,9 +123,10 @@ impl Selector {
                 fast.push(FastKernel {
                     lib: li,
                     kernel: ki,
+                    op: lib.op,
                     l1: k.l1,
                     base_cost: k.base_cost,
-                    elem_bytes: lib.dtype.bytes() as f64,
+                    dtype: lib.dtype,
                     inv_bw: 1.0 / top_bw,
                     units,
                     launch: launch_overhead * hw.backends[k.backend].launch_factor,
@@ -134,25 +137,42 @@ impl Selector {
         Selector { hw, libraries, launch_overhead, fast }
     }
 
-    /// Estimated end-to-end seconds for one kernel on one problem.
-    pub fn estimate(&self, lib_idx: usize, k: &MicroKernel, c: Contraction) -> (f64, [usize; 3], [usize; 3]) {
+    /// True when at least one loaded library serves `op` natively.
+    pub fn has_op(&self, op: OpKind) -> bool {
+        self.libraries.iter().any(|l| l.op == op)
+    }
+
+    /// The op a space is actually served with: exact match when a
+    /// native library exists, otherwise the op's measurement alias —
+    /// an op whose formulas exactly delegate (Conv2d → Gemm via
+    /// implicit GEMM) is servable by the alias's tiles. Ops with no
+    /// alias and no library make select() return None.
+    fn serving_op(&self, op: OpKind) -> OpKind {
+        if self.has_op(op) {
+            op
+        } else {
+            op.spec().measurement_op()
+        }
+    }
+
+    /// Estimated end-to-end seconds for one kernel on one problem —
+    /// the readable reference the fast path must agree with.
+    pub fn estimate(
+        &self,
+        lib_idx: usize,
+        k: &MicroKernel,
+        space: IterSpace,
+    ) -> (f64, Tile, Tile) {
         let lib = &self.libraries[lib_idx];
-        let padded = [
-            round_up(c.m, k.l1[0]),
-            round_up(c.n, k.l1[1]),
-            round_up(c.k, k.l1[2]),
-        ];
-        let grid = [
-            ceil_div(c.m, k.l1[0]),
-            ceil_div(c.n, k.l1[1]),
-            ceil_div(c.k, k.l1[2]),
-        ];
-        let chain = k.chain(padded);
+        let spec = lib.op.spec();
+        let padded = space.dims.round_up_to(k.l1);
+        let grid = space.dims.ceil_div(k.l1);
+        let chain = k.chain(lib.op, padded);
         // On GPU/CPU targets one launch covers the whole grid; on the
         // real PJRT path the constructor dispatches one executable call
-        // per (M, N) block, so the overhead scales with the grid.
+        // per parallel block, so the overhead scales with the grid.
         let launches = if self.hw.name == "cpu_pjrt" {
-            (grid[0] * grid[1]) as f64
+            spec.spatial_iters(padded, k.l1) as f64
         } else {
             1.0
         };
@@ -163,31 +183,26 @@ impl Selector {
         (secs, padded, grid)
     }
 
-    /// Select the best micro-kernel for a runtime shape (§6.2) via the
+    /// Select the best micro-kernel for a runtime space (§6.2) via the
     /// precomputed fast path (no allocation in the scan loop).
-    pub fn select(&self, c: Contraction, mode: HwMode) -> Option<Selection> {
+    pub fn select<S: Into<IterSpace>>(&self, space: S, mode: HwMode) -> Option<Selection> {
+        let space = space.into();
         let t0 = Instant::now();
-        let mut best: Option<(f64, &FastKernel, [usize; 3], [usize; 3])> = None;
-        match mode {
-            HwMode::Adaptive => {
-                for fk in &self.fast {
-                    let (secs, padded, grid) = fk.estimate(c);
-                    if best.as_ref().map(|b| secs < b.0).unwrap_or(true) {
-                        best = Some((secs, fk, padded, grid));
-                    }
+        let op = self.serving_op(space.op);
+        let mut best: Option<(f64, &FastKernel, Tile, Tile)> = None;
+        for fk in &self.fast {
+            if fk.op != op {
+                continue;
+            }
+            if let HwMode::Only(name) = mode {
+                let k = &self.libraries[fk.lib].kernels[fk.kernel];
+                if self.hw.backends[k.backend].name != name {
+                    continue;
                 }
             }
-            HwMode::Only(name) => {
-                for fk in &self.fast {
-                    let k = &self.libraries[fk.lib].kernels[fk.kernel];
-                    if self.hw.backends[k.backend].name != name {
-                        continue;
-                    }
-                    let (secs, padded, grid) = fk.estimate(c);
-                    if best.as_ref().map(|b| secs < b.0).unwrap_or(true) {
-                        best = Some((secs, fk, padded, grid));
-                    }
-                }
+            let (secs, padded, grid) = fk.estimate(space.dims);
+            if best.as_ref().map(|b| secs < b.0).unwrap_or(true) {
+                best = Some((secs, fk, padded, grid));
             }
         }
         let dt = t0.elapsed().as_secs_f64();
@@ -204,6 +219,11 @@ impl Selector {
     pub fn kernel(&self, sel: &Selection) -> &MicroKernel {
         &self.libraries[sel.lib].kernels[sel.kernel]
     }
+
+    /// The full runtime strategy chain a selection executes.
+    pub fn chain(&self, sel: &Selection) -> crate::cost::Strategy {
+        self.kernel(sel).chain(self.libraries[sel.lib].op, sel.padded)
+    }
 }
 
 #[cfg(test)]
@@ -212,7 +232,7 @@ mod tests {
     use crate::compiler::{compile, CompileOpts};
     use crate::cost::hybrid::AnalyzerConfig;
     use crate::hw::presets;
-    use crate::ir::DType;
+    use crate::ir::{Contraction, DType};
     use crate::profiler::SimProfiler;
     use crate::sim::Simulator;
     use crate::util::prop::{forall, prop_assert};
@@ -221,10 +241,24 @@ mod tests {
         let hw = presets::a100();
         let cfg = AnalyzerConfig::default_for(&hw);
         let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
-        let f32lib =
-            compile(&hw, DType::F32, &cfg, &mut prof, &CompileOpts::default()).library;
-        let f16lib =
-            compile(&hw, DType::F16, &cfg, &mut prof, &CompileOpts::default()).library;
+        let f32lib = compile(
+            &hw,
+            OpKind::Gemm,
+            DType::F32,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library;
+        let f16lib = compile(
+            &hw,
+            OpKind::Gemm,
+            DType::F16,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library;
         Selector::new(hw, vec![f32lib, f16lib])
     }
 
@@ -294,11 +328,36 @@ mod tests {
             let c = gemm(m, n, k);
             let sel = s.select(c, HwMode::Adaptive).unwrap();
             let kern = s.kernel(&sel);
-            let (ref_secs, ref_padded, ref_grid) = s.estimate(sel.lib, kern, c);
+            let (ref_secs, ref_padded, ref_grid) =
+                s.estimate(sel.lib, kern, IterSpace::from(c));
             assert!((ref_secs - sel.est_secs).abs() < 1e-12 * ref_secs.max(1e-30));
             assert_eq!(ref_padded, sel.padded);
             assert_eq!(ref_grid, sel.grid);
         }
+    }
+
+    #[test]
+    fn conv_space_falls_back_to_gemm_library() {
+        let s = selector_a100();
+        assert!(!s.has_op(OpKind::Conv2d));
+        let space = IterSpace {
+            op: OpKind::Conv2d,
+            dims: Tile::from3([1352, 128, 576]),
+            dtype: DType::F32,
+        };
+        let sel = s.select(space, HwMode::Adaptive).unwrap();
+        // Same contraction dims through a gemm space must pick the same
+        // kernel: conv's strategy space IS the contraction space.
+        let g = s.select(gemm(1352, 128, 576), HwMode::Adaptive).unwrap();
+        assert_eq!((sel.lib, sel.kernel), (g.lib, g.kernel));
+        assert_eq!(sel.est_secs, g.est_secs);
+    }
+
+    #[test]
+    fn batched_space_without_library_returns_none() {
+        let s = selector_a100();
+        let space = IterSpace::batched_gemm(8, 128, 128, 64, DType::F16);
+        assert!(s.select(space, HwMode::Adaptive).is_none());
     }
 
     #[test]
@@ -323,6 +382,55 @@ mod tests {
                         && sel.padded[1] - n < kern.l1[1]
                         && sel.padded[2] - k < kern.l1[2],
                     format!("padding exceeds a tile: {:?} for {:?}", sel.padded, (m, n, k)),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_estimate_monotone_in_problem_volume_for_fixed_tiles() {
+        // Satellite: with the kernel (tiles) held fixed, the selection
+        // estimate must be monotone in problem volume — an elementwise-
+        // larger problem can never be estimated cheaper.
+        let s = selector_a100();
+        let kernels: Vec<(usize, MicroKernel)> = s
+            .libraries
+            .iter()
+            .enumerate()
+            .flat_map(|(li, l)| l.kernels.iter().map(move |k| (li, k.clone())))
+            .collect();
+        forall(
+            "estimate-monotone-in-volume",
+            80,
+            0x1DEA,
+            |r, size| {
+                let ki = r.usize(0, kernels.len() - 1);
+                let m = r.usize(1, 1 + 64 * size);
+                let n = r.usize(1, 2048);
+                let k = r.usize(1, 2048);
+                let grow = (
+                    m + r.usize(0, 512),
+                    n + r.usize(0, 512),
+                    k + r.usize(0, 512),
+                );
+                (ki, (m, n, k), grow)
+            },
+            |&(ki, (m, n, k), (gm, gn, gk))| {
+                let (li, ref kern) = kernels[ki];
+                let dt = s.libraries[li].dtype;
+                let (small, _, _) =
+                    s.estimate(li, kern, IterSpace::gemm(m, n, k, dt));
+                let (large, _, _) =
+                    s.estimate(li, kern, IterSpace::gemm(gm, gn, gk, dt));
+                prop_assert(
+                    large >= small,
+                    format!(
+                        "est not monotone: {:?} -> {} vs {:?} -> {}",
+                        (m, n, k),
+                        small,
+                        (gm, gn, gk),
+                        large
+                    ),
                 )
             },
         );

@@ -65,9 +65,8 @@ pub struct SimEngine {
 
 impl Engine for SimEngine {
     fn execute(&mut self, c: Contraction, sel: &Selection, selector: &Selector) -> f64 {
-        let k = selector.kernel(sel);
         let lib = &selector.libraries[sel.lib];
-        self.sim.execute(lib.dtype, &k.chain(sel.padded))
+        self.sim.execute(lib.dtype, &selector.chain(sel))
             * (1.0 + 0.0 * c.flops()) // service time is the padded chain
     }
     fn name(&self) -> &'static str {
@@ -205,8 +204,15 @@ mod tests {
         let hw = presets::a100();
         let cfg = AnalyzerConfig::default_for(&hw);
         let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
-        let lib =
-            compile(&hw, DType::F32, &cfg, &mut prof, &CompileOpts::default()).library;
+        let lib = compile(
+            &hw,
+            crate::ir::OpKind::Gemm,
+            DType::F32,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library;
         let sel = Selector::new(hw.clone(), vec![lib]);
         (sel, SimEngine { sim: Simulator::new(hw, 5) })
     }

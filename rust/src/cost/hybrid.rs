@@ -57,6 +57,37 @@ impl AnalyzerConfig {
             }
         }
     }
+
+    /// Strict inverse of [`label`](Self::label). Empirical levels must
+    /// be the contiguous prefix "L0, L1, ..."; anything else is `None`
+    /// (the library loader refuses to guess at unknown analyzers).
+    pub fn parse_label(s: &str) -> Option<AnalyzerConfig> {
+        if s == "-" {
+            return Some(AnalyzerConfig::analytical_only());
+        }
+        let rest = s.strip_prefix("E: ")?;
+        let mut expect = 0usize;
+        for part in rest.split(", ") {
+            let n: usize = part.strip_prefix('L')?.parse().ok()?;
+            if n != expect {
+                return None;
+            }
+            expect += 1;
+        }
+        if expect == 0 {
+            None
+        } else {
+            Some(AnalyzerConfig::empirical(expect - 1))
+        }
+    }
+
+    /// Filesystem-safe form for library-cache file names.
+    pub fn slug(&self) -> String {
+        match self.empirical_up_to {
+            None => "analytical".to_string(),
+            Some(e) => format!("e{}", e),
+        }
+    }
 }
 
 /// Estimate the cost of a full strategy chain under the hybrid scheme.
@@ -104,6 +135,23 @@ mod tests {
             "E: L0"
         );
         assert_eq!(AnalyzerConfig::analytical_only().label(), "-");
+    }
+
+    #[test]
+    fn label_parse_round_trip_and_strictness() {
+        for cfg in [
+            AnalyzerConfig::analytical_only(),
+            AnalyzerConfig::empirical(0),
+            AnalyzerConfig::empirical(1),
+            AnalyzerConfig::empirical(2),
+        ] {
+            assert_eq!(AnalyzerConfig::parse_label(&cfg.label()), Some(cfg));
+        }
+        for bad in ["", "E: ", "E: L1", "E: L0, L2", "E: L0,L1", "empirical", "E: X0"] {
+            assert_eq!(AnalyzerConfig::parse_label(bad), None, "{:?}", bad);
+        }
+        assert_eq!(AnalyzerConfig::empirical(1).slug(), "e1");
+        assert_eq!(AnalyzerConfig::analytical_only().slug(), "analytical");
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Analytical cost model (paper §5.2, Eqs. 2–4) and the hybrid
 //! analytical–empirical analyzer.
 //!
-//! A *strategy* is a chain of tiles, one per hierarchy level, innermost
+//! A *strategy* is a chain of tiles over one operator's iteration space
+//! ([`crate::ir::OpSpec`]), one tile per hierarchy level, innermost
 //! first: `[t0, t1, tN]` where `tN` is the (padded) problem shape. The
 //! model recurses bottom-up:
 //!
@@ -12,36 +13,50 @@
 //! Cost(L)       = F_parallel(L) * T_temporal(L)                (Eq. 4)
 //! ```
 //!
-//! At level 0 the recursion bottoms out in the ISA instruction stream
-//! (MMA / FMA / pallas dot), costed from the backend's per-unit peak.
-//! The double-buffered pipeline shape of Eq. 2 (next load overlapping
-//! current compute) is exactly what the `max()` expresses.
+//! Loop extents and per-step traffic come from the op: batch + spatial
+//! axes feed the parallel loop (Eq. 3), the reduction axis feeds the
+//! temporal loop (Eq. 2), and the op's operand formulas give the
+//! load/store bytes. At level 0 the recursion bottoms out in the ISA
+//! instruction stream (MMA / FMA / pallas dot), costed from the
+//! backend's per-unit peak. The double-buffered pipeline shape of Eq. 2
+//! (next load overlapping current compute) is exactly what the `max()`
+//! expresses.
 
 pub mod hybrid;
 
 use crate::hw::{Backend, HwSpec};
-use crate::ir::{ceil_div, DType};
+use crate::ir::{ceil_div, DType, OpKind, Tile};
 
-/// A full strategy chain: `tiles[l]` is the (m, n, k) tile at level l;
+/// A full strategy chain: `tiles[l]` is the op-axes tile at level l;
 /// `tiles[last]` is the padded problem shape. All levels use `backend`.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Strategy {
-    pub tiles: Vec<[usize; 3]>,
+    pub op: OpKind,
+    pub tiles: Vec<Tile>,
     pub backend: usize,
 }
 
 impl Strategy {
+    /// Contraction-view (GEMM) convenience constructor — the historical
+    /// `[m, n, k]` chain shape used by the baselines and benches.
     pub fn new(tiles: Vec<[usize; 3]>, backend: usize) -> Strategy {
-        Strategy { tiles, backend }
+        Strategy::for_op(
+            OpKind::Gemm,
+            tiles.into_iter().map(Tile::from3).collect(),
+            backend,
+        )
+    }
+
+    pub fn for_op(op: OpKind, tiles: Vec<Tile>, backend: usize) -> Strategy {
+        debug_assert!(tiles.iter().all(|t| t.rank() == op.spec().rank()));
+        Strategy { op, tiles, backend }
     }
 
     /// Integer-multiple nesting sanity check (levels need not divide the
     /// top problem shape — the constructor pads there — but offline
     /// levels must nest exactly).
     pub fn is_nested(&self) -> bool {
-        self.tiles.windows(2).all(|w| {
-            w[0].iter().zip(w[1].iter()).all(|(&c, &p)| c > 0 && p % c == 0)
-        })
+        self.tiles.windows(2).all(|w| w[1].is_multiple_of(w[0]))
     }
 }
 
@@ -54,27 +69,22 @@ pub struct CostReport {
 }
 
 /// Level-0 compute cost: the tile's FLOPs at the backend's per-L0-unit
-/// peak, padded up to ISA granularity (MMA-shape padding, §6.2).
-pub fn l0_compute_secs(hw: &HwSpec, backend: &Backend, tile: [usize; 3]) -> f64 {
+/// peak, padded up to the op-lifted ISA granularity (MMA-shape padding,
+/// §6.2; batch axes have granularity 1).
+pub fn l0_compute_secs(
+    hw: &HwSpec,
+    backend: &Backend,
+    op: OpKind,
+    tile: Tile,
+) -> f64 {
+    let isa = op.spec().isa_tile(backend.isa);
     let padded: f64 = tile
         .iter()
-        .zip(backend.isa.iter())
+        .zip(isa.iter())
         .map(|(&t, &g)| (ceil_div(t.max(1), g) * g) as f64)
         .product();
     let flops = 2.0 * padded;
     flops / (backend.peak_per_l0_unit(hw) * 1e9)
-}
-
-/// Bytes loaded per reduction step at a level: the A and B slabs of the
-/// child-k extent across the parent's spatial extent.
-fn load_bytes_per_step(parent: [usize; 3], child_k: usize, dtype: DType) -> f64 {
-    let [m, n, _] = parent;
-    ((m * child_k + child_k * n) * dtype.bytes()) as f64
-}
-
-/// Store bytes at a level: the C tile written back once (f32 acc).
-fn store_bytes(parent: [usize; 3]) -> f64 {
-    (parent[0] * parent[1] * 4) as f64
 }
 
 /// Evaluate Eqs. 2–4 for a strategy on a hardware target.
@@ -90,6 +100,7 @@ pub fn cost(
 ) -> CostReport {
     debug_assert!(strat.is_nested(), "strategy tiles must nest: {:?}", strat);
     let backend = &hw.backends[strat.backend];
+    let spec = strat.op.spec();
     let mut per_level = Vec::with_capacity(strat.tiles.len());
 
     // Level 0: instruction stream, fragment loads pipelined with issue.
@@ -97,10 +108,10 @@ pub fn cost(
         Some(secs) => secs,
         None => {
             let t0 = strat.tiles[0];
-            let frag_bytes =
-                ((t0[0] * t0[2] + t0[2] * t0[1]) * dtype.bytes()) as f64;
+            // Operand fragments of one full L0 traversal.
+            let frag_bytes = spec.load_bytes_per_step(t0, t0, dtype);
             let t_load = frag_bytes / (hw.level(0).load_bw_gbps * 1e9);
-            let compute = l0_compute_secs(hw, backend, t0);
+            let compute = l0_compute_secs(hw, backend, strat.op, t0);
             compute.max(t_load)
         }
     };
@@ -121,22 +132,22 @@ pub fn cost_from(
     start_level: usize,
     mut cost_below: f64,
 ) -> CostReport {
+    let spec = strat.op.spec();
     let mut per_level = Vec::with_capacity(strat.tiles.len() - start_level);
     for l in start_level..strat.tiles.len() {
         let parent = strat.tiles[l];
         let child = strat.tiles[l - 1];
-        // Contraction view: spatial child iterations are parallel over
-        // this level's child units; reduction iterations are temporal.
-        let spatial_iters =
-            ceil_div(parent[0], child[0]) * ceil_div(parent[1], child[1]);
-        let reduce_iters = ceil_div(parent[2], child[2]);
+        // Batch + spatial child iterations are parallel over this
+        // level's child units; reduction iterations are temporal.
+        let spatial_iters = spec.spatial_iters(parent, child);
+        let reduce_iters = spec.reduce_iters(parent, child);
         let units = hw.level(l - 1).unit_count as usize;
 
         let bw = hw.level(l).load_bw_gbps * 1e9;
-        let t_load = load_bytes_per_step(parent, child[2], dtype) / bw;
-        let t_store = store_bytes(parent) / bw;
+        let t_load = spec.load_bytes_per_step(parent, child, dtype) / bw;
+        let t_store = spec.store_bytes(parent) / bw;
 
-        // Eq. 3: parallel amplification (spatial tiles over units).
+        // Eq. 3: parallel amplification (batch/spatial tiles over units).
         let f_parallel = ceil_div(spatial_iters, units) as f64;
 
         // Eq. 2 over the reduction (temporal) loop.
@@ -151,11 +162,17 @@ pub fn cost_from(
     CostReport { total_secs: cost_below, per_level_secs: per_level }
 }
 
-/// Simple whole-problem roofline: max(compute-bound, memory-bound).
-pub fn roofline_secs(hw: &HwSpec, backend: &Backend, c: crate::ir::Contraction) -> f64 {
-    let compute = c.flops() / (backend.peak_gflops * 1e9);
+/// Simple whole-problem roofline: max(compute-bound, memory-bound),
+/// with FLOPs and minimum DRAM traffic supplied by the op.
+pub fn roofline_secs(
+    hw: &HwSpec,
+    backend: &Backend,
+    space: impl Into<crate::ir::IterSpace>,
+) -> f64 {
+    let space = space.into();
+    let compute = space.flops() / (backend.peak_gflops * 1e9);
     let top = hw.levels.last().unwrap();
-    let memory = c.min_bytes() / (top.load_bw_gbps * 1e9);
+    let memory = space.min_bytes() / (top.load_bw_gbps * 1e9);
     compute.max(memory)
 }
 
@@ -169,6 +186,19 @@ mod tests {
         let hw = presets::a100();
         let bi = hw.backend_idx("tensor_core_f16").unwrap();
         (hw, Strategy::new(vec![[16, 8, 16], [64, 64, 32], problem], bi))
+    }
+
+    fn batched_strategy(hw: &HwSpec, b: usize, problem: [usize; 3]) -> Strategy {
+        let bi = hw.backend_idx("tensor_core_f16").unwrap();
+        Strategy::for_op(
+            OpKind::BatchedGemm,
+            vec![
+                Tile::new(&[1, 16, 8, 16]),
+                Tile::new(&[1, 64, 64, 32]),
+                Tile::new(&[b, problem[0], problem[1], problem[2]]),
+            ],
+            bi,
+        )
     }
 
     #[test]
@@ -230,8 +260,10 @@ mod tests {
     fn isa_padding_penalizes_misaligned_l0() {
         let hw = presets::a100();
         let tc = hw.backend("tensor_core_f16").unwrap();
-        let aligned = l0_compute_secs(&hw, tc, [16, 8, 16]);
-        let misaligned = l0_compute_secs(&hw, tc, [17, 9, 17]);
+        let aligned =
+            l0_compute_secs(&hw, tc, OpKind::Gemm, Tile::from3([16, 8, 16]));
+        let misaligned =
+            l0_compute_secs(&hw, tc, OpKind::Gemm, Tile::from3([17, 9, 17]));
         assert!(misaligned > 4.0 * aligned);
     }
 
@@ -244,5 +276,23 @@ mod tests {
         assert_eq!(c.per_level_secs.len(), 3);
         assert!(c.per_level_secs[2] >= c.per_level_secs[1]);
         assert_eq!(c.per_level_secs[2], c.total_secs);
+    }
+
+    #[test]
+    fn batched_gemm_costs_like_batch_of_gemms() {
+        // A batch-1 batched strategy must price identically to the same
+        // GEMM chain (the op abstraction adds no phantom cost), and a
+        // batch-B problem over a batch-1 tile must cost more than one
+        // batch (Eq. 3 amplification over the batch axis).
+        let hw = presets::a100();
+        let s1 = batched_strategy(&hw, 1, [1024, 1024, 512]);
+        let bi = s1.backend;
+        let g = Strategy::new(vec![[16, 8, 16], [64, 64, 32], [1024, 1024, 512]], bi);
+        let c_b1 = cost(&hw, DType::F16, &s1, None).total_secs;
+        let c_g = cost(&hw, DType::F16, &g, None).total_secs;
+        assert!((c_b1 - c_g).abs() < 1e-12 * c_g, "{} vs {}", c_b1, c_g);
+        let c_b8 = cost(&hw, DType::F16, &batched_strategy(&hw, 8, [1024, 1024, 512]), None)
+            .total_secs;
+        assert!(c_b8 > 4.0 * c_b1, "{} !> 4x {}", c_b8, c_b1);
     }
 }

@@ -13,7 +13,14 @@
 //! stage descriptors) that the bottom-up constructor instantiates with
 //! concrete tiles.
 
+pub mod op;
+
 use std::fmt;
+
+pub use op::{
+    Axis, AxisRole, BatchedGemm, Conv2d, Gemm, IterSpace, OpKind, OpSpec, Tile,
+    MAX_AXES,
+};
 
 /// Element type of a tensor program.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -69,6 +76,8 @@ pub enum LoopKind {
 pub enum TensorProgram {
     /// C[M,N] = A[M,K] @ B[K,N]
     Gemm { m: usize, n: usize, k: usize, dtype: DType },
+    /// C[B,M,N] = A[B,M,K] @ B[B,K,N] (independent per-batch operands).
+    BatchedGemm { b: usize, m: usize, n: usize, k: usize, dtype: DType },
     /// NHWC valid conv: x[N,H,W,Cin] * w[KH,KW,Cin,Cout], stride 1.
     Conv2d {
         n: usize,
@@ -112,29 +121,39 @@ impl TensorProgram {
     pub fn dtype(&self) -> DType {
         match *self {
             TensorProgram::Gemm { dtype, .. } => dtype,
+            TensorProgram::BatchedGemm { dtype, .. } => dtype,
             TensorProgram::Conv2d { dtype, .. } => dtype,
         }
     }
 
-    /// Canonicalize to the contraction view (implicit GEMM for conv).
-    pub fn contraction(&self) -> Contraction {
+    /// The operator-generic iteration space this program optimizes over
+    /// — the input of the candgen → compile → select pipeline.
+    pub fn space(&self) -> IterSpace {
         match *self {
-            TensorProgram::Gemm { m, n, k, dtype } => Contraction { m, n, k, dtype },
+            TensorProgram::Gemm { m, n, k, dtype } => IterSpace::gemm(m, n, k, dtype),
+            TensorProgram::BatchedGemm { b, m, n, k, dtype } => {
+                IterSpace::batched_gemm(b, m, n, k, dtype)
+            }
             TensorProgram::Conv2d { n, h, w, cin, cout, kh, kw, dtype } => {
                 let oh = h.saturating_sub(kh) + 1;
                 let ow = w.saturating_sub(kw) + 1;
-                Contraction {
-                    m: n * oh * ow,
-                    n: cout,
-                    k: kh * kw * cin,
+                IterSpace {
+                    op: OpKind::Conv2d,
+                    dims: Tile::new(&[n * oh * ow, cout, kh * kw * cin]),
                     dtype,
                 }
             }
         }
     }
 
+    /// Canonicalize to the flat contraction view (implicit GEMM for
+    /// conv; batch folds into M) — the GEMM-only baselines' lens.
+    pub fn contraction(&self) -> Contraction {
+        self.space().contraction()
+    }
+
     pub fn flops(&self) -> f64 {
-        self.contraction().flops()
+        self.space().flops()
     }
 
     /// Human-readable id used in logs and benchmark CSVs.
@@ -143,6 +162,9 @@ impl TensorProgram {
             TensorProgram::Gemm { m, n, k, dtype } => {
                 format!("gemm_m{}n{}k{}_{}", m, n, k, dtype)
             }
+            TensorProgram::BatchedGemm { b, m, n, k, dtype } => {
+                format!("bgemm_b{}m{}n{}k{}_{}", b, m, n, k, dtype)
+            }
             TensorProgram::Conv2d { n, h, w, cin, cout, kh, kw, dtype } => format!(
                 "conv_n{}h{}w{}c{}f{}k{}x{}_{}",
                 n, h, w, cin, cout, kh, kw, dtype
@@ -150,20 +172,31 @@ impl TensorProgram {
         }
     }
 
-    /// Loop classification at one hierarchy level (Algorithm 1 sets).
-    /// In the contraction view: M/N tiles are parallel at the top two
-    /// levels and temporal-spatial at L0; K is always temporal-reduction.
-    pub fn loop_kinds(&self, level: usize) -> [(char, LoopKind); 3] {
-        let spatial = if level == 0 {
-            LoopKind::TemporalSpatial
-        } else {
-            LoopKind::Parallel
-        };
-        [
-            ('m', spatial),
-            ('n', spatial),
-            ('k', LoopKind::TemporalReduction),
-        ]
+    /// Loop classification at one hierarchy level (Algorithm 1 sets),
+    /// derived from the op's axis roles: batch axes are always parallel,
+    /// spatial axes are parallel above L0 and temporal-spatial at L0,
+    /// the reduction axis is always temporal-reduction.
+    pub fn loop_kinds(&self, level: usize) -> Vec<(char, LoopKind)> {
+        self.space()
+            .op
+            .spec()
+            .axes()
+            .iter()
+            .map(|a| {
+                let kind = match a.role {
+                    AxisRole::Reduction => LoopKind::TemporalReduction,
+                    AxisRole::Batch => LoopKind::Parallel,
+                    AxisRole::Spatial => {
+                        if level == 0 {
+                            LoopKind::TemporalSpatial
+                        } else {
+                            LoopKind::Parallel
+                        }
+                    }
+                };
+                (a.name, kind)
+            })
+            .collect()
     }
 }
 
@@ -382,6 +415,20 @@ mod tests {
         assert_eq!(ceil_div(9, 8), 2);
         assert!((padding_waste([5, 8, 8], [8, 8, 8]) - (1.0 - 5.0 / 8.0)).abs() < 1e-12);
         assert_eq!(padding_waste([8, 8, 8], [8, 8, 8]), 0.0);
+    }
+
+    #[test]
+    fn batched_gemm_space_and_batch_loops_are_parallel() {
+        let p = TensorProgram::BatchedGemm { b: 12, m: 64, n: 64, k: 32, dtype: DType::F16 };
+        let s = p.space();
+        assert_eq!(s.op, OpKind::BatchedGemm);
+        assert_eq!(s.dims, Tile::new(&[12, 64, 64, 32]));
+        assert_eq!(p.flops(), 2.0 * 12.0 * 64.0 * 64.0 * 32.0);
+        // batch axis parallel at EVERY level, including L0
+        let kinds = p.loop_kinds(0);
+        assert_eq!(kinds[0], ('b', LoopKind::Parallel));
+        assert_eq!(kinds[1], ('m', LoopKind::TemporalSpatial));
+        assert_eq!(kinds[3], ('k', LoopKind::TemporalReduction));
     }
 
     #[test]

@@ -1,0 +1,614 @@
+//! Operator-generic strategy space: the [`OpSpec`] abstraction.
+//!
+//! The paper's hierarchization recursion (Algorithm 1/2, Eqs. 2–4) is
+//! not GEMM-specific: any operator whose iteration space factors into
+//! batch / spatial / reduction axes can be tiled level-by-level. This
+//! module owns everything that *was* hardwired to `[usize; 3]` (M, N, K)
+//! tiles:
+//!
+//! * [`Tile`] — a fixed-capacity, rank-tagged tile over an op's axes
+//!   (allocation-free `Copy` type, so the runtime selection hot path
+//!   stays allocation-free).
+//! * [`OpSpec`] — per-operator iteration-space rank, axis roles, FLOP
+//!   count, working-set formula, per-level load/store traffic, padding /
+//!   grid math and the AOT artifact-name convention.
+//! * [`OpKind`] + the concrete [`Gemm`], [`BatchedGemm`], [`Conv2d`]
+//!   ops — `OpKind` is the compact `Copy` handle stored in candidates,
+//!   strategies and libraries; `.spec()` dispatches to the behavior.
+//! * [`IterSpace`] — a runtime problem: (op, concrete dims, dtype).
+//!
+//! Adding a new operator = implementing `OpSpec` for a unit struct and
+//! registering it in `OpKind`; candgen, the cost model, the compiler,
+//! the selector and the simulator pick it up unchanged.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+use super::{ceil_div, round_up, Contraction, DType};
+
+/// Maximum iteration-space rank any op may declare.
+pub const MAX_AXES: usize = 4;
+
+/// Role of one iteration-space axis in the tiling recursion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AxisRole {
+    /// Embarrassingly parallel, no operand reuse across it (batch).
+    Batch,
+    /// Output-tiling axis: parallel at upper levels, temporal-spatial
+    /// at L0 (M/N of a contraction).
+    Spatial,
+    /// Serial accumulation axis (K of a contraction).
+    Reduction,
+}
+
+/// One named axis of an op's iteration space.
+#[derive(Debug, Clone, Copy)]
+pub struct Axis {
+    pub name: char,
+    pub role: AxisRole,
+}
+
+const fn ax(name: char, role: AxisRole) -> Axis {
+    Axis { name, role }
+}
+
+// ---------------------------------------------------------------------------
+// Tile
+// ---------------------------------------------------------------------------
+
+/// A tile over an op's axes: rank-tagged, fixed capacity, `Copy`.
+///
+/// Unused trailing dims are always 1, so `Eq`/`Hash`/`Ord` behave as if
+/// only the first `rank` dims existed. For rank-3 (contraction-view)
+/// tiles the lexicographic order matches the old `[usize; 3]` order.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Tile {
+    rank: u8,
+    dims: [usize; MAX_AXES],
+}
+
+impl Tile {
+    pub fn new(dims: &[usize]) -> Tile {
+        assert!(
+            (1..=MAX_AXES).contains(&dims.len()),
+            "tile rank {} out of range",
+            dims.len()
+        );
+        let mut d = [1usize; MAX_AXES];
+        d[..dims.len()].copy_from_slice(dims);
+        Tile { rank: dims.len() as u8, dims: d }
+    }
+
+    /// All-ones tile of the given rank (multiplicative identity).
+    pub fn ones(rank: usize) -> Tile {
+        assert!((1..=MAX_AXES).contains(&rank));
+        Tile { rank: rank as u8, dims: [1; MAX_AXES] }
+    }
+
+    /// Rank-3 (contraction-view) constructor, the old `[m, n, k]`.
+    pub fn from3(d: [usize; 3]) -> Tile {
+        Tile::new(&d)
+    }
+
+    /// Back to `[m, n, k]`; panics on non-contraction ranks.
+    pub fn to3(self) -> [usize; 3] {
+        assert_eq!(self.rank, 3, "tile {} is not rank 3", self);
+        [self.dims[0], self.dims[1], self.dims[2]]
+    }
+
+    pub fn rank(self) -> usize {
+        self.rank as usize
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims[..self.rank as usize]
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, usize> {
+        self.dims().iter()
+    }
+
+    /// Product of all dims as f64 (iteration count).
+    pub fn product_f64(self) -> f64 {
+        self.dims().iter().map(|&d| d as f64).product()
+    }
+
+    /// Elementwise `ceil(self / t)` — the launch grid over tile `t`.
+    pub fn ceil_div(self, t: Tile) -> Tile {
+        self.zip_map(t, ceil_div)
+    }
+
+    /// Elementwise product (grid x tile = padded problem).
+    pub fn mul(self, t: Tile) -> Tile {
+        self.zip_map(t, |a, b| a * b)
+    }
+
+    /// Elementwise round-up to multiples of `t` (padding).
+    pub fn round_up_to(self, t: Tile) -> Tile {
+        self.zip_map(t, round_up)
+    }
+
+    /// True when every dim of `self` is a positive integer multiple of
+    /// the corresponding dim of `child`.
+    pub fn is_multiple_of(self, child: Tile) -> bool {
+        self.rank == child.rank
+            && self
+                .dims()
+                .iter()
+                .zip(child.dims())
+                .all(|(&p, &c)| c > 0 && p % c == 0)
+    }
+
+    fn zip_map(self, t: Tile, f: impl Fn(usize, usize) -> usize) -> Tile {
+        assert_eq!(self.rank, t.rank, "rank mismatch: {} vs {}", self, t);
+        let mut out = self;
+        for i in 0..self.rank as usize {
+            out.dims[i] = f(self.dims[i], t.dims[i]);
+        }
+        out
+    }
+}
+
+impl Index<usize> for Tile {
+    type Output = usize;
+    fn index(&self, i: usize) -> &usize {
+        &self.dims()[i]
+    }
+}
+
+impl IndexMut<usize> for Tile {
+    fn index_mut(&mut self, i: usize) -> &mut usize {
+        assert!(i < self.rank as usize, "axis {} out of rank {}", i, self.rank);
+        &mut self.dims[i]
+    }
+}
+
+impl fmt::Debug for Tile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.dims()).finish()
+    }
+}
+
+impl fmt::Display for Tile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, d) in self.dims().iter().enumerate() {
+            if i > 0 {
+                f.write_str("x")?;
+            }
+            write!(f, "{}", d)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OpKind + OpSpec
+// ---------------------------------------------------------------------------
+
+/// Compact operator handle stored in candidates / strategies / libraries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Gemm,
+    BatchedGemm,
+    Conv2d,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 3] = [OpKind::Gemm, OpKind::BatchedGemm, OpKind::Conv2d];
+
+    pub fn spec(self) -> &'static dyn OpSpec {
+        match self {
+            OpKind::Gemm => &Gemm,
+            OpKind::BatchedGemm => &BatchedGemm,
+            OpKind::Conv2d => &Conv2d,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.spec().name()
+    }
+
+    pub fn parse(s: &str) -> Option<OpKind> {
+        OpKind::ALL.into_iter().find(|o| o.name() == s)
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-operator strategy-space definition. Implementations must keep
+/// the reduction axis LAST — candgen's capacity-break and the cost
+/// model's temporal loop rely on it.
+pub trait OpSpec: Sync {
+    /// Stable name, also the JSON/artifact identifier ("gemm", ...).
+    fn name(&self) -> &'static str;
+
+    fn kind(&self) -> OpKind;
+
+    /// Iteration-space axes, reduction last.
+    fn axes(&self) -> &'static [Axis];
+
+    fn rank(&self) -> usize {
+        self.axes().len()
+    }
+
+    /// Lift a backend's 3-axis ISA granularity onto this op's axes
+    /// (batch axes get granularity 1).
+    fn isa_tile(&self, isa: [usize; 3]) -> Tile {
+        let mut t = Tile::ones(self.rank());
+        let mut j = 0;
+        for (i, a) in self.axes().iter().enumerate() {
+            if a.role != AxisRole::Batch {
+                t[i] = isa[j];
+                j += 1;
+            }
+        }
+        t
+    }
+
+    /// FLOPs of one full traversal of `iter` (multiply-accumulate = 2).
+    fn flops(&self, iter: Tile) -> f64 {
+        2.0 * iter.product_f64()
+    }
+
+    /// Bytes the operand slabs + accumulator of one tile occupy at a
+    /// level (the Algorithm-2 capacity check).
+    fn working_set(&self, tile: Tile, in_bytes: usize) -> u64;
+
+    /// Minimum DRAM traffic of a full problem (roofline memory term).
+    fn min_bytes(&self, iter: Tile, dtype: DType) -> f64;
+
+    /// Bytes loaded per reduction step at a level: the input slabs of
+    /// the child's reduction extent across the parent's other extents.
+    fn load_bytes_per_step(&self, parent: Tile, child: Tile, dtype: DType) -> f64;
+
+    /// Bytes stored once per level traversal (f32 accumulator).
+    fn store_bytes(&self, parent: Tile) -> f64;
+
+    /// Parallel (batch + spatial) child iterations inside a parent.
+    fn spatial_iters(&self, parent: Tile, child: Tile) -> usize {
+        self.axes()
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.role != AxisRole::Reduction)
+            .map(|(i, _)| ceil_div(parent[i], child[i]))
+            .product()
+    }
+
+    /// Temporal (reduction) child iterations inside a parent.
+    fn reduce_iters(&self, parent: Tile, child: Tile) -> usize {
+        self.axes()
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.role == AxisRole::Reduction)
+            .map(|(i, _)| ceil_div(parent[i], child[i]))
+            .product()
+    }
+
+    /// AOT artifact-name convention shared with python/compile/aot.py.
+    fn artifact_name(&self, l1: Tile, dtype: DType) -> String;
+
+    /// The op whose formulas define empirical measurements of this op's
+    /// strategies. Override ONLY when every cost-relevant formula
+    /// (working set, traffic, iteration counts) is an exact delegation
+    /// to that op — then measurements are shared instead of re-taken.
+    /// Conv2d's strategy space IS the GEMM contraction space, so its
+    /// subchain measurements alias GEMM's.
+    fn measurement_op(&self) -> OpKind {
+        self.kind()
+    }
+}
+
+/// C[M,N] = A[M,K] @ B[K,N] — the canonical contraction.
+pub struct Gemm;
+
+impl OpSpec for Gemm {
+    fn name(&self) -> &'static str {
+        "gemm"
+    }
+    fn kind(&self) -> OpKind {
+        OpKind::Gemm
+    }
+    fn axes(&self) -> &'static [Axis] {
+        const AXES: [Axis; 3] = [
+            ax('m', AxisRole::Spatial),
+            ax('n', AxisRole::Spatial),
+            ax('k', AxisRole::Reduction),
+        ];
+        &AXES
+    }
+    fn working_set(&self, tile: Tile, in_bytes: usize) -> u64 {
+        crate::hw::HwSpec::gemm_working_set(tile.to3(), in_bytes)
+    }
+    fn min_bytes(&self, iter: Tile, dtype: DType) -> f64 {
+        let [m, n, k] = iter.to3();
+        let e = dtype.bytes() as f64;
+        (m * k) as f64 * e + (k * n) as f64 * e + (m * n) as f64 * 4.0
+    }
+    fn load_bytes_per_step(&self, parent: Tile, child: Tile, dtype: DType) -> f64 {
+        let (m, n, ck) = (parent[0], parent[1], child[2]);
+        ((m * ck + ck * n) * dtype.bytes()) as f64
+    }
+    fn store_bytes(&self, parent: Tile) -> f64 {
+        (parent[0] * parent[1] * 4) as f64
+    }
+    fn artifact_name(&self, l1: Tile, dtype: DType) -> String {
+        format!("gemm_acc_{}x{}x{}_{}", l1[0], l1[1], l1[2], dtype.name())
+    }
+}
+
+/// C[B,M,N] = A[B,M,K] @ B[B,K,N] — independent per-batch operands, so
+/// the batch axis is purely parallel and every footprint scales by the
+/// batch-tile extent (no cross-batch reuse, unlike folding B into M).
+pub struct BatchedGemm;
+
+impl OpSpec for BatchedGemm {
+    fn name(&self) -> &'static str {
+        "batched_gemm"
+    }
+    fn kind(&self) -> OpKind {
+        OpKind::BatchedGemm
+    }
+    fn axes(&self) -> &'static [Axis] {
+        const AXES: [Axis; 4] = [
+            ax('b', AxisRole::Batch),
+            ax('m', AxisRole::Spatial),
+            ax('n', AxisRole::Spatial),
+            ax('k', AxisRole::Reduction),
+        ];
+        &AXES
+    }
+    fn working_set(&self, tile: Tile, in_bytes: usize) -> u64 {
+        let (b, m, n, k) = (tile[0], tile[1], tile[2], tile[3]);
+        (b * (m * k * in_bytes + k * n * in_bytes + m * n * 4)) as u64
+    }
+    fn min_bytes(&self, iter: Tile, dtype: DType) -> f64 {
+        let (b, m, n, k) = (iter[0], iter[1], iter[2], iter[3]);
+        let e = dtype.bytes() as f64;
+        b as f64 * ((m * k) as f64 * e + (k * n) as f64 * e + (m * n) as f64 * 4.0)
+    }
+    fn load_bytes_per_step(&self, parent: Tile, child: Tile, dtype: DType) -> f64 {
+        let (b, m, n, ck) = (parent[0], parent[1], parent[2], child[3]);
+        (b * (m * ck + ck * n) * dtype.bytes()) as f64
+    }
+    fn store_bytes(&self, parent: Tile) -> f64 {
+        (parent[0] * parent[1] * parent[2] * 4) as f64
+    }
+    fn artifact_name(&self, l1: Tile, dtype: DType) -> String {
+        format!(
+            "bgemm_acc_{}x{}x{}x{}_{}",
+            l1[0],
+            l1[1],
+            l1[2],
+            l1[3],
+            dtype.name()
+        )
+    }
+}
+
+/// NHWC valid convolution in its implicit-GEMM (im2col) contraction
+/// view (paper §4.2, Table 1): M = N·OH·OW, N = Cout, K = KH·KW·Cin.
+/// The strategy space is the contraction space; what is conv-specific
+/// is the program→space mapping ([`crate::ir::TensorProgram`]) and the
+/// artifact convention — conv blocks ARE gemm blocks fed by im2col, so
+/// a conv library references the shared `gemm_acc` artifacts.
+pub struct Conv2d;
+
+impl OpSpec for Conv2d {
+    fn name(&self) -> &'static str {
+        "conv2d"
+    }
+    fn kind(&self) -> OpKind {
+        OpKind::Conv2d
+    }
+    fn axes(&self) -> &'static [Axis] {
+        const AXES: [Axis; 3] = [
+            ax('m', AxisRole::Spatial),
+            ax('n', AxisRole::Spatial),
+            ax('k', AxisRole::Reduction),
+        ];
+        &AXES
+    }
+    fn working_set(&self, tile: Tile, in_bytes: usize) -> u64 {
+        Gemm.working_set(tile, in_bytes)
+    }
+    fn min_bytes(&self, iter: Tile, dtype: DType) -> f64 {
+        Gemm.min_bytes(iter, dtype)
+    }
+    fn load_bytes_per_step(&self, parent: Tile, child: Tile, dtype: DType) -> f64 {
+        Gemm.load_bytes_per_step(parent, child, dtype)
+    }
+    fn store_bytes(&self, parent: Tile) -> f64 {
+        Gemm.store_bytes(parent)
+    }
+    fn artifact_name(&self, l1: Tile, dtype: DType) -> String {
+        // Implicit GEMM: conv blocks execute the shared gemm_acc
+        // artifacts over the im2col patch matrix.
+        Gemm.artifact_name(l1, dtype)
+    }
+    fn measurement_op(&self) -> OpKind {
+        // Every formula above delegates to Gemm, so a conv subchain
+        // measurement is a gemm subchain measurement.
+        OpKind::Gemm
+    }
+}
+
+// ---------------------------------------------------------------------------
+// IterSpace
+// ---------------------------------------------------------------------------
+
+/// A concrete runtime problem: which op, its iteration dims, the dtype.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct IterSpace {
+    pub op: OpKind,
+    pub dims: Tile,
+    pub dtype: DType,
+}
+
+impl IterSpace {
+    pub fn gemm(m: usize, n: usize, k: usize, dtype: DType) -> IterSpace {
+        IterSpace { op: OpKind::Gemm, dims: Tile::new(&[m, n, k]), dtype }
+    }
+
+    pub fn batched_gemm(b: usize, m: usize, n: usize, k: usize, dtype: DType) -> IterSpace {
+        IterSpace { op: OpKind::BatchedGemm, dims: Tile::new(&[b, m, n, k]), dtype }
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.op.spec().flops(self.dims)
+    }
+
+    pub fn min_bytes(&self) -> f64 {
+        self.op.spec().min_bytes(self.dims, self.dtype)
+    }
+
+    /// Fold to the flat contraction view (batch folds into M) — the
+    /// lens the GEMM-only baselines see a problem through.
+    pub fn contraction(&self) -> Contraction {
+        match self.op {
+            OpKind::Gemm | OpKind::Conv2d => Contraction {
+                m: self.dims[0],
+                n: self.dims[1],
+                k: self.dims[2],
+                dtype: self.dtype,
+            },
+            OpKind::BatchedGemm => Contraction {
+                m: self.dims[0] * self.dims[1],
+                n: self.dims[2],
+                k: self.dims[3],
+                dtype: self.dtype,
+            },
+        }
+    }
+}
+
+impl From<Contraction> for IterSpace {
+    fn from(c: Contraction) -> IterSpace {
+        IterSpace::gemm(c.m, c.n, c.k, c.dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_algebra() {
+        let t = Tile::new(&[100, 64, 33]);
+        let l1 = Tile::new(&[64, 64, 32]);
+        assert_eq!(t.ceil_div(l1), Tile::new(&[2, 1, 2]));
+        assert_eq!(t.round_up_to(l1), Tile::new(&[128, 64, 64]));
+        assert_eq!(t.ceil_div(l1).mul(l1), t.round_up_to(l1));
+        assert!(Tile::new(&[128, 64, 64]).is_multiple_of(l1));
+        assert!(!t.is_multiple_of(l1));
+        assert_eq!(t[2], 33);
+        assert_eq!(t.rank(), 3);
+        assert_eq!(format!("{}", t), "100x64x33");
+    }
+
+    #[test]
+    fn tile_rank3_orders_like_arrays() {
+        let mut tiles = vec![
+            Tile::from3([64, 64, 32]),
+            Tile::from3([16, 8, 16]),
+            Tile::from3([64, 32, 64]),
+        ];
+        tiles.sort();
+        assert_eq!(tiles[0], Tile::from3([16, 8, 16]));
+        assert_eq!(tiles[1], Tile::from3([64, 32, 64]));
+        assert_eq!(tiles[2], Tile::from3([64, 64, 32]));
+    }
+
+    #[test]
+    fn gemm_working_set_matches_hw_formula() {
+        let t = Tile::from3([64, 128, 256]);
+        assert_eq!(
+            Gemm.working_set(t, 4),
+            crate::hw::HwSpec::gemm_working_set([64, 128, 256], 4)
+        );
+    }
+
+    #[test]
+    fn batched_footprints_scale_with_batch_tile() {
+        let g = Tile::from3([64, 64, 32]);
+        let b2 = Tile::new(&[2, 64, 64, 32]);
+        let b1 = Tile::new(&[1, 64, 64, 32]);
+        assert_eq!(BatchedGemm.working_set(b1, 2), Gemm.working_set(g, 2));
+        assert_eq!(BatchedGemm.working_set(b2, 2), 2 * Gemm.working_set(g, 2));
+        assert_eq!(
+            BatchedGemm.store_bytes(b2),
+            2.0 * Gemm.store_bytes(g)
+        );
+        assert_eq!(
+            BatchedGemm.load_bytes_per_step(b2, b2, DType::F16),
+            2.0 * Gemm.load_bytes_per_step(g, g, DType::F16)
+        );
+        assert_eq!(BatchedGemm.flops(b2), 2.0 * Gemm.flops(g));
+    }
+
+    #[test]
+    fn batch_axis_is_parallel_not_temporal() {
+        let parent = Tile::new(&[8, 128, 128, 256]);
+        let child = Tile::new(&[2, 64, 64, 32]);
+        assert_eq!(BatchedGemm.spatial_iters(parent, child), 4 * 2 * 2);
+        assert_eq!(BatchedGemm.reduce_iters(parent, child), 8);
+    }
+
+    #[test]
+    fn isa_lift_gives_batch_granularity_one() {
+        let isa = [16, 8, 16];
+        assert_eq!(Gemm.isa_tile(isa), Tile::from3([16, 8, 16]));
+        assert_eq!(BatchedGemm.isa_tile(isa), Tile::new(&[1, 16, 8, 16]));
+    }
+
+    #[test]
+    fn reduction_axis_is_last_for_every_op() {
+        for op in OpKind::ALL {
+            let axes = op.spec().axes();
+            assert_eq!(axes.last().unwrap().role, AxisRole::Reduction, "{}", op);
+            assert_eq!(
+                axes.iter().filter(|a| a.role == AxisRole::Reduction).count(),
+                1,
+                "{}",
+                op
+            );
+        }
+    }
+
+    #[test]
+    fn opkind_name_round_trip() {
+        for op in OpKind::ALL {
+            assert_eq!(OpKind::parse(op.name()), Some(op));
+        }
+        assert_eq!(OpKind::parse("softmax"), None);
+    }
+
+    #[test]
+    fn artifact_names() {
+        let l1 = Tile::from3([64, 256, 512]);
+        assert_eq!(
+            Gemm.artifact_name(l1, DType::F32),
+            "gemm_acc_64x256x512_f32"
+        );
+        // conv shares the gemm_acc artifacts (implicit GEMM)
+        assert_eq!(
+            Conv2d.artifact_name(l1, DType::F32),
+            "gemm_acc_64x256x512_f32"
+        );
+        assert_eq!(
+            BatchedGemm.artifact_name(Tile::new(&[2, 64, 64, 32]), DType::F16),
+            "bgemm_acc_2x64x64x32_f16"
+        );
+    }
+
+    #[test]
+    fn iterspace_contraction_folds_batch() {
+        let s = IterSpace::batched_gemm(12, 128, 64, 64, DType::F32);
+        let c = s.contraction();
+        assert_eq!((c.m, c.n, c.k), (12 * 128, 64, 64));
+        assert_eq!(s.flops(), c.flops());
+    }
+}

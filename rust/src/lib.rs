@@ -5,18 +5,53 @@
 //! (cs.DC 2024) as a three-layer Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the Vortex compiler and runtime: hardware
-//!   hierarchy model ([`hw`]), `rKernel` IR ([`ir`]), bottom-up candidate
-//!   generation ([`candgen`]), analytical + hybrid cost analysis
-//!   ([`cost`]), offline library construction ([`compiler`]), runtime
-//!   shape→kernel selection and kernel construction ([`coordinator`]),
-//!   baselines ([`baselines`]), model-level workloads ([`models`]) and
-//!   the paper's benchmark harness ([`bench`]).
+//!   hierarchy model ([`hw`]), `rKernel` IR + the operator-generic
+//!   strategy space ([`ir`]), bottom-up candidate generation
+//!   ([`candgen`]), analytical + hybrid cost analysis ([`cost`]),
+//!   offline library construction ([`compiler`]), runtime shape→kernel
+//!   selection and kernel construction ([`coordinator`]), baselines
+//!   ([`baselines`]), model-level workloads ([`models`]) and the
+//!   paper's benchmark harness ([`bench`]).
 //! * **Layer 2 (python/compile)** — jax graphs lowered AOT to HLO text.
 //! * **Layer 1 (python/compile/kernels)** — Pallas micro-kernels.
 //!
 //! Python never runs at serving time: [`runtime`] loads the AOT
 //! artifacts via the PJRT CPU client and the coordinator composes them
 //! over dynamic shapes.
+//!
+//! ## Operator-generic architecture
+//!
+//! Every layer is parameterized by an operator spec
+//! ([`ir::OpSpec`] / [`ir::OpKind`]): `Gemm`, `BatchedGemm` and
+//! `Conv2d` today. The op owns its iteration-space axes (batch /
+//! spatial / reduction roles), FLOP count, working-set formula,
+//! per-level load/store traffic, padding + grid math, and the AOT
+//! artifact-name convention. Tiles are rank-tagged [`ir::Tile`]s
+//! (`Copy`, allocation-free) rather than raw `[usize; 3]` arrays, and a
+//! runtime problem is an [`ir::IterSpace`] (op + dims + dtype).
+//!
+//! Adding a new operator touches exactly one extension point per layer:
+//!
+//! 1. **ir** — implement `OpSpec` for a unit struct, register it in
+//!    `OpKind::ALL`, and map the new `TensorProgram` variant to its
+//!    `IterSpace` in `TensorProgram::space()`.
+//! 2. **candgen** — nothing: Algorithm 2 enumerates per-axis multiplier
+//!    ladders chosen by axis role and prunes with `OpSpec::working_set`.
+//! 3. **cost / sim** — nothing: Eqs. 2–4 read loop extents and traffic
+//!    from the op; the simulator reuses the same spec.
+//! 4. **compiler** — nothing: `compile(hw, op, dtype, ...)` builds an
+//!    op-keyed [`compiler::MicroKernelLibrary`] (JSON schema v2 carries
+//!    an `"op"` field; v1 GEMM-only files still load).
+//! 5. **coordinator / runtime** — nothing for selection
+//!    (`Selector::select` is `IterSpace`-driven); real execution needs
+//!    an artifact path honoring `OpSpec::artifact_name` (Conv2d reuses
+//!    the `gemm_acc` blocks via im2col).
+//!
+//! The offline stage's per-candidate analysis is parallelized across
+//! threads (measurements are hoisted and profiled once, sequentially,
+//! so profiler accounting stays exact), and compiled libraries can be
+//! cached on disk keyed by (hw, op, dtype, analyzer) — see
+//! [`compiler::CompileOpts`].
 
 pub mod baselines;
 pub mod bench;

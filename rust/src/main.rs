@@ -15,7 +15,7 @@ use vortex::compiler::{compile, CompileOpts};
 use vortex::coordinator::{self, HwMode, Selector};
 use vortex::cost::hybrid::AnalyzerConfig;
 use vortex::hw::presets;
-use vortex::ir::{Contraction, DType, RKernel, TensorProgram};
+use vortex::ir::{Contraction, DType, OpKind, RKernel, TensorProgram};
 use vortex::profiler::SimProfiler;
 use vortex::runtime::{build_real_library, gemm_host_ref, RealEngine};
 use vortex::sim::Simulator;
@@ -28,12 +28,14 @@ vortex — sample-free dynamic-shape tensor program optimization (reproduction)
 
 USAGE:
   vortex compile  [--testbed sim-a100|sim-xeon|real] [--dtype f32|f16|bf16]
-                  [--analyzer default|analytical|e0|e1]
+                  [--op gemm|batched_gemm|conv2d]
+                  [--analyzer default|analytical|e0|e1] [--cache-dir DIR]
                   [--dump-library PATH] [--emit-manifest PATH]
-  vortex select   --m M --n N --k K [--testbed ...] [--dtype ...] [--mode adaptive|cuda|tensor]
+  vortex select   --m M --n N --k K [--b B] [--op ...] [--testbed ...] [--dtype ...]
+                  [--mode adaptive|cuda|tensor]
   vortex run      --m M --n N --k K [--artifacts DIR] [--verify]
   vortex serve    [--requests N] [--mean-gap-us U] [--max-batch B]
-  vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|all>
+  vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|ops|all>
                   [--out results/] [--seed S] [--full]
   vortex info
 ";
@@ -73,6 +75,14 @@ fn dtype_of(args: &Args, hw: &vortex::hw::HwSpec) -> DType {
     }
 }
 
+fn op_of(args: &Args) -> OpKind {
+    let name = args.get_or("op", "gemm");
+    OpKind::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown --op {name}; using gemm");
+        OpKind::Gemm
+    })
+}
+
 fn analyzer_of(args: &Args, hw: &vortex::hw::HwSpec) -> AnalyzerConfig {
     match args.get_or("analyzer", "default") {
         "analytical" => AnalyzerConfig::analytical_only(),
@@ -85,16 +95,22 @@ fn analyzer_of(args: &Args, hw: &vortex::hw::HwSpec) -> AnalyzerConfig {
 fn cmd_compile(args: &Args) {
     let hw = testbed_of(args);
     let dtype = dtype_of(args, &hw);
+    let op = op_of(args);
     let cfg = analyzer_of(args, &hw);
     let seed = args.get_u64("seed", 7);
     println!(
-        "offline compile: hw={} dtype={} analyzer={}",
+        "offline compile: hw={} op={} dtype={} analyzer={}",
         hw.name,
+        op,
         dtype,
         cfg.label()
     );
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
-    let r = compile(&hw, dtype, &cfg, &mut prof, &CompileOpts::default());
+    let opts = CompileOpts {
+        cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
+        ..CompileOpts::default()
+    };
+    let r = compile(&hw, op, dtype, &cfg, &mut prof, &opts);
     let mut t = Table::new("compile report", &["metric", "value"]);
     t.row(vec!["candidates (Algorithm 2)".into(), r.candidates_total.to_string()]);
     t.row(vec!["chains analyzed".into(), r.chains_analyzed.to_string()]);
@@ -108,6 +124,11 @@ fn cmd_compile(args: &Args) {
         "wall time here".into(),
         vortex::util::table::fmt_secs(r.wall_secs),
     ]);
+    t.row(vec![
+        "analysis threads / speedup".into(),
+        format!("{} / {:.2}x", r.analysis_threads, r.analysis_speedup()),
+    ]);
+    t.row(vec!["loaded from cache".into(), r.from_cache.to_string()]);
     t.print();
     if let Some(path) = args.get("dump-library") {
         std::fs::write(path, r.library.to_json().dump()).expect("write library");
@@ -117,6 +138,16 @@ fn cmd_compile(args: &Args) {
         // Regenerate the python micro-kernel manifest from this compile:
         // the gemm_acc entries aot.py lowers for the REAL testbed. The
         // inner tile equals the block (EXPERIMENTS.md §Perf L1).
+        // Only contraction-space (rank-3) blocks map onto gemm_acc
+        // artifacts; batched tiles would emit name/params nonsense.
+        if r.library.op.spec().rank() != 3 {
+            eprintln!(
+                "--emit-manifest supports contraction-space ops (gemm/conv2d); \
+                 op {} has no gemm_acc artifact mapping",
+                r.library.op
+            );
+            return;
+        }
         use vortex::util::json::Json;
         let entries: Vec<Json> = r
             .library
@@ -124,7 +155,7 @@ fn cmd_compile(args: &Args) {
             .iter()
             .map(|k| {
                 Json::obj(vec![
-                    ("name", Json::str(k.artifact_name(dtype))),
+                    ("name", Json::str(k.artifact_name(r.library.op, dtype))),
                     ("kind", Json::str("gemm_acc")),
                     (
                         "params",
@@ -160,18 +191,30 @@ fn cmd_select(args: &Args) {
     let dtype = dtype_of(args, &hw);
     let cfg = analyzer_of(args, &hw);
     let seed = args.get_u64("seed", 7);
-    let c = Contraction {
-        m: args.get_usize("m", 128),
-        n: args.get_usize("n", 768),
-        k: args.get_usize("k", 768),
-        dtype,
+    let op = op_of(args);
+    let (m, n, k) = (
+        args.get_usize("m", 128),
+        args.get_usize("n", 768),
+        args.get_usize("k", 768),
+    );
+    let space = match op {
+        OpKind::BatchedGemm => vortex::ir::IterSpace::batched_gemm(
+            args.get_usize("b", 8),
+            m,
+            n,
+            k,
+            dtype,
+        ),
+        _ => vortex::ir::IterSpace { op, dims: vortex::ir::Tile::new(&[m, n, k]), dtype },
     };
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
-    let mut libs =
-        vec![compile(&hw, dtype, &cfg, &mut prof, &CompileOpts::default()).library];
+    let mut libs = vec![
+        compile(&hw, op, dtype, &cfg, &mut prof, &CompileOpts::default()).library,
+    ];
     if hw.name == "a100" && dtype == DType::F16 {
         libs.push(
-            compile(&hw, DType::F32, &cfg, &mut prof, &CompileOpts::default()).library,
+            compile(&hw, op, DType::F32, &cfg, &mut prof, &CompileOpts::default())
+                .library,
         );
     }
     let selector = Selector::new(hw.clone(), libs);
@@ -180,10 +223,10 @@ fn cmd_select(args: &Args) {
         "tensor" => HwMode::Only("tensor_core_f16"),
         _ => HwMode::Adaptive,
     };
-    let sel = selector.select(c, mode).expect("selection");
+    let sel = selector.select(space, mode).expect("selection");
     let k = selector.kernel(&sel);
     let mut t = Table::new(
-        &format!("selection for GEMM m={} n={} k={} on {}", c.m, c.n, c.k, hw.name),
+        &format!("selection for {} {} on {}", op, space.dims, hw.name),
         &["field", "value"],
     );
     t.row(vec!["backend".into(), hw.backends[k.backend].name.into()]);
@@ -228,7 +271,7 @@ fn cmd_run(args: &Args) {
     let b = rng.normal_f32_vec(k * n);
     let t0 = std::time::Instant::now();
     let out = engine
-        .gemm_dynamic(&a, &b, (m, n, k), kern.l1, DType::F32)
+        .gemm_dynamic(&a, &b, (m, n, k), kern.l1.to3(), DType::F32)
         .expect("gemm");
     let dt = t0.elapsed().as_secs_f64();
     let gflops = 2.0 * m as f64 * n as f64 * k as f64 / dt / 1e9;
@@ -264,7 +307,8 @@ fn cmd_serve(args: &Args) {
     let hw = presets::a100();
     let cfg = AnalyzerConfig::default_for(&hw);
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
-    let lib = compile(&hw, DType::F32, &cfg, &mut prof, &CompileOpts::default()).library;
+    let lib = compile(&hw, OpKind::Gemm, DType::F32, &cfg, &mut prof, &CompileOpts::default())
+        .library;
     let selector = Selector::new(hw.clone(), vec![lib]);
     let trace = coordinator::server::gen_trace(n_req, gap, 1, 476, seed);
     let mut engine = coordinator::server::SimEngine { sim: Simulator::new(hw, seed) };

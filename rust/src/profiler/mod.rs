@@ -11,7 +11,7 @@
 use std::collections::HashMap;
 
 use crate::cost::Strategy;
-use crate::ir::DType;
+use crate::ir::{DType, OpKind, Tile};
 use crate::sim::Simulator;
 
 /// Source of empirical measurements for the hybrid analyzer.
@@ -30,6 +30,13 @@ pub trait Profiler {
 
     /// Number of profiling queries issued.
     fn queries(&self) -> usize;
+
+    /// Identity of the measurement source (e.g. the simulator seed):
+    /// libraries built from different sources must not alias in the
+    /// on-disk compile cache.
+    fn fingerprint(&self) -> u64 {
+        0
+    }
 }
 
 /// Simulator-backed profiler for the paper's testbeds.
@@ -40,7 +47,7 @@ pub struct SimProfiler {
     pub per_query_overhead: f64,
     tuning: f64,
     queries: usize,
-    cache: HashMap<(Vec<[usize; 3]>, usize, usize), f64>,
+    cache: HashMap<(OpKind, Vec<Tile>, usize, usize), f64>,
 }
 
 impl SimProfiler {
@@ -74,7 +81,11 @@ impl Profiler for SimProfiler {
         strat: &Strategy,
         level: usize,
     ) -> f64 {
+        // Keyed by the MEASUREMENT op: ops whose formulas are exact
+        // delegations (Conv2d -> Gemm) share one measurement instead of
+        // re-profiling identical subchains.
         let key = (
+            strat.op.spec().measurement_op(),
             strat.tiles[..=level].to_vec(),
             strat.backend,
             dtype.bytes(),
@@ -104,6 +115,10 @@ impl Profiler for SimProfiler {
 
     fn queries(&self) -> usize {
         self.queries
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.sim.seed
     }
 }
 

@@ -422,6 +422,7 @@ pub fn build_real_library(
     reps: usize,
 ) -> Result<crate::compiler::MicroKernelLibrary> {
     use crate::compiler::{MicroKernel, MicroKernelLibrary};
+    use crate::ir::{OpKind, Tile};
     let backend_name = match dtype {
         DType::F32 => "mxu_f32",
         _ => "mxu_bf16",
@@ -432,13 +433,13 @@ pub fn build_real_library(
     let mut kernels = Vec::new();
     for (block, name) in engine.manifest.gemm_acc_blocks(dtype) {
         let entry = engine.manifest.find(&name).unwrap();
-        let l0 = [
+        let l0 = Tile::from3([
             entry.param_usize("tm").unwrap_or(8),
             entry.param_usize("tn").unwrap_or(128),
             entry.param_usize("tk").unwrap_or(128),
-        ];
+        ]);
         let base_cost = engine.time_artifact(&name, reps)?;
-        kernels.push(MicroKernel { l0, l1: block, backend, base_cost });
+        kernels.push(MicroKernel { l0, l1: Tile::from3(block), backend, base_cost });
     }
     if kernels.is_empty() {
         bail!("manifest has no gemm_acc blocks for {}", dtype.name());
@@ -446,6 +447,7 @@ pub fn build_real_library(
     kernels.sort_by(|a, b| (a.l1, a.l0).cmp(&(b.l1, b.l0)));
     Ok(MicroKernelLibrary {
         hw_name: hw.name.to_string(),
+        op: OpKind::Gemm,
         dtype,
         analyzer: crate::cost::hybrid::AnalyzerConfig::empirical(1),
         kernels,
@@ -488,14 +490,27 @@ pub fn conv2d_dynamic(
             }
         }
     }
-    // Select the micro-kernel for the implicit-GEMM shape and run the
-    // constructor (w is already (kh*kw*cin, cout) row-major).
-    let c = crate::ir::Contraction { m, n: cout, k: kdim, dtype: DType::F32 };
+    // Select through the SAME op-aware selector as every other op: the
+    // conv program's IterSpace goes straight in, and the selector
+    // resolves it against a conv library or the implicit-GEMM fallback
+    // (no conv-specific selection side path here).
+    let program = crate::ir::TensorProgram::Conv2d {
+        n,
+        h,
+        w: wd,
+        cin,
+        cout,
+        kh,
+        kw,
+        dtype: DType::F32,
+    };
+    let space = program.space();
+    debug_assert_eq!(space.dims.to3(), [m, cout, kdim]);
     let sel = selector
-        .select(c, crate::coordinator::HwMode::Adaptive)
-        .ok_or_else(|| anyhow!("no kernel for conv contraction {:?}", c))?;
+        .select(space, crate::coordinator::HwMode::Adaptive)
+        .ok_or_else(|| anyhow!("no kernel for conv space {:?}", space))?;
     let kern = selector.kernel(&sel);
-    engine.gemm_dynamic(&patches, w, (m, cout, kdim), kern.l1, DType::F32)
+    engine.gemm_dynamic(&patches, w, (m, cout, kdim), kern.l1.to3(), DType::F32)
 }
 
 /// Reference row-major triple-loop GEMM for verification in tests.

@@ -20,7 +20,7 @@
 
 use crate::cost::{self, Strategy};
 use crate::hw::HwSpec;
-use crate::ir::DType;
+use crate::ir::{DType, Tile};
 use crate::util::rng::hash_key;
 
 #[derive(Debug, Clone)]
@@ -47,31 +47,21 @@ impl Simulator {
         Simulator { hw, seed, launch_overhead }
     }
 
+    fn tile_hash(&self, salt: u64, backend: usize, tile: Tile) -> u64 {
+        let mut parts = vec![self.seed, salt, backend as u64];
+        parts.extend(tile.iter().map(|&x| x as u64));
+        hash_key(&parts)
+    }
+
     /// Hidden L0 micro-architectural factor: out-of-order/issue effects
     /// the analytical model cannot predict. Empirical profiling sees it.
-    pub fn hidden_l0_factor(&self, backend: usize, tile: [usize; 3]) -> f64 {
-        let h = hash_key(&[
-            self.seed,
-            0x10,
-            backend as u64,
-            tile[0] as u64,
-            tile[1] as u64,
-            tile[2] as u64,
-        ]);
-        factor(h, 0.30)
+    pub fn hidden_l0_factor(&self, backend: usize, tile: Tile) -> f64 {
+        factor(self.tile_hash(0x10, backend, tile), 0.30)
     }
 
     /// Hidden L1 factor (bank conflicts, cache way contention) — smaller.
-    pub fn hidden_l1_factor(&self, backend: usize, tile: [usize; 3]) -> f64 {
-        let h = hash_key(&[
-            self.seed,
-            0x11,
-            backend as u64,
-            tile[0] as u64,
-            tile[1] as u64,
-            tile[2] as u64,
-        ]);
-        factor(h, 0.12)
+    pub fn hidden_l1_factor(&self, backend: usize, tile: Tile) -> f64 {
+        factor(self.tile_hash(0x11, backend, tile), 0.12)
     }
 
     /// Fig. 5 utilization-efficiency curve for one level: multiplier on
@@ -121,7 +111,7 @@ impl Simulator {
 
     /// Fig. 5 utilization penalty of the tile at `level`.
     fn tile_penalty(&self, strat: &Strategy, level: usize) -> f64 {
-        let ws = HwSpec::gemm_working_set(
+        let ws = strat.op.spec().working_set(
             strat.tiles[level],
             self.hw.backends[strat.backend].dtype_bytes,
         );
@@ -144,7 +134,7 @@ impl Simulator {
     /// profiling measures): includes the hidden L1 factor.
     pub fn true_subchain_secs(&self, dtype: DType, strat: &Strategy) -> f64 {
         debug_assert!(strat.tiles.len() >= 2);
-        let sub = Strategy::new(strat.tiles[..2].to_vec(), strat.backend);
+        let sub = Strategy::for_op(strat.op, strat.tiles[..2].to_vec(), strat.backend);
         let l0 = self.true_l0_secs(dtype, &sub);
         let up = cost::cost_from(&self.hw, dtype, &sub, 1, l0);
         up.total_secs

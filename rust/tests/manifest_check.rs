@@ -7,7 +7,7 @@ use std::path::PathBuf;
 
 use vortex::candgen;
 use vortex::hw::{presets, HwSpec};
-use vortex::ir::DType;
+use vortex::ir::{DType, OpKind, Tile};
 use vortex::util::json::Json;
 
 fn manifest_json() -> Option<Json> {
@@ -47,7 +47,7 @@ fn blocks_of(kind_filter: &str, dtype: &str) -> Vec<[usize; 3]> {
 fn manifest_gemm_blocks_are_candgen_valid() {
     let hw = presets::cpu_pjrt();
     for (dtype_name, dtype) in [("f32", DType::F32), ("bf16", DType::Bf16)] {
-        let set = candgen::generate(&hw, dtype);
+        let set = candgen::generate(&hw, OpKind::Gemm, dtype);
         let bi = hw
             .backend_idx(if dtype == DType::F32 { "mxu_f32" } else { "mxu_bf16" })
             .unwrap();
@@ -68,7 +68,7 @@ fn manifest_gemm_blocks_are_candgen_valid() {
             // Producible by Algorithm 2 at L1 or at least L0 (very small
             // blocks fall below the L1 utilization window but remain
             // valid L0/dot-tier tiles).
-            let in_l1 = set.levels[1].iter().any(|c| c.tile == block);
+            let in_l1 = set.levels[1].iter().any(|c| c.tile == Tile::from3(block));
             let fits_l0 = ws <= hw.level(0).capacity_bytes;
             assert!(
                 in_l1 || fits_l0,

@@ -1,0 +1,133 @@
+//! Operator-generality integration tests: `Conv2d` and `BatchedGemm`
+//! compile through the SAME candgen → compile → select pipeline as
+//! GEMM (no operator-specific side path) and execute in the simulator.
+
+use vortex::compiler::{compile, CompileOpts, MicroKernelLibrary};
+use vortex::coordinator::{HwMode, Selector};
+use vortex::cost::hybrid::AnalyzerConfig;
+use vortex::hw::presets;
+use vortex::ir::{DType, OpKind, TensorProgram};
+use vortex::profiler::SimProfiler;
+use vortex::sim::Simulator;
+use vortex::util::json::Json;
+
+fn compile_lib(op: OpKind) -> MicroKernelLibrary {
+    let hw = presets::a100();
+    let cfg = AnalyzerConfig::default_for(&hw);
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 7));
+    let r = compile(&hw, op, DType::F16, &cfg, &mut prof, &CompileOpts::default());
+    assert!(!r.library.kernels.is_empty(), "{} library is empty", op);
+    assert!(r.profile_queries > 0, "{} compiled without profiling", op);
+    r.library
+}
+
+#[test]
+fn conv2d_end_to_end_through_native_library() {
+    let hw = presets::a100();
+    let lib = compile_lib(OpKind::Conv2d);
+    let selector = Selector::new(hw.clone(), vec![lib]);
+    assert!(selector.has_op(OpKind::Conv2d));
+
+    // ResNet-ish conv with a dynamic batch: select + construct + simulate.
+    let sim = Simulator::new(hw, 7);
+    for batch in [1usize, 3, 17] {
+        let p = TensorProgram::Conv2d {
+            n: batch,
+            h: 28,
+            w: 28,
+            cin: 128,
+            cout: 256,
+            kh: 3,
+            kw: 3,
+            dtype: DType::F16,
+        };
+        let space = p.space();
+        let sel = selector.select(space, HwMode::Adaptive).expect("conv select");
+        let kern = selector.kernel(&sel);
+        for d in 0..3 {
+            assert!(sel.padded[d] >= space.dims[d]);
+            assert_eq!(sel.padded[d] % kern.l1[d], 0);
+            assert_eq!(sel.grid[d], sel.padded[d] / kern.l1[d]);
+        }
+        let secs = sim.execute(DType::F16, &selector.chain(&sel));
+        assert!(secs.is_finite() && secs > 0.0);
+        assert!(sel.est_secs > 0.0);
+    }
+}
+
+#[test]
+fn batched_gemm_end_to_end_through_native_library() {
+    let hw = presets::a100();
+    let lib = compile_lib(OpKind::BatchedGemm);
+    assert!(lib.kernels.iter().all(|k| k.l1.rank() == 4));
+    let selector = Selector::new(hw.clone(), vec![lib]);
+    let sim = Simulator::new(hw, 7);
+
+    // Attention-shaped batched GEMMs with dynamic batch x seq.
+    for (b, s, hd) in [(12usize, 77usize, 64usize), (1, 476, 128), (96, 9, 32)] {
+        let p = TensorProgram::BatchedGemm { b, m: s, n: s, k: hd, dtype: DType::F16 };
+        let space = p.space();
+        let sel = selector.select(space, HwMode::Adaptive).expect("bgemm select");
+        let kern = selector.kernel(&sel);
+        assert_eq!(sel.padded.rank(), 4);
+        for d in 0..4 {
+            assert!(sel.padded[d] >= space.dims[d]);
+            assert_eq!(sel.padded[d] % kern.l1[d], 0);
+            assert_eq!(sel.grid[d], sel.padded[d] / kern.l1[d]);
+        }
+        let secs = sim.execute(DType::F16, &selector.chain(&sel));
+        assert!(secs.is_finite() && secs > 0.0);
+    }
+}
+
+#[test]
+fn batched_selection_scales_with_batch() {
+    // More batches = more work: the selection estimate must grow, and a
+    // batch-B problem must never be estimated cheaper than batch-1.
+    let hw = presets::a100();
+    let selector = Selector::new(hw, vec![compile_lib(OpKind::BatchedGemm)]);
+    let est = |b: usize| {
+        let p = TensorProgram::BatchedGemm { b, m: 128, n: 128, k: 64, dtype: DType::F16 };
+        selector.select(p.space(), HwMode::Adaptive).unwrap().est_secs
+    };
+    let (e1, e16, e128) = (est(1), est(16), est(128));
+    assert!(e16 > e1, "{} !> {}", e16, e1);
+    assert!(e128 > e16, "{} !> {}", e128, e16);
+}
+
+#[test]
+fn per_op_libraries_round_trip_through_disk_with_op_field() {
+    for op in [OpKind::Conv2d, OpKind::BatchedGemm] {
+        let lib = compile_lib(op);
+        let text = lib.to_json().dump();
+        assert!(text.contains(&format!("\"op\":\"{}\"", op.name())));
+        let lib2 =
+            MicroKernelLibrary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(lib2.op, op);
+        assert_eq!(lib2.kernels, lib.kernels);
+    }
+}
+
+#[test]
+fn conv_suite_serves_through_gemm_fallback_and_native_equally() {
+    // The conv strategy space IS the contraction space, so serving a
+    // conv through its native library or through the GEMM library must
+    // construct the same kernel chain.
+    let hw = presets::a100();
+    let conv_sel = Selector::new(hw.clone(), vec![compile_lib(OpKind::Conv2d)]);
+    let gemm_sel = Selector::new(hw, vec![compile_lib(OpKind::Gemm)]);
+    let p = TensorProgram::Conv2d {
+        n: 4,
+        h: 14,
+        w: 14,
+        cin: 512,
+        cout: 512,
+        kh: 3,
+        kw: 3,
+        dtype: DType::F16,
+    };
+    let a = conv_sel.select(p.space(), HwMode::Adaptive).unwrap();
+    let b = gemm_sel.select(p.space(), HwMode::Adaptive).unwrap();
+    assert_eq!(conv_sel.kernel(&a).l1, gemm_sel.kernel(&b).l1);
+    assert_eq!(a.padded, b.padded);
+}

@@ -118,7 +118,7 @@ fn real_library_selector_end_to_end() {
     let a = rand_vec(c.m * c.k, 5);
     let b = rand_vec(c.k * c.n, 6);
     let got = eng
-        .gemm_dynamic(&a, &b, (c.m, c.n, c.k), kern.l1, DType::F32)
+        .gemm_dynamic(&a, &b, (c.m, c.n, c.k), kern.l1.to3(), DType::F32)
         .expect("selected gemm");
     assert_close(
         &got,

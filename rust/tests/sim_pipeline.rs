@@ -11,7 +11,7 @@ use vortex::compiler::{compile, CompileOpts, MicroKernelLibrary};
 use vortex::coordinator::{HwMode, Selector};
 use vortex::cost::hybrid::AnalyzerConfig;
 use vortex::hw::presets;
-use vortex::ir::{Contraction, DType};
+use vortex::ir::{Contraction, DType, OpKind};
 use vortex::profiler::SimProfiler;
 use vortex::sim::Simulator;
 use vortex::util::prop::{forall, prop_assert};
@@ -58,6 +58,7 @@ fn headline_sample_free_offline_is_orders_faster_than_dietcode() {
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 3));
     let vortex = compile(
         &hw,
+        OpKind::Gemm,
         DType::F32,
         &AnalyzerConfig::default_for(&hw),
         &mut prof,
@@ -143,6 +144,7 @@ fn library_round_trips_through_disk() {
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 1));
     let lib = compile(
         &hw,
+        OpKind::Gemm,
         DType::F16,
         &AnalyzerConfig::default_for(&hw),
         &mut prof,
@@ -222,8 +224,7 @@ fn adaptive_mode_crossover_exists() {
     let time = |m: usize, n: usize, mode: HwMode| {
         let c = Contraction { m, n, k: 1024, dtype: DType::F16 };
         let sel = selector.select(c, mode).unwrap();
-        let k = selector.kernel(&sel);
-        sim.execute(selector.libraries[sel.lib].dtype, &k.chain(sel.padded))
+        sim.execute(selector.libraries[sel.lib].dtype, &selector.chain(&sel))
     };
     let mut cc_wins = 0;
     let mut tc_wins = 0;
