@@ -172,15 +172,15 @@ pub fn table5(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
     vec![summary]
 }
 
-/// Operator-generality study: GEMM, batched GEMM and Conv2d each
-/// compiled through the SAME candgen → compile → select pipeline (one
-/// native library per op) and executed in the simulator. Demonstrates
-/// the hierarchized strategy space over every registered op — the
-/// extension point every new workload plugs into.
+/// Operator-generality study: GEMM, batched GEMM, Conv2d and grouped /
+/// depthwise conv each compiled through the SAME candgen → compile →
+/// select pipeline (one native library per op) and executed in the
+/// simulator. Demonstrates the hierarchized strategy space over every
+/// registered op — the extension point every new workload plugs into.
 pub fn ops(out_dir: &Path, seed: u64) -> Vec<Table> {
     let tb = Testbed::GpuTensorCore;
     let sim = Simulator::new(tb.hw(), seed);
-    let engine = vortex_engine_ops(tb, seed, &[OpKind::Gemm, OpKind::BatchedGemm, OpKind::Conv2d]);
+    let engine = vortex_engine_ops(tb, seed, &OpKind::ALL);
     let crate::bench::harness::Engine::Vortex { selector, .. } = &engine else {
         unreachable!()
     };
@@ -201,6 +201,15 @@ pub fn ops(out_dir: &Path, seed: u64) -> Vec<Table> {
             OpKind::Conv2d => workloads::conv_suite(tb.dtype(), seed)
                 .into_iter()
                 .step_by(55)
+                .collect(),
+            // ResNet-strided cases optimize in the ungrouped conv space;
+            // the grouped row takes the depthwise + grouped family.
+            OpKind::GroupedConv2d => workloads::conv_family_suite(tb.dtype())
+                .into_iter()
+                .filter(|c| {
+                    matches!(c.program, crate::ir::TensorProgram::Conv2d { groups, .. }
+                        if groups > 1)
+                })
                 .collect(),
         };
         let libs = selector.libraries.iter().filter(|l| l.op == op).count();

@@ -49,7 +49,9 @@ pub fn gemm_suite(dtype: DType, seed: u64) -> Vec<Case> {
     out
 }
 
-/// Table 4: benchmarked convolutions with dynamic shapes (691 cases).
+/// Table 4: benchmarked convolutions with dynamic shapes (691 cases),
+/// now spanning the conv family's geometry: strides 1–2 and paddings
+/// up to half the filter (the DeepBench/CNN ranges include both).
 pub fn conv_suite(dtype: DType, seed: u64) -> Vec<Case> {
     let mut rng = Rng::new(seed);
     let mut out = Vec::new();
@@ -63,25 +65,58 @@ pub fn conv_suite(dtype: DType, seed: u64) -> Vec<Case> {
                    rng: &mut Rng| {
         for _ in 0..n_cases {
             let kh = log_uniform(rng, filt.0, filt.1);
-            // feature map must admit the filter (valid conv)
+            // feature map must admit the filter even unpadded
             let h = log_uniform(rng, fmap.0.max(kh), fmap.1.max(kh));
+            let stride = rng.usize(1, 2);
+            let pad = rng.usize(0, kh / 2);
             out.push(Case {
                 category: cat,
-                program: TensorProgram::Conv2d {
-                    n: log_uniform(rng, bs.0, bs.1),
-                    h,
-                    w: h,
-                    cin: log_uniform(rng, cin.0, cin.1),
-                    cout: log_uniform(rng, cout.0, cout.1),
-                    kh,
-                    kw: kh,
+                program: TensorProgram::conv2d(
+                    (log_uniform(rng, bs.0, bs.1), h, h, log_uniform(rng, cin.0, cin.1)),
+                    (kh, kh, log_uniform(rng, cout.0, cout.1)),
+                    (stride, pad, 1),
                     dtype,
-                },
+                )
+                .expect("suite geometry is valid by construction"),
             });
         }
     };
     gen("deepbench", 107, (1, 16), (7, 700), (1, 20), (1, 2048), (16, 2048), &mut rng);
     gen("cnn", 584, (1, 64), (4, 768), (1, 11), (3, 832), (16, 512), &mut rng);
+    out
+}
+
+/// Conv-family suite (ROADMAP "next ops"): ResNet-style strided/padded
+/// convolutions and MobileNet-style depthwise (`groups == cin`)
+/// convolutions, each swept over dynamic batch sizes — the workloads
+/// the generalized conv path exists for.
+pub fn conv_family_suite(dtype: DType) -> Vec<Case> {
+    let mut out = Vec::new();
+    let conv = |cat: &'static str,
+                io: (usize, usize, usize, usize),
+                filt: (usize, usize, usize),
+                geom: (usize, usize, usize)| Case {
+        category: cat,
+        program: TensorProgram::conv2d(io, filt, geom, dtype)
+            .expect("family geometry is valid by construction"),
+    };
+    for b in [1usize, 8, 32] {
+        // ResNet-50 stem + per-stage strided downsamples (3x3, s2, p1).
+        out.push(conv("resnet_strided", (b, 224, 224, 3), (7, 7, 64), (2, 3, 1)));
+        for &(hw, cin, cout) in
+            &[(56usize, 64usize, 128usize), (28, 128, 256), (14, 256, 512)]
+        {
+            out.push(conv("resnet_strided", (b, hw, hw, cin), (3, 3, cout), (2, 1, 1)));
+        }
+        // MobileNetV1 depthwise ladder (3x3, pad 1, stride 1 and 2).
+        for &(hw, c) in &[(112usize, 32usize), (56, 64), (28, 128), (14, 256), (7, 512)]
+        {
+            out.push(conv("mobilenet_depthwise", (b, hw, hw, c), (3, 3, c), (1, 1, c)));
+            out.push(conv("mobilenet_depthwise", (b, hw, hw, c), (3, 3, c), (2, 1, c)));
+        }
+        // Grouped (non-depthwise) middle ground: ResNeXt-style 32 groups.
+        out.push(conv("resnext_grouped", (b, 28, 28, 128), (3, 3, 128), (1, 1, 32)));
+    }
     out
 }
 
@@ -180,10 +215,43 @@ mod tests {
     #[test]
     fn conv_fmaps_admit_filters() {
         for c in conv_suite(DType::F32, 3) {
-            if let TensorProgram::Conv2d { h, kh, .. } = c.program {
+            assert!(c.program.validate().is_ok(), "{}", c.program.id());
+            if let TensorProgram::Conv2d { h, kh, stride, pad, .. } = c.program {
                 assert!(h >= kh);
+                assert!((1..=2).contains(&stride));
+                assert!(pad <= kh / 2);
             }
         }
+        // The randomized suite must actually exercise the new geometry.
+        let strided = conv_suite(DType::F32, 3)
+            .iter()
+            .filter(|c| matches!(c.program, TensorProgram::Conv2d { stride: 2, .. }))
+            .count();
+        assert!(strided > 100, "only {} strided cases", strided);
+    }
+
+    #[test]
+    fn conv_family_suite_covers_strided_and_depthwise() {
+        let cases = conv_family_suite(DType::F16);
+        assert!(!cases.is_empty());
+        let mut depthwise = 0;
+        let mut strided = 0;
+        for c in &cases {
+            assert!(c.program.validate().is_ok(), "{}", c.program.id());
+            let TensorProgram::Conv2d { cin, stride, groups, .. } = &c.program else {
+                panic!("non-conv case in conv family suite");
+            };
+            let (cin, stride, groups) = (*cin, *stride, *groups);
+            if groups == cin {
+                depthwise += 1;
+                assert_eq!(c.program.space().op, crate::ir::OpKind::GroupedConv2d);
+            }
+            if stride == 2 {
+                strided += 1;
+            }
+        }
+        assert!(depthwise >= 10, "only {} depthwise cases", depthwise);
+        assert!(strided >= 10, "only {} strided cases", strided);
     }
 
     #[test]

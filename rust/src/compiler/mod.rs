@@ -437,6 +437,48 @@ pub fn compile(
     report
 }
 
+impl MicroKernelLibrary {
+    /// Lift this library onto a batch-extended op: the target op's axes
+    /// must be this op's axes behind one leading batch axis (e.g. Gemm
+    /// → BatchedGemm / GroupedConv2d). Every kernel's tiles gain a
+    /// leading batch extent of 1 — exactly how the real runtime serves
+    /// batched and grouped ops today, as a loop of contraction blocks —
+    /// so each lifted `base_cost` stays the per-batch-element block
+    /// cost. Returns `None` when the axis layouts are incompatible.
+    pub fn lift_to_batched(&self, op: OpKind) -> Option<MicroKernelLibrary> {
+        use crate::ir::AxisRole;
+        let src = self.op.spec().axes();
+        let dst = op.spec().axes();
+        let compatible = dst.len() == src.len() + 1
+            && dst[0].role == AxisRole::Batch
+            && dst[1..].iter().zip(src).all(|(d, s)| d.role == s.role);
+        if !compatible {
+            return None;
+        }
+        let lift = |t: Tile| {
+            let mut dims = vec![1usize];
+            dims.extend_from_slice(t.dims());
+            Tile::new(&dims)
+        };
+        Some(MicroKernelLibrary {
+            hw_name: self.hw_name.clone(),
+            op,
+            dtype: self.dtype,
+            analyzer: self.analyzer.clone(),
+            kernels: self
+                .kernels
+                .iter()
+                .map(|k| MicroKernel {
+                    l0: lift(k.l0),
+                    l1: lift(k.l1),
+                    backend: k.backend,
+                    base_cost: k.base_cost,
+                })
+                .collect(),
+        })
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Library (de)serialization — cached next to the artifacts
 // ---------------------------------------------------------------------------
@@ -803,5 +845,58 @@ mod tests {
         let tiles =
             |l: &MicroKernelLibrary| l.kernels.iter().map(|k| (k.l0, k.l1)).collect::<Vec<_>>();
         assert_eq!(tiles(&g.library), tiles(&c.library));
+    }
+
+    #[test]
+    fn grouped_conv_compile_shares_batched_gemm_measurements() {
+        // GroupedConv2d's formulas delegate to BatchedGemm, so compiling
+        // its library with a profiler already warmed by the batched-GEMM
+        // compile must issue ZERO new measurements.
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let b = compile(
+            &hw,
+            OpKind::BatchedGemm,
+            DType::F16,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        );
+        assert!(b.profile_queries > 0);
+        let g = compile(
+            &hw,
+            OpKind::GroupedConv2d,
+            DType::F16,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        );
+        assert_eq!(g.profile_queries, 0, "grouped conv re-measured bgemm subchains");
+        let tiles = |l: &MicroKernelLibrary| {
+            l.kernels.iter().map(|k| (k.l0, k.l1)).collect::<Vec<_>>()
+        };
+        assert_eq!(tiles(&b.library), tiles(&g.library));
+        assert!(g.library.kernels.iter().all(|k| k.l1.rank() == 4));
+    }
+
+    #[test]
+    fn gemm_library_lifts_onto_batch_extended_ops() {
+        let r = compile_tc();
+        for op in [OpKind::BatchedGemm, OpKind::GroupedConv2d] {
+            let lifted = r.library.lift_to_batched(op).unwrap();
+            assert_eq!(lifted.op, op);
+            assert_eq!(lifted.kernels.len(), r.library.kernels.len());
+            for (l, k) in lifted.kernels.iter().zip(&r.library.kernels) {
+                assert_eq!(l.l1.rank(), 4);
+                assert_eq!(l.l1[0], 1);
+                assert_eq!([l.l1[1], l.l1[2], l.l1[3]], k.l1.to3());
+                assert_eq!(l.base_cost, k.base_cost);
+            }
+        }
+        // Incompatible layouts refuse to lift.
+        assert!(r.library.lift_to_batched(OpKind::Gemm).is_none());
+        let b = r.library.lift_to_batched(OpKind::BatchedGemm).unwrap();
+        assert!(b.lift_to_batched(OpKind::BatchedGemm).is_none());
     }
 }

@@ -9,9 +9,11 @@
 //! problem is the top tile of the chain) and per-launch overhead. Grid
 //! configuration falls out of the chosen tile via the op's padding
 //! math (`ceil(dim/tile)` per axis). A Conv2d space with no conv
-//! library loaded falls back to the GEMM libraries — conv's strategy
-//! space IS the implicit-GEMM contraction space, so the tiles are
-//! directly applicable (the im2col data movement is the runtime's job).
+//! library loaded falls back to the GEMM libraries, and a
+//! GroupedConv2d space to the BatchedGemm libraries — a conv strategy
+//! space IS the (per-group) implicit-GEMM contraction space, so the
+//! tiles are directly applicable (the im2col data movement is the
+//! runtime's job).
 
 use std::time::Instant;
 
@@ -143,16 +145,21 @@ impl Selector {
     }
 
     /// The op a space is actually served with: exact match when a
-    /// native library exists, otherwise the op's measurement alias —
-    /// an op whose formulas exactly delegate (Conv2d → Gemm via
-    /// implicit GEMM) is servable by the alias's tiles. Ops with no
-    /// alias and no library make select() return None.
+    /// native library exists, otherwise the op's measurement-alias
+    /// chain — an op whose formulas exactly delegate (Conv2d → Gemm,
+    /// GroupedConv2d → BatchedGemm via per-group implicit GEMM) is
+    /// servable by the alias's tiles. Ops whose chain ends with no
+    /// library loaded make select() return None.
     fn serving_op(&self, op: OpKind) -> OpKind {
-        if self.has_op(op) {
-            op
-        } else {
-            op.spec().measurement_op()
+        let mut op = op;
+        while !self.has_op(op) {
+            let alias = op.spec().measurement_op();
+            if alias == op {
+                break;
+            }
+            op = alias;
         }
+        op
     }
 
     /// Estimated end-to-end seconds for one kernel on one problem —
@@ -358,6 +365,44 @@ mod tests {
         let s = selector_a100();
         let space = IterSpace::batched_gemm(8, 128, 128, 64, DType::F16);
         assert!(s.select(space, HwMode::Adaptive).is_none());
+        // A grouped conv's alias chain ends at BatchedGemm, which has no
+        // library here either — still None, never a rank-mismatched tile.
+        let grouped = IterSpace {
+            op: OpKind::GroupedConv2d,
+            dims: Tile::new(&[32, 1568, 4, 288]),
+            dtype: DType::F16,
+        };
+        assert!(s.select(grouped, HwMode::Adaptive).is_none());
+    }
+
+    #[test]
+    fn grouped_conv_space_falls_back_to_batched_gemm_library() {
+        // GroupedConv2d's strategy space IS the per-group batched
+        // contraction space, so with only a BatchedGemm library loaded
+        // the measurement-alias chain must serve it with the SAME
+        // kernel the equivalent batched space picks.
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let lib = compile(
+            &hw,
+            OpKind::BatchedGemm,
+            DType::F16,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library;
+        let s = Selector::new(hw, vec![lib]);
+        assert!(!s.has_op(OpKind::GroupedConv2d));
+        let dims = Tile::new(&[64, 1568, 2, 18]); // depthwise-ish
+        let grouped = IterSpace { op: OpKind::GroupedConv2d, dims, dtype: DType::F16 };
+        let batched = IterSpace { op: OpKind::BatchedGemm, dims, dtype: DType::F16 };
+        let g = s.select(grouped, HwMode::Adaptive).expect("grouped select");
+        let b = s.select(batched, HwMode::Adaptive).expect("batched select");
+        assert_eq!((g.lib, g.kernel), (b.lib, b.kernel));
+        assert_eq!(g.est_secs, b.est_secs);
+        assert_eq!(g.padded, b.padded);
     }
 
     #[test]

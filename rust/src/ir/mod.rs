@@ -18,8 +18,8 @@ pub mod op;
 use std::fmt;
 
 pub use op::{
-    Axis, AxisRole, BatchedGemm, Conv2d, Gemm, IterSpace, OpKind, OpSpec, Tile,
-    MAX_AXES,
+    Axis, AxisRole, BatchedGemm, Conv2d, Gemm, GroupedConv2d, IterSpace, OpKind,
+    OpSpec, Tile, MAX_AXES,
 };
 
 /// Element type of a tensor program.
@@ -78,7 +78,15 @@ pub enum TensorProgram {
     Gemm { m: usize, n: usize, k: usize, dtype: DType },
     /// C[B,M,N] = A[B,M,K] @ B[B,K,N] (independent per-batch operands).
     BatchedGemm { b: usize, m: usize, n: usize, k: usize, dtype: DType },
-    /// NHWC valid conv: x[N,H,W,Cin] * w[KH,KW,Cin,Cout], stride 1.
+    /// NHWC conv: x[N,H,W,Cin] * w[KH,KW,Cin/G,Cout], with stride,
+    /// symmetric zero padding and channel groups (depthwise when
+    /// `groups == cin`). OH = (H + 2·pad − KH)/stride + 1.
+    ///
+    /// Prefer the fallible [`TensorProgram::conv2d`] constructor:
+    /// literal construction of invalid geometry (zero stride, filter
+    /// larger than the padded feature map, groups not dividing the
+    /// channels) is caught by [`TensorProgram::validate`], which
+    /// [`TensorProgram::space`] enforces with a panic.
     Conv2d {
         n: usize,
         h: usize,
@@ -87,6 +95,9 @@ pub enum TensorProgram {
         cout: usize,
         kh: usize,
         kw: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
         dtype: DType,
     },
 }
@@ -118,6 +129,105 @@ impl Contraction {
 }
 
 impl TensorProgram {
+    /// Fallible conv constructor: the ONLY way invalid conv geometry
+    /// surfaces — at program construction, not as a silently-wrong
+    /// iteration space downstream. `io` is the NHWC input, `filt` the
+    /// (KH, KW, Cout) filter, `geom` the (stride, pad, groups) triple.
+    pub fn conv2d(
+        (n, h, w, cin): (usize, usize, usize, usize),
+        (kh, kw, cout): (usize, usize, usize),
+        (stride, pad, groups): (usize, usize, usize),
+        dtype: DType,
+    ) -> Result<TensorProgram, String> {
+        let p = TensorProgram::Conv2d {
+            n,
+            h,
+            w,
+            cin,
+            cout,
+            kh,
+            kw,
+            stride,
+            pad,
+            groups,
+            dtype,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Check the program describes a well-formed iteration space.
+    /// Every dimension must be positive; conv geometry must admit at
+    /// least one output position and divide cleanly into groups.
+    pub fn validate(&self) -> Result<(), String> {
+        let positive = |pairs: &[(&str, usize)]| -> Result<(), String> {
+            for &(name, v) in pairs {
+                if v == 0 {
+                    return Err(format!("dimension {} must be positive", name));
+                }
+            }
+            Ok(())
+        };
+        match *self {
+            TensorProgram::Gemm { m, n, k, .. } => {
+                positive(&[("m", m), ("n", n), ("k", k)])
+            }
+            TensorProgram::BatchedGemm { b, m, n, k, .. } => {
+                positive(&[("b", b), ("m", m), ("n", n), ("k", k)])
+            }
+            TensorProgram::Conv2d {
+                n, h, w, cin, cout, kh, kw, stride, pad, groups, ..
+            } => {
+                positive(&[
+                    ("n", n),
+                    ("h", h),
+                    ("w", w),
+                    ("cin", cin),
+                    ("cout", cout),
+                    ("kh", kh),
+                    ("kw", kw),
+                ])?;
+                if stride == 0 {
+                    return Err("conv stride must be >= 1".into());
+                }
+                if groups == 0 {
+                    return Err("conv groups must be >= 1".into());
+                }
+                if cin % groups != 0 || cout % groups != 0 {
+                    return Err(format!(
+                        "groups {} must divide cin {} and cout {}",
+                        groups, cin, cout
+                    ));
+                }
+                let (oh, ow) = conv_out_dims((h, w), (kh, kw), stride, pad)
+                    .ok_or_else(|| {
+                        format!(
+                            "filter {}x{} exceeds padded feature map {}x{} \
+                             (pad {})",
+                            kh,
+                            kw,
+                            h + 2 * pad,
+                            w + 2 * pad,
+                            pad
+                        )
+                    })?;
+                debug_assert!(oh >= 1 && ow >= 1);
+                Ok(())
+            }
+        }
+    }
+
+    /// Output spatial extent (OH, OW) of a conv program; `None` for
+    /// non-conv programs or invalid geometry.
+    pub fn conv_output(&self) -> Option<(usize, usize)> {
+        match *self {
+            TensorProgram::Conv2d { h, w, kh, kw, stride, pad, .. } => {
+                conv_out_dims((h, w), (kh, kw), stride, pad)
+            }
+            _ => None,
+        }
+    }
+
     pub fn dtype(&self) -> DType {
         match *self {
             TensorProgram::Gemm { dtype, .. } => dtype,
@@ -128,19 +238,45 @@ impl TensorProgram {
 
     /// The operator-generic iteration space this program optimizes over
     /// — the input of the candgen → compile → select pipeline.
+    ///
+    /// Panics on invalid geometry (defense in depth for literally
+    /// constructed programs that skipped [`TensorProgram::conv2d`]):
+    /// no downstream layer — candgen, cost, selector, runtime — can
+    /// ever observe a silently-wrong iteration space.
     pub fn space(&self) -> IterSpace {
+        if let Err(e) = self.validate() {
+            panic!("invalid tensor program {}: {}", self.id(), e);
+        }
         match *self {
             TensorProgram::Gemm { m, n, k, dtype } => IterSpace::gemm(m, n, k, dtype),
             TensorProgram::BatchedGemm { b, m, n, k, dtype } => {
                 IterSpace::batched_gemm(b, m, n, k, dtype)
             }
-            TensorProgram::Conv2d { n, h, w, cin, cout, kh, kw, dtype } => {
-                let oh = h.saturating_sub(kh) + 1;
-                let ow = w.saturating_sub(kw) + 1;
-                IterSpace {
-                    op: OpKind::Conv2d,
-                    dims: Tile::new(&[n * oh * ow, cout, kh * kw * cin]),
-                    dtype,
+            TensorProgram::Conv2d {
+                n, h, w, cin, cout, kh, kw, stride, pad, groups, dtype,
+            } => {
+                let (oh, ow) =
+                    conv_out_dims((h, w), (kh, kw), stride, pad).unwrap();
+                if groups == 1 {
+                    // Implicit GEMM: the contraction space itself.
+                    IterSpace {
+                        op: OpKind::Conv2d,
+                        dims: Tile::new(&[n * oh * ow, cout, kh * kw * cin]),
+                        dtype,
+                    }
+                } else {
+                    // Per-group implicit GEMM with the group axis as a
+                    // batch axis (depthwise = groups == cin).
+                    IterSpace {
+                        op: OpKind::GroupedConv2d,
+                        dims: Tile::new(&[
+                            groups,
+                            n * oh * ow,
+                            cout / groups,
+                            kh * kw * (cin / groups),
+                        ]),
+                        dtype,
+                    }
                 }
             }
         }
@@ -165,9 +301,11 @@ impl TensorProgram {
             TensorProgram::BatchedGemm { b, m, n, k, dtype } => {
                 format!("bgemm_b{}m{}n{}k{}_{}", b, m, n, k, dtype)
             }
-            TensorProgram::Conv2d { n, h, w, cin, cout, kh, kw, dtype } => format!(
-                "conv_n{}h{}w{}c{}f{}k{}x{}_{}",
-                n, h, w, cin, cout, kh, kw, dtype
+            TensorProgram::Conv2d {
+                n, h, w, cin, cout, kh, kw, stride, pad, groups, dtype,
+            } => format!(
+                "conv_n{}h{}w{}c{}f{}k{}x{}s{}p{}g{}_{}",
+                n, h, w, cin, cout, kh, kw, stride, pad, groups, dtype
             ),
         }
     }
@@ -318,6 +456,25 @@ impl RKernel {
 // Shape algebra shared by the constructor and the baselines
 // ---------------------------------------------------------------------------
 
+/// Conv output extent: `(dim + 2·pad − k)/stride + 1` per axis, or
+/// `None` when the filter exceeds the padded feature map or the stride
+/// is zero — the strict replacement for the old `saturating_sub`
+/// arithmetic that silently produced OH = OW = 1.
+pub fn conv_out_dims(
+    (h, w): (usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+    pad: usize,
+) -> Option<(usize, usize)> {
+    if stride == 0 || h + 2 * pad < kh || w + 2 * pad < kw {
+        return None;
+    }
+    Some((
+        (h + 2 * pad - kh) / stride + 1,
+        (w + 2 * pad - kw) / stride + 1,
+    ))
+}
+
 /// Round `x` up to a multiple of `q` (q > 0).
 pub fn round_up(x: usize, q: usize) -> usize {
     debug_assert!(q > 0);
@@ -349,20 +506,93 @@ mod tests {
 
     #[test]
     fn conv_maps_to_implicit_gemm() {
-        let c = TensorProgram::Conv2d {
-            n: 2,
-            h: 10,
-            w: 10,
-            cin: 4,
-            cout: 8,
-            kh: 3,
-            kw: 3,
-            dtype: DType::F32,
-        }
-        .contraction();
+        let c = TensorProgram::conv2d((2, 10, 10, 4), (3, 3, 8), (1, 0, 1), DType::F32)
+            .unwrap()
+            .contraction();
         assert_eq!(c.m, 2 * 8 * 8);
         assert_eq!(c.n, 8);
         assert_eq!(c.k, 3 * 3 * 4);
+    }
+
+    #[test]
+    fn strided_padded_conv_geometry_matches_formula() {
+        // ResNet stem: 224x224, 7x7, stride 2, pad 3 -> 112x112.
+        let p = TensorProgram::conv2d((1, 224, 224, 3), (7, 7, 64), (2, 3, 1), DType::F32)
+            .unwrap();
+        assert_eq!(p.conv_output(), Some((112, 112)));
+        let s = p.space();
+        assert_eq!(s.op, OpKind::Conv2d);
+        assert_eq!(s.dims, Tile::new(&[112 * 112, 64, 7 * 7 * 3]));
+        // AlexNet stem: 224x224, 11x11, stride 4, pad 2 -> 55x55.
+        let p = TensorProgram::conv2d((1, 224, 224, 3), (11, 11, 64), (4, 2, 1), DType::F32)
+            .unwrap();
+        assert_eq!(p.conv_output(), Some((55, 55)));
+    }
+
+    #[test]
+    fn depthwise_conv_space_has_group_batch_axis() {
+        // MobileNet depthwise: groups == cin, one in/out channel per group.
+        let p = TensorProgram::conv2d((2, 28, 28, 128), (3, 3, 128), (1, 1, 128), DType::F16)
+            .unwrap();
+        let s = p.space();
+        assert_eq!(s.op, OpKind::GroupedConv2d);
+        assert_eq!(s.dims, Tile::new(&[128, 2 * 28 * 28, 1, 9]));
+        // Group axis is parallel at every level.
+        assert_eq!(p.loop_kinds(0)[0], ('g', LoopKind::Parallel));
+        assert_eq!(p.loop_kinds(0)[3], ('k', LoopKind::TemporalReduction));
+    }
+
+    #[test]
+    fn invalid_conv_geometry_is_a_construction_error() {
+        // Filter larger than the (padded) feature map.
+        assert!(TensorProgram::conv2d((2, 2, 2, 4), (3, 3, 8), (1, 0, 1), DType::F32)
+            .is_err());
+        // Padding can rescue it...
+        assert!(TensorProgram::conv2d((2, 2, 2, 4), (3, 3, 8), (1, 1, 1), DType::F32)
+            .is_ok());
+        // Zero stride.
+        assert!(TensorProgram::conv2d((1, 8, 8, 4), (3, 3, 8), (0, 0, 1), DType::F32)
+            .is_err());
+        // Groups not dividing channels.
+        assert!(TensorProgram::conv2d((1, 8, 8, 6), (3, 3, 8), (1, 0, 4), DType::F32)
+            .is_err());
+        assert!(TensorProgram::conv2d((1, 8, 8, 8), (3, 3, 6), (1, 0, 4), DType::F32)
+            .is_err());
+        // Zero-sized dims.
+        assert!(TensorProgram::conv2d((0, 8, 8, 4), (3, 3, 8), (1, 0, 1), DType::F32)
+            .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid tensor program")]
+    fn undersized_fmap_panics_instead_of_oh_equals_one() {
+        // The old saturating_sub arithmetic yielded OH = OW = 1 here; a
+        // literally-constructed invalid program must never reach candgen
+        // or the selector as a bogus iteration space.
+        let p = TensorProgram::Conv2d {
+            n: 1,
+            h: 2,
+            w: 2,
+            cin: 4,
+            cout: 8,
+            kh: 5,
+            kw: 5,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            dtype: DType::F32,
+        };
+        let _ = p.space();
+    }
+
+    #[test]
+    fn conv_out_dims_edges() {
+        assert_eq!(conv_out_dims((5, 5), (5, 5), 1, 0), Some((1, 1)));
+        assert_eq!(conv_out_dims((4, 4), (5, 5), 1, 0), None);
+        assert_eq!(conv_out_dims((4, 4), (5, 5), 1, 1), Some((2, 2)));
+        assert_eq!(conv_out_dims((5, 5), (5, 5), 0, 0), None);
+        // Stride floor: (7 - 3)/2 + 1 = 3.
+        assert_eq!(conv_out_dims((7, 7), (3, 3), 2, 0), Some((3, 3)));
     }
 
     #[test]

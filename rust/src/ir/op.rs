@@ -13,8 +13,9 @@
 //!   count, working-set formula, per-level load/store traffic, padding /
 //!   grid math and the AOT artifact-name convention.
 //! * [`OpKind`] + the concrete [`Gemm`], [`BatchedGemm`], [`Conv2d`]
-//!   ops — `OpKind` is the compact `Copy` handle stored in candidates,
-//!   strategies and libraries; `.spec()` dispatches to the behavior.
+//!   and [`GroupedConv2d`] ops — `OpKind` is the compact `Copy` handle
+//!   stored in candidates, strategies and libraries; `.spec()`
+//!   dispatches to the behavior.
 //! * [`IterSpace`] — a runtime problem: (op, concrete dims, dtype).
 //!
 //! Adding a new operator = implementing `OpSpec` for a unit struct and
@@ -191,16 +192,23 @@ pub enum OpKind {
     Gemm,
     BatchedGemm,
     Conv2d,
+    GroupedConv2d,
 }
 
 impl OpKind {
-    pub const ALL: [OpKind; 3] = [OpKind::Gemm, OpKind::BatchedGemm, OpKind::Conv2d];
+    pub const ALL: [OpKind; 4] = [
+        OpKind::Gemm,
+        OpKind::BatchedGemm,
+        OpKind::Conv2d,
+        OpKind::GroupedConv2d,
+    ];
 
     pub fn spec(self) -> &'static dyn OpSpec {
         match self {
             OpKind::Gemm => &Gemm,
             OpKind::BatchedGemm => &BatchedGemm,
             OpKind::Conv2d => &Conv2d,
+            OpKind::GroupedConv2d => &GroupedConv2d,
         }
     }
 
@@ -436,6 +444,58 @@ impl OpSpec for Conv2d {
     }
 }
 
+/// Grouped NHWC convolution (depthwise when `groups == cin`) in its
+/// per-group implicit-GEMM view: the iteration space is
+/// (G, N·OH·OW, Cout/G, KH·KW·Cin/G). The group axis is a *batch* axis
+/// — groups share no operands, exactly like the batch of a batched
+/// GEMM — so candgen's short batch ladder, the cost model's
+/// footprint scaling and the selector all treat it as purely parallel.
+/// Every cost-relevant formula delegates to [`BatchedGemm`], so grouped
+/// subchain measurements alias batched-GEMM measurements, and a grouped
+/// block on the real runtime is a bgemm block over per-group im2col
+/// patch matrices.
+pub struct GroupedConv2d;
+
+impl OpSpec for GroupedConv2d {
+    fn name(&self) -> &'static str {
+        "grouped_conv2d"
+    }
+    fn kind(&self) -> OpKind {
+        OpKind::GroupedConv2d
+    }
+    fn axes(&self) -> &'static [Axis] {
+        const AXES: [Axis; 4] = [
+            ax('g', AxisRole::Batch),
+            ax('m', AxisRole::Spatial),
+            ax('n', AxisRole::Spatial),
+            ax('k', AxisRole::Reduction),
+        ];
+        &AXES
+    }
+    fn working_set(&self, tile: Tile, in_bytes: usize) -> u64 {
+        BatchedGemm.working_set(tile, in_bytes)
+    }
+    fn min_bytes(&self, iter: Tile, dtype: DType) -> f64 {
+        BatchedGemm.min_bytes(iter, dtype)
+    }
+    fn load_bytes_per_step(&self, parent: Tile, child: Tile, dtype: DType) -> f64 {
+        BatchedGemm.load_bytes_per_step(parent, child, dtype)
+    }
+    fn store_bytes(&self, parent: Tile) -> f64 {
+        BatchedGemm.store_bytes(parent)
+    }
+    fn artifact_name(&self, l1: Tile, dtype: DType) -> String {
+        // Per-group implicit GEMM: grouped blocks execute the batched
+        // gemm convention over per-group patch matrices.
+        BatchedGemm.artifact_name(l1, dtype)
+    }
+    fn measurement_op(&self) -> OpKind {
+        // Every formula above delegates to BatchedGemm, so a grouped
+        // conv subchain measurement is a batched-gemm measurement.
+        OpKind::BatchedGemm
+    }
+}
+
 // ---------------------------------------------------------------------------
 // IterSpace
 // ---------------------------------------------------------------------------
@@ -475,7 +535,10 @@ impl IterSpace {
                 k: self.dims[2],
                 dtype: self.dtype,
             },
-            OpKind::BatchedGemm => Contraction {
+            // Batch-like leading axes fold into M: the baselines see a
+            // batched GEMM as one tall GEMM, and a grouped conv as its
+            // block-diagonal GEMM flattened along the group axis.
+            OpKind::BatchedGemm | OpKind::GroupedConv2d => Contraction {
                 m: self.dims[0] * self.dims[1],
                 n: self.dims[2],
                 k: self.dims[3],
@@ -602,6 +665,47 @@ mod tests {
             BatchedGemm.artifact_name(Tile::new(&[2, 64, 64, 32]), DType::F16),
             "bgemm_acc_2x64x64x32_f16"
         );
+    }
+
+    #[test]
+    fn grouped_conv_delegates_every_formula_to_batched_gemm() {
+        let parent = Tile::new(&[4, 128, 128, 256]);
+        let child = Tile::new(&[2, 64, 64, 32]);
+        assert_eq!(
+            GroupedConv2d.working_set(child, 2),
+            BatchedGemm.working_set(child, 2)
+        );
+        assert_eq!(
+            GroupedConv2d.min_bytes(parent, DType::F16),
+            BatchedGemm.min_bytes(parent, DType::F16)
+        );
+        assert_eq!(
+            GroupedConv2d.load_bytes_per_step(parent, child, DType::F16),
+            BatchedGemm.load_bytes_per_step(parent, child, DType::F16)
+        );
+        assert_eq!(GroupedConv2d.store_bytes(parent), BatchedGemm.store_bytes(parent));
+        assert_eq!(
+            GroupedConv2d.artifact_name(child, DType::F16),
+            BatchedGemm.artifact_name(child, DType::F16)
+        );
+        assert_eq!(GroupedConv2d.measurement_op(), OpKind::BatchedGemm);
+        // The group axis lifts like a batch axis: ISA granularity 1.
+        assert_eq!(
+            GroupedConv2d.isa_tile([16, 8, 16]),
+            Tile::new(&[1, 16, 8, 16])
+        );
+    }
+
+    #[test]
+    fn grouped_conv_contraction_folds_groups_into_m() {
+        let s = IterSpace {
+            op: OpKind::GroupedConv2d,
+            dims: Tile::new(&[32, 1568, 4, 288]),
+            dtype: DType::F32,
+        };
+        let c = s.contraction();
+        assert_eq!((c.m, c.n, c.k), (32 * 1568, 4, 288));
+        assert_eq!(s.flops(), c.flops());
     }
 
     #[test]

@@ -22,30 +22,45 @@
 //! ## Operator-generic architecture
 //!
 //! Every layer is parameterized by an operator spec
-//! ([`ir::OpSpec`] / [`ir::OpKind`]): `Gemm`, `BatchedGemm` and
-//! `Conv2d` today. The op owns its iteration-space axes (batch /
+//! ([`ir::OpSpec`] / [`ir::OpKind`]): `Gemm`, `BatchedGemm`, `Conv2d`
+//! (strides, padding) and `GroupedConv2d` (grouped / depthwise, group
+//! axis = batch) today. The op owns its iteration-space axes (batch /
 //! spatial / reduction roles), FLOP count, working-set formula,
 //! per-level load/store traffic, padding + grid math, and the AOT
 //! artifact-name convention. Tiles are rank-tagged [`ir::Tile`]s
 //! (`Copy`, allocation-free) rather than raw `[usize; 3]` arrays, and a
 //! runtime problem is an [`ir::IterSpace`] (op + dims + dtype).
 //!
+//! The conv family maps onto the contraction ops through validated
+//! geometry (`TensorProgram::conv2d` is fallible; invalid geometry is a
+//! construction-time error) and the *measurement alias* chain
+//! (`OpSpec::measurement_op`): an ungrouped conv's space IS the GEMM
+//! contraction space, a grouped conv's IS the per-group batched
+//! contraction space, so their libraries, profiling measurements and
+//! selector fallbacks all alias the contraction ops' with zero extra
+//! profiling.
+//!
 //! Adding a new operator touches exactly one extension point per layer:
 //!
 //! 1. **ir** — implement `OpSpec` for a unit struct, register it in
 //!    `OpKind::ALL`, and map the new `TensorProgram` variant to its
-//!    `IterSpace` in `TensorProgram::space()`.
+//!    `IterSpace` in `TensorProgram::space()` (with `validate()` rules
+//!    if the mapping can be geometrically invalid).
 //! 2. **candgen** — nothing: Algorithm 2 enumerates per-axis multiplier
 //!    ladders chosen by axis role and prunes with `OpSpec::working_set`.
 //! 3. **cost / sim** — nothing: Eqs. 2–4 read loop extents and traffic
 //!    from the op; the simulator reuses the same spec.
 //! 4. **compiler** — nothing: `compile(hw, op, dtype, ...)` builds an
 //!    op-keyed [`compiler::MicroKernelLibrary`] (JSON schema v2 carries
-//!    an `"op"` field; v1 GEMM-only files still load).
+//!    an `"op"` field; v1 GEMM-only files still load). A contraction
+//!    library lifts onto batch-extended ops via
+//!    `MicroKernelLibrary::lift_to_batched`.
 //! 5. **coordinator / runtime** — nothing for selection
-//!    (`Selector::select` is `IterSpace`-driven); real execution needs
-//!    an artifact path honoring `OpSpec::artifact_name` (Conv2d reuses
-//!    the `gemm_acc` blocks via im2col).
+//!    (`Selector::select` is `IterSpace`-driven and chases the
+//!    measurement-alias chain); real execution needs an artifact path
+//!    honoring `OpSpec::artifact_name` (the conv family reuses the
+//!    `gemm_acc` blocks via per-group im2col in
+//!    [`runtime::conv2d_dynamic`]).
 //!
 //! The offline stage's per-candidate analysis is parallelized across
 //! threads (measurements are hoisted and profiled once, sequentially,

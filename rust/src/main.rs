@@ -28,11 +28,11 @@ vortex — sample-free dynamic-shape tensor program optimization (reproduction)
 
 USAGE:
   vortex compile  [--testbed sim-a100|sim-xeon|real] [--dtype f32|f16|bf16]
-                  [--op gemm|batched_gemm|conv2d]
+                  [--op gemm|batched_gemm|conv2d|grouped_conv2d]
                   [--analyzer default|analytical|e0|e1] [--cache-dir DIR]
                   [--dump-library PATH] [--emit-manifest PATH]
-  vortex select   --m M --n N --k K [--b B] [--op ...] [--testbed ...] [--dtype ...]
-                  [--mode adaptive|cuda|tensor]
+  vortex select   --m M --n N --k K [--b B(atch/groups)] [--op ...]
+                  [--testbed ...] [--dtype ...] [--mode adaptive|cuda|tensor]
   vortex run      --m M --n N --k K [--artifacts DIR] [--verify]
   vortex serve    [--requests N] [--mean-gap-us U] [--max-batch B]
   vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|ops|all>
@@ -198,13 +198,13 @@ fn cmd_select(args: &Args) {
         args.get_usize("k", 768),
     );
     let space = match op {
-        OpKind::BatchedGemm => vortex::ir::IterSpace::batched_gemm(
-            args.get_usize("b", 8),
-            m,
-            n,
-            k,
+        // --b is the batch count (batched GEMM) or group count (grouped
+        // conv) — both lead the rank-4 iteration space.
+        OpKind::BatchedGemm | OpKind::GroupedConv2d => vortex::ir::IterSpace {
+            op,
+            dims: vortex::ir::Tile::new(&[args.get_usize("b", 8), m, n, k]),
             dtype,
-        ),
+        },
         _ => vortex::ir::IterSpace { op, dims: vortex::ir::Tile::new(&[m, n, k]), dtype },
     };
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
@@ -363,19 +363,19 @@ fn cmd_info() {
         }
         println!();
     }
-    let p = TensorProgram::Conv2d {
-        n: 8,
-        h: 56,
-        w: 56,
-        cin: 64,
-        cout: 128,
-        kh: 3,
-        kw: 3,
-        dtype: DType::F32,
-    };
+    let p = TensorProgram::conv2d((8, 56, 56, 64), (3, 3, 128), (2, 1, 1), DType::F32)
+        .unwrap();
     println!(
         "implicit-GEMM example: {} -> contraction {:?}",
         p.id(),
         p.contraction().dims()
+    );
+    let dw = TensorProgram::conv2d((8, 28, 28, 128), (3, 3, 128), (1, 1, 128), DType::F32)
+        .unwrap();
+    println!(
+        "depthwise example: {} -> {} space {:?}",
+        dw.id(),
+        dw.space().op,
+        dw.space().dims
     );
 }

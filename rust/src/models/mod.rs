@@ -18,6 +18,7 @@ pub enum Model {
     AlexNet,
     ResNet50,
     GoogleNet,
+    MobileNet,
 }
 
 impl Model {
@@ -29,6 +30,7 @@ impl Model {
             Model::AlexNet => "alexnet",
             Model::ResNet50 => "resnet50",
             Model::GoogleNet => "googlenet",
+            Model::MobileNet => "mobilenet-v1",
         }
     }
 
@@ -36,7 +38,7 @@ impl Model {
         matches!(self, Model::Bert | Model::BertLarge | Model::Gpt2)
     }
 
-    pub fn all() -> [Model; 6] {
+    pub fn all() -> [Model; 7] {
         [
             Model::Bert,
             Model::BertLarge,
@@ -44,6 +46,7 @@ impl Model {
             Model::AlexNet,
             Model::ResNet50,
             Model::GoogleNet,
+            Model::MobileNet,
         ]
     }
 }
@@ -52,6 +55,22 @@ fn gemm(m: usize, n: usize, k: usize, dtype: DType) -> TensorProgram {
     TensorProgram::Gemm { m, n, k, dtype }
 }
 
+/// Square conv with explicit (stride, pad, groups) geometry.
+fn conv_g(
+    n: usize,
+    hw_: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    (stride, pad, groups): (usize, usize, usize),
+    dtype: DType,
+) -> TensorProgram {
+    TensorProgram::conv2d((n, hw_, hw_, cin), (k, k, cout), (stride, pad, groups), dtype)
+        .expect("model conv geometry is valid by construction")
+}
+
+/// Same-padded stride-1 ungrouped conv (the common CNN body layer):
+/// pad = k/2 keeps the spatial extent for odd k.
 fn conv(
     n: usize,
     hw_: usize,
@@ -60,7 +79,12 @@ fn conv(
     k: usize,
     dtype: DType,
 ) -> TensorProgram {
-    TensorProgram::Conv2d { n, h: hw_, w: hw_, cin, cout, kh: k, kw: k, dtype }
+    conv_g(n, hw_, cin, cout, k, (1, k / 2, 1), dtype)
+}
+
+/// Depthwise 3x3 conv (groups == cin), MobileNet style.
+fn dwconv(n: usize, hw_: usize, c: usize, stride: usize, dtype: DType) -> TensorProgram {
+    conv_g(n, hw_, c, c, 3, (stride, 1, c), dtype)
 }
 
 /// Transformer encoder/decoder stack trace. `m` = batch * seq rows.
@@ -102,8 +126,9 @@ pub fn trace(model: Model, dynamic: usize, dtype: DType) -> Vec<TensorProgram> {
         Model::AlexNet => {
             let b = dynamic;
             vec![
-                // (feature-map sizes after each stage, valid-conv view)
-                conv(b, 55, 3, 64, 11, dtype),
+                // Honest stem geometry: 224x224, 11x11, stride 4, pad 2
+                // -> 55x55; body layers are same-padded.
+                conv_g(b, 224, 3, 64, 11, (4, 2, 1), dtype),
                 conv(b, 27, 64, 192, 5, dtype),
                 conv(b, 13, 192, 384, 3, dtype),
                 conv(b, 13, 384, 256, 3, dtype),
@@ -115,8 +140,10 @@ pub fn trace(model: Model, dynamic: usize, dtype: DType) -> Vec<TensorProgram> {
         }
         Model::ResNet50 => {
             let b = dynamic;
-            let mut ops = vec![conv(b, 112, 3, 64, 7, dtype)];
-            // One representative bottleneck per stage x repeats.
+            // Honest stem: 224x224, 7x7, stride 2, pad 3 -> 112x112.
+            let mut ops = vec![conv_g(b, 224, 3, 64, 7, (2, 3, 1), dtype)];
+            // One representative bottleneck per stage x repeats
+            // (1x1 / same-padded 3x3 / 1x1).
             for &(hw_, cin, cmid, reps) in
                 &[(56, 64, 64, 3), (28, 256, 128, 4), (14, 512, 256, 6), (7, 1024, 512, 3)]
             {
@@ -132,7 +159,7 @@ pub fn trace(model: Model, dynamic: usize, dtype: DType) -> Vec<TensorProgram> {
         Model::GoogleNet => {
             let b = dynamic;
             let mut ops = vec![
-                conv(b, 112, 3, 64, 7, dtype),
+                conv_g(b, 224, 3, 64, 7, (2, 3, 1), dtype),
                 conv(b, 56, 64, 192, 3, dtype),
             ];
             // Inception blocks: mixed 1x1 / 3x3 / 5x5 branches.
@@ -143,6 +170,35 @@ pub fn trace(model: Model, dynamic: usize, dtype: DType) -> Vec<TensorProgram> {
                 ops.push(conv(b, hw_, 96, 128, 3, dtype));
                 ops.push(conv(b, hw_, cin, 16, 1, dtype));
                 ops.push(conv(b, hw_, 16, 32, 5, dtype));
+            }
+            ops.push(gemm(b, 1000, 1024, dtype));
+            ops
+        }
+        Model::MobileNet => {
+            // MobileNetV1: depthwise-separable blocks — the grouped /
+            // depthwise half of the conv family (group axis = batch).
+            let b = dynamic;
+            let mut ops = vec![conv_g(b, 224, 3, 32, 3, (2, 1, 1), dtype)];
+            let blocks: [(usize, usize, usize, usize); 13] = [
+                // (hw_in, cin, dw_stride, pw_cout)
+                (112, 32, 1, 64),
+                (112, 64, 2, 128),
+                (56, 128, 1, 128),
+                (56, 128, 2, 256),
+                (28, 256, 1, 256),
+                (28, 256, 2, 512),
+                (14, 512, 1, 512),
+                (14, 512, 1, 512),
+                (14, 512, 1, 512),
+                (14, 512, 1, 512),
+                (14, 512, 1, 512),
+                (14, 512, 2, 1024),
+                (7, 1024, 1, 1024),
+            ];
+            for &(hw_, cin, s, cout) in &blocks {
+                ops.push(dwconv(b, hw_, cin, s, dtype));
+                let hw_out = if s == 2 { hw_ / 2 } else { hw_ };
+                ops.push(conv(b, hw_out, cin, cout, 1, dtype));
             }
             ops.push(gemm(b, 1000, 1024, dtype));
             ops
@@ -199,7 +255,7 @@ mod tests {
 
     #[test]
     fn cnn_traces_are_conv_dominated() {
-        for m in [Model::AlexNet, Model::ResNet50, Model::GoogleNet] {
+        for m in [Model::AlexNet, Model::ResNet50, Model::GoogleNet, Model::MobileNet] {
             let ops = trace(m, 8, DType::F32);
             let convs = ops
                 .iter()
@@ -207,6 +263,44 @@ mod tests {
                 .count();
             assert!(convs * 2 > ops.len(), "{:?}", m);
         }
+    }
+
+    #[test]
+    fn traces_have_valid_geometry_and_honest_stems() {
+        for m in Model::all() {
+            for p in trace(m, 8, DType::F32) {
+                assert!(p.validate().is_ok(), "{:?}: {}", m, p.id());
+            }
+        }
+        // The ResNet stem must produce 112x112 from a 224x224 input.
+        let stem = &trace(Model::ResNet50, 1, DType::F32)[0];
+        assert_eq!(stem.conv_output(), Some((112, 112)));
+        // AlexNet: 11x11 stride-4 pad-2 stem -> 55x55.
+        let stem = &trace(Model::AlexNet, 1, DType::F32)[0];
+        assert_eq!(stem.conv_output(), Some((55, 55)));
+    }
+
+    #[test]
+    fn mobilenet_is_depthwise_separable() {
+        let ops = trace(Model::MobileNet, 4, DType::F32);
+        // 1 stem + 13 x (dw + pw) + classifier.
+        assert_eq!(ops.len(), 1 + 13 * 2 + 1);
+        let depthwise: Vec<&TensorProgram> = ops
+            .iter()
+            .filter(|p| {
+                matches!(p, TensorProgram::Conv2d { cin, groups, .. } if groups == cin)
+            })
+            .collect();
+        assert_eq!(depthwise.len(), 13);
+        for p in depthwise {
+            assert_eq!(p.space().op, crate::ir::OpKind::GroupedConv2d);
+        }
+        // Spatial chaining is consistent: dw output extent feeds the pw.
+        let pw_h = match &ops[2] {
+            TensorProgram::Conv2d { h, .. } => *h,
+            other => panic!("expected conv, got {}", other.id()),
+        };
+        assert_eq!(ops[1].conv_output().unwrap().0, pw_h);
     }
 
     #[test]

@@ -63,6 +63,24 @@ impl ArtifactEntry {
             .and_then(DType::parse)
             .unwrap_or(DType::F32)
     }
+
+    /// The Pallas inner tile (tm, tn, tk) recorded by aot.py — the L0
+    /// tile of the micro-kernel library. A gemm-family entry without it
+    /// is a malformed manifest, not an excuse for a plausible-looking
+    /// default tile.
+    pub fn l0_block(&self) -> Result<[usize; 3]> {
+        let get = |key: &str| {
+            self.param_usize(key).ok_or_else(|| {
+                anyhow!(
+                    "manifest entry {}: missing/invalid param {:?} \
+                     (regenerate with `make artifacts`)",
+                    self.name,
+                    key
+                )
+            })
+        };
+        Ok([get("tm")?, get("tn")?, get("tk")?])
+    }
 }
 
 /// Parsed artifacts/manifest.json.
@@ -112,6 +130,14 @@ impl Manifest {
             })
             .collect::<Option<Vec<_>>>()
             .ok_or_else(|| anyhow!("malformed manifest entry"))?;
+        // Duplicate artifact names would make `find` silently return
+        // whichever entry comes first — reject the manifest instead.
+        let mut seen = std::collections::HashSet::new();
+        for e in &entries {
+            if !seen.insert(e.name.as_str()) {
+                bail!("{}: duplicate artifact name {:?}", path.display(), e.name);
+            }
+        }
         Ok(Manifest { dir: dir.to_path_buf(), entries })
     }
 
@@ -433,11 +459,7 @@ pub fn build_real_library(
     let mut kernels = Vec::new();
     for (block, name) in engine.manifest.gemm_acc_blocks(dtype) {
         let entry = engine.manifest.find(&name).unwrap();
-        let l0 = Tile::from3([
-            entry.param_usize("tm").unwrap_or(8),
-            entry.param_usize("tn").unwrap_or(128),
-            entry.param_usize("tk").unwrap_or(128),
-        ]);
+        let l0 = Tile::from3(entry.l0_block()?);
         let base_cost = engine.time_artifact(&name, reps)?;
         kernels.push(MicroKernel { l0, l1: Tile::from3(block), backend, base_cost });
     }
@@ -454,12 +476,83 @@ pub fn build_real_library(
     })
 }
 
-/// Dynamic-shape convolution on the real engine via implicit GEMM:
-/// im2col in Rust (the data-layout half Vortex folds into the rKernel
-/// recursion, §4.2) + the dynamic GEMM kernel constructor for compute.
+/// im2col patch matrix of one channel group (the data-layout half
+/// Vortex folds into the rKernel recursion, §4.2), honoring stride and
+/// symmetric zero padding.
 ///
-/// `x` is NHWC row-major (n, h, w, cin); `w` is (kh, kw, cin, cout);
-/// valid padding, stride 1. Returns NHWC (n, oh, ow, cout) f32.
+/// `x` is NHWC row-major (n, h, w, cin). Rows are output positions
+/// (b, oy, ox); columns are filter taps in (i, j, c) order over the
+/// `cg` channels starting at `c0` — matching the group's filter slab
+/// reshaped as a (kh·kw·cg, cout/g) row-major matrix. Taps that fall
+/// in the zero-padding halo stay zero.
+pub fn im2col_patches(
+    x: &[f32],
+    (n, h, wd, cin): (usize, usize, usize, usize),
+    (kh, kw): (usize, usize),
+    (stride, pad): (usize, usize),
+    (c0, cg): (usize, usize),
+) -> Vec<f32> {
+    let (oh, ow) = crate::ir::conv_out_dims((h, wd), (kh, kw), stride, pad)
+        .expect("im2col_patches: invalid conv geometry");
+    assert!(c0 + cg <= cin, "channel slice {}+{} exceeds cin {}", c0, cg, cin);
+    let kdim = kh * kw * cg;
+    let m = n * oh * ow;
+    let mut patches = vec![0f32; m * kdim];
+    for b in 0..n {
+        for oy in 0..oh {
+            let iy0 = (oy * stride) as isize - pad as isize;
+            for ox in 0..ow {
+                let ix0 = (ox * stride) as isize - pad as isize;
+                let row = ((b * oh + oy) * ow + ox) * kdim;
+                for i in 0..kh {
+                    let iy = iy0 + i as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // padding halo: stays zero
+                    }
+                    for j in 0..kw {
+                        let ix = ix0 + j as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let src =
+                            ((b * h + iy as usize) * wd + ix as usize) * cin + c0;
+                        let dst = row + (i * kw + j) * cg;
+                        patches[dst..dst + cg].copy_from_slice(&x[src..src + cg]);
+                    }
+                }
+            }
+        }
+    }
+    patches
+}
+
+/// Group `g`'s filter slab as a (kh·kw·cg, cout/groups) row-major
+/// matrix. `w` is (kh, kw, cin/groups, cout) row-major; output channel
+/// `co` belongs to group `co / (cout/groups)`.
+pub fn filter_group(
+    w: &[f32],
+    (kh, kw, cg, cout): (usize, usize, usize, usize),
+    (g, groups): (usize, usize),
+) -> Vec<f32> {
+    let coutg = cout / groups;
+    let kdim = kh * kw * cg;
+    let mut out = vec![0f32; kdim * coutg];
+    for r in 0..kdim {
+        let src = r * cout + g * coutg;
+        out[r * coutg..(r + 1) * coutg].copy_from_slice(&w[src..src + coutg]);
+    }
+    out
+}
+
+/// Dynamic-shape convolution on the real engine via (per-group)
+/// implicit GEMM: im2col in Rust + the dynamic GEMM kernel constructor
+/// for compute. Supports stride, symmetric zero padding and channel
+/// groups (depthwise when `groups == cin`).
+///
+/// `x` is NHWC row-major (n, h, w, cin); `w` is (kh, kw, cin/groups,
+/// cout); `geom` is (stride, pad, groups). Returns NHWC (n, oh, ow,
+/// cout) f32 (inputs are converted to `dtype` on device).
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_dynamic(
     engine: &RealEngine,
     selector: &crate::coordinator::Selector,
@@ -467,50 +560,62 @@ pub fn conv2d_dynamic(
     w: &[f32],
     (n, h, wd, cin): (usize, usize, usize, usize),
     (kh, kw, cout): (usize, usize, usize),
+    (stride, pad, groups): (usize, usize, usize),
+    dtype: DType,
 ) -> Result<Vec<f32>> {
-    if h < kh || wd < kw {
-        bail!("feature map {}x{} smaller than filter {}x{}", h, wd, kh, kw);
+    // Geometry is validated where every conv program is: at program
+    // construction. The runtime never sees a bogus iteration space.
+    let program = crate::ir::TensorProgram::conv2d(
+        (n, h, wd, cin),
+        (kh, kw, cout),
+        (stride, pad, groups),
+        dtype,
+    )
+    .map_err(|e| anyhow!("conv2d_dynamic: {}", e))?;
+    let (oh, ow) = program.conv_output().unwrap();
+    let (cg, coutg) = (cin / groups, cout / groups);
+    let (m, kdim) = (n * oh * ow, kh * kw * cg);
+    if x.len() != n * h * wd * cin {
+        bail!("conv2d_dynamic: input has {} elems, want {}", x.len(), n * h * wd * cin);
     }
-    let (oh, ow) = (h - kh + 1, wd - kw + 1);
-    let (m, kdim) = (n * oh * ow, kh * kw * cin);
-    // im2col patch matrix: row (b, oy, ox) -> taps in (i, j, c) order,
-    // matching the filter reshaped as (kh*kw*cin, cout) row-major.
-    let mut patches = vec![0f32; m * kdim];
-    for b in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((b * oh + oy) * ow + ox) * kdim;
-                for i in 0..kh {
-                    // one contiguous (kw * cin)-wide slab per filter row
-                    let src = ((b * h + oy + i) * wd + ox) * cin;
-                    let dst = row + i * kw * cin;
-                    patches[dst..dst + kw * cin]
-                        .copy_from_slice(&x[src..src + kw * cin]);
-                }
-            }
-        }
+    if w.len() != kh * kw * cg * cout {
+        bail!("conv2d_dynamic: filter has {} elems, want {}", w.len(), kh * kw * cg * cout);
     }
     // Select through the SAME op-aware selector as every other op: the
-    // conv program's IterSpace goes straight in, and the selector
-    // resolves it against a conv library or the implicit-GEMM fallback
-    // (no conv-specific selection side path here).
-    let program = crate::ir::TensorProgram::Conv2d {
-        n,
-        h,
-        w: wd,
-        cin,
-        cout,
-        kh,
-        kw,
-        dtype: DType::F32,
-    };
+    // conv program's IterSpace goes straight in (rank 3 for ungrouped,
+    // rank 4 with the group batch axis otherwise), and the selector
+    // resolves it against a native library or the measurement-alias
+    // fallback (no conv-specific selection side path here).
     let space = program.space();
-    debug_assert_eq!(space.dims.to3(), [m, cout, kdim]);
     let sel = selector
         .select(space, crate::coordinator::HwMode::Adaptive)
         .ok_or_else(|| anyhow!("no kernel for conv space {:?}", space))?;
     let kern = selector.kernel(&sel);
-    engine.gemm_dynamic(&patches, w, (m, cout, kdim), kern.l1.to3(), DType::F32)
+    // The contraction block of the selected tile: rank-3 tiles are the
+    // block; rank-4 (group-batched) tiles carry it after the group axis.
+    let block = match kern.l1.rank() {
+        3 => kern.l1.to3(),
+        4 => [kern.l1[1], kern.l1[2], kern.l1[3]],
+        r => bail!("unsupported conv kernel rank {}", r),
+    };
+    if groups == 1 {
+        let patches = im2col_patches(x, (n, h, wd, cin), (kh, kw), (stride, pad), (0, cin));
+        return engine.gemm_dynamic(&patches, w, (m, cout, kdim), block, dtype);
+    }
+    // Per-group patch matrices feeding the same kernel constructor;
+    // group results interleave along the output-channel axis.
+    let mut out = vec![0f32; m * cout];
+    for g in 0..groups {
+        let patches =
+            im2col_patches(x, (n, h, wd, cin), (kh, kw), (stride, pad), (g * cg, cg));
+        let wg = filter_group(w, (kh, kw, cg, cout), (g, groups));
+        let c = engine.gemm_dynamic(&patches, &wg, (m, coutg, kdim), block, dtype)?;
+        for r in 0..m {
+            out[r * cout + g * coutg..r * cout + (g + 1) * coutg]
+                .copy_from_slice(&c[r * coutg..(r + 1) * coutg]);
+        }
+    }
+    Ok(out)
 }
 
 /// Reference row-major triple-loop GEMM for verification in tests.
@@ -529,28 +634,46 @@ pub fn gemm_host_ref(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<
     c
 }
 
-/// Reference direct NHWC valid convolution (for verification).
+/// Reference direct NHWC convolution (for verification): stride,
+/// symmetric zero padding and channel groups. `w` is (kh, kw,
+/// cin/groups, cout) row-major.
 pub fn conv2d_host_ref(
     x: &[f32],
     w: &[f32],
     (n, h, wd, cin): (usize, usize, usize, usize),
     (kh, kw, cout): (usize, usize, usize),
+    (stride, pad, groups): (usize, usize, usize),
 ) -> Vec<f32> {
-    let (oh, ow) = (h - kh + 1, wd - kw + 1);
+    let (oh, ow) = crate::ir::conv_out_dims((h, wd), (kh, kw), stride, pad)
+        .expect("conv2d_host_ref: invalid conv geometry");
+    let (cg, coutg) = (cin / groups, cout / groups);
     let mut out = vec![0f32; n * oh * ow * cout];
     for b in 0..n {
         for oy in 0..oh {
+            let iy0 = (oy * stride) as isize - pad as isize;
             for ox in 0..ow {
+                let ix0 = (ox * stride) as isize - pad as isize;
                 let dst = ((b * oh + oy) * ow + ox) * cout;
                 for i in 0..kh {
+                    let iy = iy0 + i as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
                     for j in 0..kw {
-                        let src = ((b * h + oy + i) * wd + ox + j) * cin;
-                        for ci in 0..cin {
-                            let xv = x[src + ci];
-                            let wrow = ((i * kw + j) * cin + ci) * cout;
-                            for co in 0..cout {
-                                out[dst + co] += xv * w[wrow + co];
+                        let ix = ix0 + j as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let src = ((b * h + iy as usize) * wd + ix as usize) * cin;
+                        for co in 0..cout {
+                            let g = co / coutg;
+                            let mut acc = out[dst + co];
+                            for c in 0..cg {
+                                let xv = x[src + g * cg + c];
+                                let wv = w[((i * kw + j) * cg + c) * cout + co];
+                                acc += xv * wv;
                             }
+                            out[dst + co] = acc;
                         }
                     }
                 }
@@ -563,6 +686,9 @@ pub fn conv2d_host_ref(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::conv_out_dims;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
 
     #[test]
     fn host_ref_gemm_known_values() {
@@ -578,5 +704,180 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("manifest.json"), "{\"entries\": [{}]}").unwrap();
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    fn entry_json(name: &str) -> String {
+        format!(
+            r#"{{"name": "{name}", "kind": "gemm_acc", "file": "{name}.hlo.txt",
+                 "params": {{"bm": 8, "bn": 128, "bk": 128,
+                             "tm": 8, "tn": 128, "tk": 128, "in_dtype": "f32"}},
+                 "inputs": [], "outputs": []}}"#
+        )
+    }
+
+    #[test]
+    fn manifest_rejects_duplicate_artifact_names() {
+        let dir = std::env::temp_dir().join("vortex_manifest_dup_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dup = format!(
+            "{{\"entries\": [{}, {}]}}",
+            entry_json("gemm_acc_8x128x128_f32"),
+            entry_json("gemm_acc_8x128x128_f32")
+        );
+        std::fs::write(dir.join("manifest.json"), dup).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("duplicate artifact name"), "{}", err);
+        // Distinct names load fine.
+        let ok = format!(
+            "{{\"entries\": [{}, {}]}}",
+            entry_json("gemm_acc_8x128x128_f32"),
+            entry_json("gemm_acc_16x128x128_f32")
+        );
+        std::fs::write(dir.join("manifest.json"), ok).unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap().entries.len(), 2);
+    }
+
+    #[test]
+    fn l0_block_requires_inner_tile_params() {
+        let dir = std::env::temp_dir().join("vortex_manifest_l0_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let no_tile = r#"{"entries": [{"name": "gemm_acc_8x128x128_f32",
+            "kind": "gemm_acc", "file": "x.hlo.txt",
+            "params": {"bm": 8, "bn": 128, "bk": 128, "in_dtype": "f32"},
+            "inputs": [], "outputs": []}]}"#;
+        std::fs::write(dir.join("manifest.json"), no_tile).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.entries[0].l0_block().unwrap_err().to_string();
+        assert!(err.contains("missing/invalid param \"tm\""), "{}", err);
+        // A well-formed entry yields the recorded tile, not a default.
+        let ok = format!("{{\"entries\": [{}]}}", entry_json("gemm_acc_8x128x128_f32"));
+        std::fs::write(dir.join("manifest.json"), ok).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries[0].l0_block().unwrap(), [8, 128, 128]);
+    }
+
+    // -- generalized conv geometry -----------------------------------------
+
+    /// im2col + per-group host GEMM: the exact compute conv2d_dynamic
+    /// performs, minus the device.
+    fn conv_via_im2col(
+        x: &[f32],
+        w: &[f32],
+        io: (usize, usize, usize, usize),
+        filt: (usize, usize, usize),
+        geom: (usize, usize, usize),
+    ) -> Vec<f32> {
+        let (n, h, wd, cin) = io;
+        let (kh, kw, cout) = filt;
+        let (stride, pad, groups) = geom;
+        let (oh, ow) = conv_out_dims((h, wd), (kh, kw), stride, pad).unwrap();
+        let (cg, coutg) = (cin / groups, cout / groups);
+        let (m, kdim) = (n * oh * ow, kh * kw * cg);
+        let mut out = vec![0f32; m * cout];
+        for g in 0..groups {
+            let patches =
+                im2col_patches(x, io, (kh, kw), (stride, pad), (g * cg, cg));
+            let wg = filter_group(w, (kh, kw, cg, cout), (g, groups));
+            let c = gemm_host_ref(&patches, &wg, m, coutg, kdim);
+            for r in 0..m {
+                out[r * cout + g * coutg..r * cout + (g + 1) * coutg]
+                    .copy_from_slice(&c[r * coutg..(r + 1) * coutg]);
+            }
+        }
+        out
+    }
+
+    fn assert_same(got: &[f32], want: &[f32], what: &str) -> Result<(), String> {
+        if got.len() != want.len() {
+            return Err(format!("{}: length {} vs {}", what, got.len(), want.len()));
+        }
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            if (g - w).abs() > 1e-4 * (1.0 + w.abs()) {
+                return Err(format!("{}: elem {} differs: {} vs {}", what, i, g, w));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_im2col_gemm_matches_direct_conv_reference() {
+        // Satellite: across random (stride, padding, groups, shape)
+        // tuples — including partial tiles and depthwise groups == cin —
+        // the generalized im2col + gemm_host_ref path computes exactly
+        // what the direct conv2d_host_ref computes.
+        forall(
+            "im2col-gemm-equals-direct-conv",
+            60,
+            0xC0DE,
+            |r: &mut Rng, size| {
+                let kh = r.usize(1, 3);
+                let kw = r.usize(1, 3);
+                let stride = r.usize(1, 3);
+                let pad = r.usize(0, 2);
+                // Depthwise (cg = 1) in a third of the cases.
+                let cg = if r.usize(0, 2) == 0 { 1 } else { r.usize(1, 3) };
+                let groups = r.usize(1, 4);
+                let coutg = r.usize(1, 3);
+                let grow = 1 + size / 25;
+                let h = (kh.saturating_sub(2 * pad)).max(1) + r.usize(0, 4 * grow);
+                let w = (kw.saturating_sub(2 * pad)).max(1) + r.usize(0, 4 * grow);
+                let n = r.usize(1, 2);
+                ((n, h, w, cg * groups), (kh, kw, coutg * groups), (stride, pad, groups))
+            },
+            |&(io, filt, geom)| {
+                let (n, h, w, cin) = io;
+                let (kh, kw, cout) = filt;
+                let cg = cin / geom.2;
+                let mut rng = Rng::new(n as u64 + h as u64 * 31 + w as u64 * 7);
+                let x = rng.normal_f32_vec(n * h * w * cin);
+                let wgt = rng.normal_f32_vec(kh * kw * cg * cout);
+                let got = conv_via_im2col(&x, &wgt, io, filt, geom);
+                let want = conv2d_host_ref(&x, &wgt, io, filt, geom);
+                assert_same(&got, &want, "im2col-vs-direct")
+            },
+        );
+    }
+
+    #[test]
+    fn host_ref_conv_known_values() {
+        // 1x1 conv with identity channel mix copies the input.
+        let x: Vec<f32> = (0..2 * 3 * 3 * 2).map(|v| v as f32).collect();
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // (1,1,2,2) identity
+        let y = conv2d_host_ref(&x, &w, (2, 3, 3, 2), (1, 1, 2), (1, 0, 1));
+        assert_eq!(y, x);
+        // Stride 2 keeps every other position.
+        let y2 = conv2d_host_ref(&x, &w, (2, 3, 3, 2), (1, 1, 2), (2, 0, 1));
+        assert_eq!(y2.len(), 2 * 2 * 2 * 2);
+        assert_eq!(&y2[..2], &x[..2]); // (0,0)
+        assert_eq!(&y2[2..4], &x[4..6]); // (0,2)
+        // Depthwise 1x1 with weights [2, 3]: channel c scales by w[c].
+        let wdw = vec![2.0, 3.0]; // (1,1,1,2), groups = 2
+        let ydw = conv2d_host_ref(&x, &wdw, (1, 2, 2, 2), (1, 1, 2), (1, 0, 2));
+        for (i, v) in ydw.iter().enumerate() {
+            let scale = if i % 2 == 0 { 2.0 } else { 3.0 };
+            assert_eq!(*v, x[i] * scale);
+        }
+    }
+
+    #[test]
+    fn padded_conv_matches_manual_halo() {
+        // 1x1x1 input, 3x3 sum filter, pad 1: output = input everywhere
+        // the filter tap hits the single pixel.
+        let x = vec![5.0f32];
+        let w = vec![1.0f32; 9]; // (3,3,1,1) all-ones
+        let y = conv2d_host_ref(&x, &w, (1, 1, 1, 1), (3, 3, 1), (1, 1, 1));
+        assert_eq!(y, vec![5.0]); // only the center tap lands in-bounds
+        // pad 2: 3x3 output, each position sees the pixel once.
+        let y2 = conv2d_host_ref(&x, &w, (1, 1, 1, 1), (3, 3, 1), (1, 2, 1));
+        assert_eq!(y2, vec![5.0; 9]);
+    }
+
+    #[test]
+    fn im2col_rejects_invalid_geometry() {
+        let x = vec![0f32; 4 * 4];
+        let r = std::panic::catch_unwind(|| {
+            im2col_patches(&x, (1, 2, 2, 4), (5, 5), (1, 0), (0, 4))
+        });
+        assert!(r.is_err(), "undersized feature map must not im2col");
     }
 }

@@ -179,34 +179,65 @@ fn softmax_and_encoder_artifacts_execute() {
     assert!(out.iter().all(|v| v.is_finite()));
 }
 
-#[test]
-fn conv2d_dynamic_matches_direct_reference() {
-    use vortex::runtime::{build_real_library, conv2d_dynamic, conv2d_host_ref};
-    let Some(eng) = engine() else { return };
+/// Real-path conv selector: the profiled GEMM library plus its lift
+/// onto the group-batched op — the real runtime serves grouped convs
+/// as a loop of gemm_acc blocks, so the lifted library's costs are the
+/// honest per-group block costs.
+fn conv_selector(eng: &RealEngine) -> Selector {
+    use vortex::ir::OpKind;
     let hw = presets::cpu_pjrt();
-    let lib = build_real_library(&eng, &hw, DType::F32, 1).expect("library");
-    let selector = Selector::new(hw, vec![lib]);
-    // ResNet-ish 3x3 conv with odd spatial extent (exercises padding).
-    let (n, h, w, cin) = (2usize, 9usize, 9usize, 16usize);
-    let (kh, kw, cout) = (3usize, 3usize, 32usize);
-    let x = rand_vec(n * h * w * cin, 31);
-    let wgt = rand_vec(kh * kw * cin * cout, 32);
-    let got = conv2d_dynamic(&eng, &selector, &x, &wgt, (n, h, w, cin), (kh, kw, cout))
-        .expect("conv");
-    let want = conv2d_host_ref(&x, &wgt, (n, h, w, cin), (kh, kw, cout));
-    assert_close(&got, &want, 1e-3, "conv2d implicit gemm");
+    let lib = build_real_library(eng, &hw, DType::F32, 1).expect("library");
+    let grouped = lib
+        .lift_to_batched(OpKind::GroupedConv2d)
+        .expect("gemm library lifts onto the group-batched op");
+    Selector::new(hw, vec![lib, grouped])
 }
 
 #[test]
-fn conv2d_dynamic_rejects_undersized_fmap() {
-    use vortex::runtime::{build_real_library, conv2d_dynamic};
+fn conv2d_dynamic_matches_direct_reference_across_the_family() {
+    use vortex::runtime::{conv2d_dynamic, conv2d_host_ref};
     let Some(eng) = engine() else { return };
-    let hw = presets::cpu_pjrt();
-    let lib = build_real_library(&eng, &hw, DType::F32, 1).expect("library");
-    let selector = Selector::new(hw, vec![lib]);
+    let selector = conv_selector(&eng);
+    // (io, filt, geom): valid, strided+padded, depthwise, grouped.
+    for (io, filt, geom) in [
+        ((2usize, 9usize, 9usize, 16usize), (3usize, 3usize, 32usize), (1usize, 0usize, 1usize)),
+        ((2, 9, 9, 16), (3, 3, 32), (2, 1, 1)),   // ResNet-style stride
+        ((1, 12, 12, 3), (5, 5, 8), (3, 2, 1)),   // coarse stride + halo
+        ((2, 8, 8, 16), (3, 3, 16), (1, 1, 16)),  // depthwise
+        ((1, 8, 8, 16), (3, 3, 32), (2, 1, 4)),   // grouped, strided
+    ] {
+        let (n, h, w, cin) = io;
+        let (kh, kw, cout) = filt;
+        let cg = cin / geom.2;
+        let x = rand_vec(n * h * w * cin, 31 + h as u64);
+        let wgt = rand_vec(kh * kw * cg * cout, 32 + cout as u64);
+        let got = conv2d_dynamic(&eng, &selector, &x, &wgt, io, filt, geom, DType::F32)
+            .expect("conv");
+        let want = conv2d_host_ref(&x, &wgt, io, filt, geom);
+        assert_close(
+            &got,
+            &want,
+            1e-3,
+            &format!("conv {:?} {:?} {:?}", io, filt, geom),
+        );
+    }
+}
+
+#[test]
+fn conv2d_dynamic_rejects_invalid_geometry() {
+    use vortex::runtime::conv2d_dynamic;
+    let Some(eng) = engine() else { return };
+    let selector = conv_selector(&eng);
     let x = vec![0f32; 2 * 2 * 2 * 4];
     let w = vec![0f32; 3 * 3 * 4 * 8];
-    assert!(
-        conv2d_dynamic(&eng, &selector, &x, &w, (2, 2, 2, 4), (3, 3, 8)).is_err()
-    );
+    // Undersized feature map, zero stride, non-dividing groups: each is
+    // a construction-time error surfaced by the runtime entry point.
+    for geom in [(1usize, 0usize, 1usize), (0, 1, 1), (1, 1, 3)] {
+        assert!(
+            conv2d_dynamic(&eng, &selector, &x, &w, (2, 2, 2, 4), (3, 3, 8), geom, DType::F32)
+                .is_err(),
+            "geom {:?} accepted",
+            geom
+        );
+    }
 }
