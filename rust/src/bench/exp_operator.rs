@@ -172,11 +172,12 @@ pub fn table5(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
     vec![summary]
 }
 
-/// Operator-generality study: GEMM, batched GEMM, Conv2d and grouped /
-/// depthwise conv each compiled through the SAME candgen → compile →
-/// select pipeline (one native library per op) and executed in the
-/// simulator. Demonstrates the hierarchized strategy space over every
-/// registered op — the extension point every new workload plugs into.
+/// Operator-generality study: GEMM, batched GEMM, Conv2d, grouped /
+/// depthwise conv and the attention-fused chain each compiled through
+/// the SAME candgen → compile → select pipeline (one native library
+/// per op) and executed in the simulator. Demonstrates the
+/// hierarchized strategy space over every registered op — the
+/// extension point every new workload plugs into.
 pub fn ops(out_dir: &Path, seed: u64) -> Vec<Table> {
     let tb = Testbed::GpuTensorCore;
     let sim = Simulator::new(tb.hw(), seed);
@@ -210,6 +211,11 @@ pub fn ops(out_dir: &Path, seed: u64) -> Vec<Table> {
                     matches!(c.program, crate::ir::TensorProgram::Conv2d { groups, .. }
                         if groups > 1)
                 })
+                .collect(),
+            // The fused chain: seq-swept attention head groups.
+            OpKind::FusedAttention => workloads::attention_suite(tb.dtype(), seed)
+                .into_iter()
+                .step_by(4)
                 .collect(),
         };
         let libs = selector.libraries.iter().filter(|l| l.op == op).count();

@@ -86,17 +86,34 @@ impl Engine {
     /// the runtime_select bench.
     pub fn time_space(&self, sim: &Simulator, space: IterSpace) -> f64 {
         const VORTEX_SCHED_OVERHEAD: f64 = 2e-6;
+        // A fused chain dispatched through a single-kernel lens (an
+        // alias library, the folded contraction view, or a baseline
+        // planner) executes one dispatch per constituent kernel.
+        let kernels = space.op.spec().chain_kernels() as f64;
         match self {
             Engine::Vortex { selector, mode } => {
                 // An op with no native library is served through its
                 // folded contraction view (batch → M) by the GEMM
                 // libraries — coverage is never lost, precision is.
-                let sel = selector
-                    .select(space, *mode)
-                    .or_else(|| selector.select(space.contraction(), *mode))
-                    .expect("vortex select");
-                let lib = &selector.libraries[sel.lib];
-                sim.execute(lib.dtype, &selector.chain(&sel)) + VORTEX_SCHED_OVERHEAD
+                match selector.select(space, *mode) {
+                    Some(sel) => {
+                        let lib = &selector.libraries[sel.lib];
+                        // Native library: the chain is one simulated
+                        // strategy. Alias library: one block strategy
+                        // per constituent kernel.
+                        let mult = if lib.op == space.op { 1.0 } else { kernels };
+                        sim.execute(lib.dtype, &selector.chain(&sel)) * mult
+                            + VORTEX_SCHED_OVERHEAD
+                    }
+                    None => {
+                        let sel = selector
+                            .select(space.contraction(), *mode)
+                            .expect("vortex select");
+                        let lib = &selector.libraries[sel.lib];
+                        sim.execute(lib.dtype, &selector.chain(&sel)) * kernels
+                            + VORTEX_SCHED_OVERHEAD
+                    }
+                }
             }
             Engine::Baseline(b) => {
                 let chain = b.plan(space.contraction());
@@ -105,7 +122,7 @@ impl Engine {
                 } else {
                     DType::F32
                 };
-                sim.execute(dtype, &chain) + b.dispatch_overhead()
+                (sim.execute(dtype, &chain) + b.dispatch_overhead()) * kernels
             }
         }
     }

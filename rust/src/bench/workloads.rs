@@ -162,6 +162,31 @@ pub fn batched_gemm_suite(dtype: DType, seed: u64) -> Vec<Case> {
     out
 }
 
+/// Attention-fused chain suite (51 cases): transformer head-group
+/// chains sweeping the dynamic SEQUENCE LENGTH — the paper's 17-point
+/// [1, 476] grid, including seq = 1 (decode) and non-power-of-two
+/// lengths — at each fixed head dimension common to real models, with
+/// randomized batch x heads. Sequence length enters the fused space
+/// quadratically (both spatial axes), which is exactly the dynamism
+/// the chain op exists for.
+pub fn attention_suite(dtype: DType, seed: u64) -> Vec<Case> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for &hd in &[32usize, 64, 128] {
+        for i in 0..17 {
+            let seq = 1 + i * 475 / 16;
+            let heads = [8usize, 12, 16][rng.usize(0, 2)];
+            let batch = log_uniform(&mut rng, 1, 8);
+            out.push(Case {
+                category: "attention_chain",
+                program: TensorProgram::attention((batch, seq), (heads * hd, heads), dtype)
+                    .expect("suite geometry is valid by construction"),
+            });
+        }
+    }
+    out
+}
+
 /// Fig. 3 / Table 6 BERT GEMM-1 shape: M = batch x seq, N = 768, K = 2304.
 pub fn bert_gemm1(batch: usize, seq: usize, dtype: DType) -> TensorProgram {
     TensorProgram::Gemm { m: batch * seq, n: 768, k: 2304, dtype }
@@ -177,6 +202,31 @@ mod tests {
         assert_eq!(conv_suite(DType::F32, 1).len(), 691);
         // 506 + 691 = 1197 operator configurations (paper §7.1)
         assert_eq!(batched_gemm_suite(DType::F32, 1).len(), 200);
+        assert_eq!(attention_suite(DType::F32, 1).len(), 3 * 17);
+    }
+
+    #[test]
+    fn attention_suite_sweeps_seq_at_fixed_head_dims() {
+        let cases = attention_suite(DType::F16, 9);
+        let mut seqs = std::collections::BTreeSet::new();
+        let mut head_dims = std::collections::BTreeSet::new();
+        for c in &cases {
+            assert!(c.program.validate().is_ok(), "{}", c.program.id());
+            let TensorProgram::Attention { batch, seq, d, heads, .. } = &c.program else {
+                panic!("non-attention case in attention suite");
+            };
+            let (batch, seq, d, heads) = (*batch, *seq, *d, *heads);
+            assert!((1..=8).contains(&batch));
+            assert!((1..=476).contains(&seq));
+            seqs.insert(seq);
+            head_dims.insert(d / heads);
+            assert_eq!(c.program.space().op, crate::ir::OpKind::FusedAttention);
+        }
+        // The paper's dynamic range endpoints, decode step included,
+        // at every fixed head dim.
+        assert!(seqs.contains(&1) && seqs.contains(&476));
+        assert!(seqs.iter().any(|s| !s.is_power_of_two() && *s > 1));
+        assert_eq!(head_dims.into_iter().collect::<Vec<_>>(), vec![32, 64, 128]);
     }
 
     #[test]

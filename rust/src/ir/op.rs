@@ -12,15 +12,17 @@
 //! * [`OpSpec`] — per-operator iteration-space rank, axis roles, FLOP
 //!   count, working-set formula, per-level load/store traffic, padding /
 //!   grid math and the AOT artifact-name convention.
-//! * [`OpKind`] + the concrete [`Gemm`], [`BatchedGemm`], [`Conv2d`]
-//!   and [`GroupedConv2d`] ops — `OpKind` is the compact `Copy` handle
-//!   stored in candidates, strategies and libraries; `.spec()`
-//!   dispatches to the behavior.
+//! * [`OpKind`] + the concrete [`Gemm`], [`BatchedGemm`], [`Conv2d`],
+//!   [`GroupedConv2d`] and [`FusedAttention`] ops — `OpKind` is the
+//!   compact `Copy` handle stored in candidates, strategies and
+//!   libraries; `.spec()` dispatches to the behavior.
 //! * [`IterSpace`] — a runtime problem: (op, concrete dims, dtype).
 //!
 //! Adding a new operator = implementing `OpSpec` for a unit struct and
 //! registering it in `OpKind`; candgen, the cost model, the compiler,
-//! the selector and the simulator pick it up unchanged.
+//! the selector and the simulator pick it up unchanged. The full
+//! per-layer recipe (with [`FusedAttention`] as the worked example)
+//! lives in `docs/ARCHITECTURE.md`.
 
 use std::fmt;
 use std::ops::{Index, IndexMut};
@@ -59,9 +61,20 @@ const fn ax(name: char, role: AxisRole) -> Axis {
 
 /// A tile over an op's axes: rank-tagged, fixed capacity, `Copy`.
 ///
-/// Unused trailing dims are always 1, so `Eq`/`Hash`/`Ord` behave as if
-/// only the first `rank` dims existed. For rank-3 (contraction-view)
-/// tiles the lexicographic order matches the old `[usize; 3]` order.
+/// Invariants:
+///
+/// * `1 <= rank <= MAX_AXES`, checked at construction;
+/// * unused trailing dims are always 1, so `Eq`/`Hash`/`Ord` behave as
+///   if only the first `rank` dims existed (for rank-3 contraction
+///   tiles the lexicographic order matches the old `[usize; 3]`
+///   order);
+/// * the elementwise algebra (`ceil_div`, `mul`, `round_up_to`,
+///   `is_multiple_of`, `zip_map`) requires equal ranks and panics on a
+///   mismatch — a rank-3 conv tile never silently combines with a
+///   rank-4 batched tile.
+///
+/// Being `Copy` with no heap payload keeps the runtime selection hot
+/// path allocation-free.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Tile {
     rank: u8,
@@ -187,20 +200,29 @@ impl fmt::Display for Tile {
 // ---------------------------------------------------------------------------
 
 /// Compact operator handle stored in candidates / strategies / libraries.
+///
+/// The `name()` strings double as the JSON `"op"` field of serialized
+/// libraries and as the artifact-name prefix family; [`OpKind::parse`]
+/// is the strict inverse. Note that `"softmax"` is deliberately NOT an
+/// op: the row-softmax is the fused epilogue of the [`FusedAttention`]
+/// chain (a profiler micro-measurement, see
+/// `Profiler::measure_softmax`), never a standalone strategy space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OpKind {
     Gemm,
     BatchedGemm,
     Conv2d,
     GroupedConv2d,
+    FusedAttention,
 }
 
 impl OpKind {
-    pub const ALL: [OpKind; 4] = [
+    pub const ALL: [OpKind; 5] = [
         OpKind::Gemm,
         OpKind::BatchedGemm,
         OpKind::Conv2d,
         OpKind::GroupedConv2d,
+        OpKind::FusedAttention,
     ];
 
     pub fn spec(self) -> &'static dyn OpSpec {
@@ -209,6 +231,7 @@ impl OpKind {
             OpKind::BatchedGemm => &BatchedGemm,
             OpKind::Conv2d => &Conv2d,
             OpKind::GroupedConv2d => &GroupedConv2d,
+            OpKind::FusedAttention => &FusedAttention,
         }
     }
 
@@ -216,6 +239,9 @@ impl OpKind {
         self.spec().name()
     }
 
+    /// Strict inverse of [`OpKind::name`]: unknown strings (including
+    /// `"softmax"`, which is an epilogue measurement, not an op) are
+    /// `None`.
     pub fn parse(s: &str) -> Option<OpKind> {
         OpKind::ALL.into_iter().find(|o| o.name() == s)
     }
@@ -227,24 +253,34 @@ impl fmt::Display for OpKind {
     }
 }
 
-/// Per-operator strategy-space definition. Implementations must keep
-/// the reduction axis LAST — candgen's capacity-break and the cost
-/// model's temporal loop rely on it.
+/// Per-operator strategy-space definition: everything the candgen →
+/// cost → compile → select pipeline needs to know about an operator.
+///
+/// Invariants every implementation must uphold:
+///
+/// * the reduction axis is LAST and there is exactly ONE — candgen's
+///   capacity-break and the cost model's temporal loop rely on it;
+/// * `working_set` is monotone in every tile dim (candgen's
+///   ascending-reduction-ladder break assumes it);
+/// * `rank()` is at most [`MAX_AXES`].
 pub trait OpSpec: Sync {
     /// Stable name, also the JSON/artifact identifier ("gemm", ...).
     fn name(&self) -> &'static str;
 
+    /// The compact handle this spec dispatches from.
     fn kind(&self) -> OpKind;
 
     /// Iteration-space axes, reduction last.
     fn axes(&self) -> &'static [Axis];
 
+    /// Iteration-space rank (axis count), at most [`MAX_AXES`].
     fn rank(&self) -> usize {
         self.axes().len()
     }
 
     /// Lift a backend's 3-axis ISA granularity onto this op's axes
-    /// (batch axes get granularity 1).
+    /// (batch axes get granularity 1: an ISA instruction never spans
+    /// independent batch elements).
     fn isa_tile(&self, isa: [usize; 3]) -> Tile {
         let mut t = Tile::ones(self.rank());
         let mut j = 0;
@@ -258,15 +294,20 @@ pub trait OpSpec: Sync {
     }
 
     /// FLOPs of one full traversal of `iter` (multiply-accumulate = 2).
+    /// Fused chains count every constituent kernel (FusedAttention:
+    /// both contractions → 4·|iter|).
     fn flops(&self, iter: Tile) -> f64 {
         2.0 * iter.product_f64()
     }
 
     /// Bytes the operand slabs + accumulator of one tile occupy at a
-    /// level (the Algorithm-2 capacity check).
+    /// level (the Algorithm-2 capacity check). Must be monotone in
+    /// every tile dim.
     fn working_set(&self, tile: Tile, in_bytes: usize) -> u64;
 
-    /// Minimum DRAM traffic of a full problem (roofline memory term).
+    /// Minimum DRAM traffic of a full problem (roofline memory term):
+    /// each operand read once, the output written once. Fused chains
+    /// exclude intermediates that never round-trip to DRAM.
     fn min_bytes(&self, iter: Tile, dtype: DType) -> f64;
 
     /// Bytes loaded per reduction step at a level: the input slabs of
@@ -276,7 +317,8 @@ pub trait OpSpec: Sync {
     /// Bytes stored once per level traversal (f32 accumulator).
     fn store_bytes(&self, parent: Tile) -> f64;
 
-    /// Parallel (batch + spatial) child iterations inside a parent.
+    /// Parallel (batch + spatial) child iterations inside a parent
+    /// (the |ParallelLoop| of Eq. 3).
     fn spatial_iters(&self, parent: Tile, child: Tile) -> usize {
         self.axes()
             .iter()
@@ -286,7 +328,8 @@ pub trait OpSpec: Sync {
             .product()
     }
 
-    /// Temporal (reduction) child iterations inside a parent.
+    /// Temporal (reduction) child iterations inside a parent
+    /// (the |TemporalLoop| of Eq. 2).
     fn reduce_iters(&self, parent: Tile, child: Tile) -> usize {
         self.axes()
             .iter()
@@ -299,14 +342,41 @@ pub trait OpSpec: Sync {
     /// AOT artifact-name convention shared with python/compile/aot.py.
     fn artifact_name(&self, l1: Tile, dtype: DType) -> String;
 
-    /// The op whose formulas define empirical measurements of this op's
-    /// strategies. Override ONLY when every cost-relevant formula
-    /// (working set, traffic, iteration counts) is an exact delegation
-    /// to that op — then measurements are shared instead of re-taken.
-    /// Conv2d's strategy space IS the GEMM contraction space, so its
-    /// subchain measurements alias GEMM's.
+    /// The op whose blocks define empirical measurements of this op's
+    /// strategies. Override when a subchain measurement of this op is
+    /// expressible through that op's blocks — either because every
+    /// cost-relevant formula is an exact delegation (Conv2d → Gemm,
+    /// GroupedConv2d → BatchedGemm: the strategy space IS the alias's
+    /// space), or because one block of this op executes a fixed chain
+    /// of the alias's blocks ([`FusedAttention`] → BatchedGemm:
+    /// [`OpSpec::chain_kernels`] contraction blocks plus the
+    /// [`OpSpec::softmax_tile`] epilogue). The profiler measures under
+    /// the alias's key, so aliased ops share measurements instead of
+    /// re-taking them, and the selector serves a space with no native
+    /// library through the alias chain's fixpoint.
     fn measurement_op(&self) -> OpKind {
         self.kind()
+    }
+
+    /// Contraction-kernel launches one block of this op executes per
+    /// traversal. 1 for single-kernel ops; fused chains return the
+    /// chain length (FusedAttention: 2 — the score and context
+    /// contractions). A subchain measurement of a chain op is
+    /// `chain_kernels()` × the measurement-op block cost (the
+    /// constituent blocks are cost-symmetric: identical FLOPs and
+    /// operand slab sizes up to accumulator width), plus the fused
+    /// epilogue from [`OpSpec::softmax_tile`].
+    fn chain_kernels(&self) -> usize {
+        1
+    }
+
+    /// Dimensions (rows, cols) of the resident f32 score tile a fused
+    /// row-softmax normalizes at the L1 boundary of `tile`, or `None`
+    /// for ops without a fused epilogue. This is what the softmax
+    /// micro-measurement (`Profiler::measure_softmax`) prices.
+    fn softmax_tile(&self, tile: Tile) -> Option<(usize, usize)> {
+        let _ = tile;
+        None
     }
 }
 
@@ -496,11 +566,114 @@ impl OpSpec for GroupedConv2d {
     }
 }
 
+/// Attention-fused chain over one group of heads:
+/// `score = Q·Kᵀ`, row-softmax, `ctx = P·V`, with the softmax fused at
+/// the L1 tile boundary (the score tile stays resident on chip; the
+/// probability matrix P never round-trips to DRAM).
+///
+/// The iteration space is the batched-GEMM space of the two
+/// contractions — (b, m, n, k) = (batch·heads, seq_q, seq_k, head_dim)
+/// — enumerated over the same per-role ladders as [`BatchedGemm`]. The
+/// score contraction is the (b, m, n, k) block; the context
+/// contraction is its (b, m, k, n) transpose, cost-symmetric to it
+/// (identical FLOPs and operand slab sizes up to accumulator width),
+/// which is why `chain_kernels() == 2` with `measurement_op() ==
+/// BatchedGemm` prices the chain through the existing batched-GEMM
+/// measurements, and why the selector can serve an attention space
+/// with the batched-GEMM libraries when no native library is loaded.
+///
+/// What is attention-specific:
+///
+/// * `working_set` keeps the resident f32 score tile PLUS the staged V
+///   slab, the f32 context accumulator and the per-row softmax stats
+///   co-resident (the fusion's capacity price);
+/// * `min_bytes` reads Q, K, V once and writes the context once — the
+///   intermediate P round-trip of two separate [`BatchedGemm`]
+///   dispatches is dropped (the fusion's traffic win);
+/// * `softmax_tile` exposes the score-tile shape the fused row-softmax
+///   normalizes, priced by the softmax micro-measurement;
+/// * `flops` counts both contractions (4·|iter| instead of 2·|iter|).
+pub struct FusedAttention;
+
+impl OpSpec for FusedAttention {
+    fn name(&self) -> &'static str {
+        "attention"
+    }
+    fn kind(&self) -> OpKind {
+        OpKind::FusedAttention
+    }
+    fn axes(&self) -> &'static [Axis] {
+        const AXES: [Axis; 4] = [
+            ax('b', AxisRole::Batch),
+            ax('m', AxisRole::Spatial),
+            ax('n', AxisRole::Spatial),
+            ax('k', AxisRole::Reduction),
+        ];
+        &AXES
+    }
+    fn flops(&self, iter: Tile) -> f64 {
+        // Two multiply-accumulate contractions share the (b, m, n, k)
+        // volume: score (b,m,n over k) and context (b,m,k over n). The
+        // O(b·m·n) softmax flops are noise against O(b·m·n·k).
+        4.0 * iter.product_f64()
+    }
+    fn working_set(&self, tile: Tile, in_bytes: usize) -> u64 {
+        let (b, m, n, k) = (tile[0], tile[1], tile[2], tile[3]);
+        // Q slab + K slab + resident f32 score tile (the BatchedGemm
+        // working set) plus the fusion extras: the staged V slab, the
+        // f32 context accumulator and the per-row softmax stats
+        // (running max + rescaled sum, f32 each).
+        BatchedGemm.working_set(tile, in_bytes)
+            + (b * (n * k * in_bytes + m * k * 4 + m * 8)) as u64
+    }
+    fn min_bytes(&self, iter: Tile, dtype: DType) -> f64 {
+        let (b, m, n, k) = (iter[0], iter[1], iter[2], iter[3]);
+        let e = dtype.bytes() as f64;
+        // Q, K, V read once; context written once (f32). The b·m·n
+        // score/probability intermediate never touches DRAM.
+        b as f64 * ((m * k) as f64 * e + (n * k) as f64 * 2.0 * e + (m * k) as f64 * 4.0)
+    }
+    fn load_bytes_per_step(&self, parent: Tile, child: Tile, dtype: DType) -> f64 {
+        let (b, m, n, ck) = (parent[0], parent[1], parent[2], child[3]);
+        // Per reduction (head-dim) step: the Q and K slabs of the score
+        // contraction plus the V slab staged for the context
+        // contraction's output columns.
+        (b * (m * ck + ck * n + n * ck) * dtype.bytes()) as f64
+    }
+    fn store_bytes(&self, parent: Tile) -> f64 {
+        // The context output (b, m, k) in f32 — NOT the b·m·n score.
+        (parent[0] * parent[1] * parent[3] * 4) as f64
+    }
+    fn artifact_name(&self, l1: Tile, dtype: DType) -> String {
+        // The chain's contraction blocks ARE batched-GEMM blocks; the
+        // fused softmax is a measured epilogue, not an artifact.
+        BatchedGemm.artifact_name(l1, dtype)
+    }
+    fn measurement_op(&self) -> OpKind {
+        // One attention block = chain_kernels() cost-symmetric
+        // batched-GEMM blocks + the softmax epilogue; the contraction
+        // measurements alias BatchedGemm's.
+        OpKind::BatchedGemm
+    }
+    fn chain_kernels(&self) -> usize {
+        2
+    }
+    fn softmax_tile(&self, tile: Tile) -> Option<(usize, usize)> {
+        // One block's resident score tile: (b·m) rows of n columns.
+        Some((tile[0] * tile[1], tile[2]))
+    }
+}
+
 // ---------------------------------------------------------------------------
 // IterSpace
 // ---------------------------------------------------------------------------
 
 /// A concrete runtime problem: which op, its iteration dims, the dtype.
+///
+/// Invariant: `dims.rank() == op.spec().rank()` — every constructor
+/// here and every [`super::TensorProgram::space`] mapping upholds it,
+/// and the selector/cost layers rely on it (tile algebra panics on
+/// rank mismatch rather than mis-tiling).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct IterSpace {
     pub op: OpKind,
@@ -526,7 +699,10 @@ impl IterSpace {
     }
 
     /// Fold to the flat contraction view (batch folds into M) — the
-    /// lens the GEMM-only baselines see a problem through.
+    /// lens the GEMM-only baselines see a problem through. For a fused
+    /// chain this is ONE constituent kernel (the attention score
+    /// contraction); callers dispatching through this view pay one
+    /// dispatch per [`OpSpec::chain_kernels`].
     pub fn contraction(&self) -> Contraction {
         match self.op {
             OpKind::Gemm | OpKind::Conv2d => Contraction {
@@ -536,14 +712,17 @@ impl IterSpace {
                 dtype: self.dtype,
             },
             // Batch-like leading axes fold into M: the baselines see a
-            // batched GEMM as one tall GEMM, and a grouped conv as its
-            // block-diagonal GEMM flattened along the group axis.
-            OpKind::BatchedGemm | OpKind::GroupedConv2d => Contraction {
-                m: self.dims[0] * self.dims[1],
-                n: self.dims[2],
-                k: self.dims[3],
-                dtype: self.dtype,
-            },
+            // batched GEMM as one tall GEMM, a grouped conv as its
+            // block-diagonal GEMM flattened along the group axis, and
+            // an attention chain as its flattened score contraction.
+            OpKind::BatchedGemm | OpKind::GroupedConv2d | OpKind::FusedAttention => {
+                Contraction {
+                    m: self.dims[0] * self.dims[1],
+                    n: self.dims[2],
+                    k: self.dims[3],
+                    dtype: self.dtype,
+                }
+            }
         }
     }
 }
@@ -646,6 +825,11 @@ mod tests {
         for op in OpKind::ALL {
             assert_eq!(OpKind::parse(op.name()), Some(op));
         }
+        assert_eq!(OpKind::parse("attention"), Some(OpKind::FusedAttention));
+        // "softmax" is BY DESIGN not an op string: the row-softmax is
+        // the fused epilogue of the attention chain — a profiler
+        // micro-measurement (Profiler::measure_softmax), never a
+        // standalone strategy space or library key.
         assert_eq!(OpKind::parse("softmax"), None);
     }
 
@@ -714,5 +898,56 @@ mod tests {
         let c = s.contraction();
         assert_eq!((c.m, c.n, c.k), (12 * 128, 64, 64));
         assert_eq!(s.flops(), c.flops());
+    }
+
+    #[test]
+    fn attention_is_a_two_kernel_batched_gemm_chain() {
+        // The chain's contraction blocks alias BatchedGemm: shared
+        // artifact names, shared measurements, batch-granularity-1 ISA
+        // lift — with two kernels per block and a softmax epilogue.
+        let t = Tile::new(&[2, 64, 64, 32]);
+        assert_eq!(FusedAttention.measurement_op(), OpKind::BatchedGemm);
+        assert_eq!(FusedAttention.chain_kernels(), 2);
+        assert_eq!(
+            FusedAttention.artifact_name(t, DType::F16),
+            BatchedGemm.artifact_name(t, DType::F16)
+        );
+        assert_eq!(
+            FusedAttention.isa_tile([16, 8, 16]),
+            Tile::new(&[1, 16, 8, 16])
+        );
+        // Both contractions counted: 2x the single-kernel flops.
+        assert_eq!(FusedAttention.flops(t), 2.0 * BatchedGemm.flops(t));
+        assert_eq!(FusedAttention.softmax_tile(t), Some((2 * 64, 64)));
+        assert_eq!(BatchedGemm.softmax_tile(t), None);
+        assert_eq!(BatchedGemm.chain_kernels(), 1);
+    }
+
+    #[test]
+    fn attention_working_set_keeps_score_tile_and_fusion_extras_resident() {
+        let t = Tile::new(&[2, 64, 48, 32]);
+        let (b, m, n, k, e) = (2u64, 64u64, 48u64, 32u64, 2u64);
+        // Q + K + score (the bgemm set) + V slab + ctx acc + row stats.
+        let bgemm = b * (m * k * e + k * n * e + m * n * 4);
+        let extras = b * (n * k * e + m * k * 4 + m * 8);
+        assert_eq!(FusedAttention.working_set(t, 2), bgemm + extras);
+        assert!(FusedAttention.working_set(t, 2) > BatchedGemm.working_set(t, 2));
+    }
+
+    #[test]
+    fn attention_min_bytes_drops_the_intermediate_round_trip() {
+        // Fused traffic = Q + K + V + ctx out. Two separate batched
+        // dispatches additionally write the b·m·n f32 score and read
+        // the b·m·n probability matrix back.
+        let t = Tile::new(&[4, 128, 96, 64]);
+        let (b, m, n, k) = (4.0, 128.0, 96.0, 64.0);
+        let e = 2.0; // f16
+        let fused = FusedAttention.min_bytes(t, DType::F16);
+        assert_eq!(fused, b * (m * k * e + 2.0 * n * k * e + m * k * 4.0));
+        // score dispatch: Q + K read, score written (f32 accumulator)
+        let score = BatchedGemm.min_bytes(t, DType::F16);
+        // ctx dispatch: P (b,m,n) + V (b,n,k) read, ctx (b,m,k) written
+        let ctx = BatchedGemm.min_bytes(Tile::new(&[4, 128, 64, 96]), DType::F16);
+        assert!(fused < score + ctx, "{} !< {}", fused, score + ctx);
     }
 }

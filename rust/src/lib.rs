@@ -23,49 +23,38 @@
 //!
 //! Every layer is parameterized by an operator spec
 //! ([`ir::OpSpec`] / [`ir::OpKind`]): `Gemm`, `BatchedGemm`, `Conv2d`
-//! (strides, padding) and `GroupedConv2d` (grouped / depthwise, group
-//! axis = batch) today. The op owns its iteration-space axes (batch /
-//! spatial / reduction roles), FLOP count, working-set formula,
-//! per-level load/store traffic, padding + grid math, and the AOT
-//! artifact-name convention. Tiles are rank-tagged [`ir::Tile`]s
-//! (`Copy`, allocation-free) rather than raw `[usize; 3]` arrays, and a
-//! runtime problem is an [`ir::IterSpace`] (op + dims + dtype).
+//! (strides, padding), `GroupedConv2d` (grouped / depthwise, group
+//! axis = batch) and `FusedAttention` (the score · softmax · context
+//! chain with the softmax fused at the L1 tile boundary) today. The op
+//! owns its iteration-space axes (batch / spatial / reduction roles),
+//! FLOP count, working-set formula, per-level load/store traffic,
+//! padding + grid math, and the AOT artifact-name convention. Tiles
+//! are rank-tagged [`ir::Tile`]s (`Copy`, allocation-free) rather than
+//! raw `[usize; 3]` arrays, and a runtime problem is an
+//! [`ir::IterSpace`] (op + dims + dtype).
 //!
-//! The conv family maps onto the contraction ops through validated
-//! geometry (`TensorProgram::conv2d` is fallible; invalid geometry is a
-//! construction-time error) and the *measurement alias* chain
-//! (`OpSpec::measurement_op`): an ungrouped conv's space IS the GEMM
-//! contraction space, a grouped conv's IS the per-group batched
-//! contraction space, so their libraries, profiling measurements and
-//! selector fallbacks all alias the contraction ops' with zero extra
-//! profiling.
+//! Programs with non-trivial geometry construct fallibly
+//! (`TensorProgram::conv2d`, `TensorProgram::attention`: invalid
+//! geometry is a construction-time error), and ops whose blocks are
+//! another op's blocks declare a *measurement alias*
+//! (`OpSpec::measurement_op`): Conv2d → Gemm and GroupedConv2d →
+//! BatchedGemm by exact delegation, FusedAttention → BatchedGemm as a
+//! two-kernel chain plus a softmax micro-measurement. Aliased ops
+//! share profiling measurements with zero re-taking, and the selector
+//! serves a space with no native library through the alias chain's
+//! fixpoint — attention runs on batched-GEMM libraries with no
+//! attention-specific side path.
 //!
-//! Adding a new operator touches exactly one extension point per layer:
-//!
-//! 1. **ir** — implement `OpSpec` for a unit struct, register it in
-//!    `OpKind::ALL`, and map the new `TensorProgram` variant to its
-//!    `IterSpace` in `TensorProgram::space()` (with `validate()` rules
-//!    if the mapping can be geometrically invalid).
-//! 2. **candgen** — nothing: Algorithm 2 enumerates per-axis multiplier
-//!    ladders chosen by axis role and prunes with `OpSpec::working_set`.
-//! 3. **cost / sim** — nothing: Eqs. 2–4 read loop extents and traffic
-//!    from the op; the simulator reuses the same spec.
-//! 4. **compiler** — nothing: `compile(hw, op, dtype, ...)` builds an
-//!    op-keyed [`compiler::MicroKernelLibrary`] (JSON schema v2 carries
-//!    an `"op"` field; v1 GEMM-only files still load). A contraction
-//!    library lifts onto batch-extended ops via
-//!    `MicroKernelLibrary::lift_to_batched`.
-//! 5. **coordinator / runtime** — nothing for selection
-//!    (`Selector::select` is `IterSpace`-driven and chases the
-//!    measurement-alias chain); real execution needs an artifact path
-//!    honoring `OpSpec::artifact_name` (the conv family reuses the
-//!    `gemm_acc` blocks via per-group im2col in
-//!    [`runtime::conv2d_dynamic`]).
+//! The full per-layer walkthrough and the "how to add a new op" recipe
+//! (worked through `FusedAttention`) live in
+//! [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) at the repo
+//! root — start there before touching the strategy-space stack.
 //!
 //! The offline stage's per-candidate analysis is parallelized across
 //! threads (measurements are hoisted and profiled once, sequentially,
 //! so profiler accounting stays exact), and compiled libraries can be
-//! cached on disk keyed by (hw, op, dtype, analyzer) — see
+//! cached on disk keyed by (hw, op, dtype, analyzer) plus a
+//! fingerprint of the hardware spec and measurement definitions — see
 //! [`compiler::CompileOpts`].
 
 pub mod baselines;

@@ -28,10 +28,10 @@ vortex — sample-free dynamic-shape tensor program optimization (reproduction)
 
 USAGE:
   vortex compile  [--testbed sim-a100|sim-xeon|real] [--dtype f32|f16|bf16]
-                  [--op gemm|batched_gemm|conv2d|grouped_conv2d]
+                  [--op gemm|batched_gemm|conv2d|grouped_conv2d|attention]
                   [--analyzer default|analytical|e0|e1] [--cache-dir DIR]
                   [--dump-library PATH] [--emit-manifest PATH]
-  vortex select   --m M --n N --k K [--b B(atch/groups)] [--op ...]
+  vortex select   --m M --n N --k K [--b B(atch/groups/head-groups)] [--op ...]
                   [--testbed ...] [--dtype ...] [--mode adaptive|cuda|tensor]
   vortex run      --m M --n N --k K [--artifacts DIR] [--verify]
   vortex serve    [--requests N] [--mean-gap-us U] [--max-batch B]
@@ -176,7 +176,10 @@ fn cmd_compile(args: &Args) {
             (
                 "comment",
                 Json::arr(vec![Json::str(
-                    "generated by `vortex compile --emit-manifest` — gemm_acc                      blocks only; merge softmax/conv/encoder entries by hand",
+                    "generated by `vortex compile --emit-manifest` — gemm_acc \
+                     blocks only; merge conv/encoder entries by hand (the \
+                     attention softmax is a profiler micro-measurement, not \
+                     an AOT artifact)",
                 )]),
             ),
             ("entries", Json::arr(entries)),
@@ -198,13 +201,16 @@ fn cmd_select(args: &Args) {
         args.get_usize("k", 768),
     );
     let space = match op {
-        // --b is the batch count (batched GEMM) or group count (grouped
-        // conv) — both lead the rank-4 iteration space.
-        OpKind::BatchedGemm | OpKind::GroupedConv2d => vortex::ir::IterSpace {
-            op,
-            dims: vortex::ir::Tile::new(&[args.get_usize("b", 8), m, n, k]),
-            dtype,
-        },
+        // --b is the batch count (batched GEMM), group count (grouped
+        // conv) or head-group count (attention) — each leads the
+        // rank-4 iteration space.
+        OpKind::BatchedGemm | OpKind::GroupedConv2d | OpKind::FusedAttention => {
+            vortex::ir::IterSpace {
+                op,
+                dims: vortex::ir::Tile::new(&[args.get_usize("b", 8), m, n, k]),
+                dtype,
+            }
+        }
         _ => vortex::ir::IterSpace { op, dims: vortex::ir::Tile::new(&[m, n, k]), dtype },
     };
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));

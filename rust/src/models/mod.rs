@@ -98,15 +98,19 @@ fn transformer_trace(
     dtype: DType,
 ) -> Vec<TensorProgram> {
     let m = batch * seq;
-    let hd = d / heads;
     let mut ops = Vec::new();
     for _ in 0..layers {
         // Fused QKV projection (the paper's "first GEMM of Bert":
         // M = batch x seq, K = d, N = 3d — reported there transposed).
         ops.push(gemm(m, 3 * d, d, dtype));
-        // Attention scores + context, one batched GEMM per head group.
-        ops.push(gemm(batch * heads * seq, seq, hd, dtype));
-        ops.push(gemm(batch * heads * seq, hd, seq, dtype));
+        // Attention-fused chain (score · softmax · context) over the
+        // head groups — ONE FusedAttention program with the dynamic
+        // sequence length, not two flat GEMMs with a materialized
+        // intermediate.
+        ops.push(
+            TensorProgram::attention((batch, seq), (d, heads), dtype)
+                .expect("model attention geometry is valid by construction"),
+        );
         // Output projection + MLP.
         ops.push(gemm(m, d, d, dtype));
         ops.push(gemm(m, ff, d, dtype));
@@ -235,14 +239,26 @@ mod tests {
     }
 
     #[test]
-    fn bert_trace_has_six_gemms_per_layer() {
+    fn bert_trace_has_five_ops_per_layer_with_fused_attention() {
         let ops = trace(Model::Bert, 128, DType::F32);
-        assert_eq!(ops.len(), 12 * 6);
+        // QKV + attention chain + output proj + 2 MLP GEMMs per layer.
+        assert_eq!(ops.len(), 12 * 5);
         // QKV projection of layer 0.
         assert_eq!(
             ops[0],
             TensorProgram::Gemm { m: 128, n: 2304, k: 768, dtype: DType::F32 }
         );
+        // The attention chain carries the dynamic seq into a rank-4
+        // FusedAttention space over 12 head groups of dim 64.
+        assert_eq!(
+            ops[1],
+            TensorProgram::Attention { batch: 1, seq: 128, d: 768, heads: 12, dtype: DType::F32 }
+        );
+        let s = ops[1].space();
+        assert_eq!(s.op, crate::ir::OpKind::FusedAttention);
+        assert_eq!(s.dims, crate::ir::Tile::new(&[12, 128, 128, 64]));
+        // The chain's flops equal the two flat GEMMs it replaced.
+        assert_eq!(ops[1].flops(), 4.0 * 12.0 * 128.0 * 128.0 * 64.0);
     }
 
     #[test]

@@ -18,6 +18,12 @@ use crate::sim::Simulator;
 pub trait Profiler {
     /// True cost of the subchain `strat.tiles[..=level]` (one unit's
     /// execution of the nested tiles up to `level`).
+    ///
+    /// Ops with a `measurement_op` alias are measured AS the alias:
+    /// the same tiles under the alias's key, so aliased ops share one
+    /// measurement set. A fused chain op's subchain is priced as
+    /// `chain_kernels()` alias blocks, plus the `softmax_tile`
+    /// epilogue once the measured subchain reaches the L1 boundary.
     fn measure_subchain(&mut self, dtype: DType, strat: &Strategy, level: usize)
         -> f64;
 
@@ -25,19 +31,32 @@ pub trait Profiler {
     /// kernel profiling).
     fn measure_full(&mut self, dtype: DType, strat: &Strategy) -> f64;
 
+    /// Measured cost of one fused streaming row-softmax pass over a
+    /// (rows x cols) f32 score tile — the attention epilogue
+    /// micro-measurement (`OpSpec::softmax_tile` supplies the shape).
+    fn measure_softmax(&mut self, rows: usize, cols: usize) -> f64;
+
     /// Accumulated offline tuning wall-clock attributable to profiling.
     fn tuning_secs(&self) -> f64;
 
     /// Number of profiling queries issued.
     fn queries(&self) -> usize;
 
-    /// Identity of the measurement source (e.g. the simulator seed):
-    /// libraries built from different sources must not alias in the
+    /// Identity of the measurement source — the simulator seed PLUS
+    /// the definition of every micro-measurement (currently the
+    /// softmax per-element op count): libraries built from different
+    /// sources or measurement definitions must not alias in the
     /// on-disk compile cache.
     fn fingerprint(&self) -> u64 {
         0
     }
 }
+
+/// Default scalar-op count of one streaming row-softmax pass per score
+/// element: running max compare, rescale multiply, subtract, exp, sum
+/// add on the online sweep; subtract, exp, normalize multiply on the
+/// write-back sweep — rounded to a power of two.
+pub const SOFTMAX_OPS_PER_ELEM: f64 = 8.0;
 
 /// Simulator-backed profiler for the paper's testbeds.
 pub struct SimProfiler {
@@ -45,9 +64,15 @@ pub struct SimProfiler {
     /// Fixed per-query harness overhead on real hardware (codegen +
     /// compile + launch + timing loop); dominates tuning time.
     pub per_query_overhead: f64,
+    /// Per-element op count of the softmax micro-measurement — an
+    /// input of the measurement's definition, folded into
+    /// [`Profiler::fingerprint`] so a changed definition invalidates
+    /// cached libraries.
+    pub softmax_ops_per_elem: f64,
     tuning: f64,
     queries: usize,
     cache: HashMap<(OpKind, Vec<Tile>, usize, usize), f64>,
+    softmax_cache: HashMap<(usize, usize), f64>,
 }
 
 impl SimProfiler {
@@ -57,9 +82,11 @@ impl SimProfiler {
         SimProfiler {
             sim,
             per_query_overhead: 0.1,
+            softmax_ops_per_elem: SOFTMAX_OPS_PER_ELEM,
             tuning: 0.0,
             queries: 0,
             cache: HashMap::new(),
+            softmax_cache: HashMap::new(),
         }
     }
 
@@ -81,11 +108,29 @@ impl Profiler for SimProfiler {
         strat: &Strategy,
         level: usize,
     ) -> f64 {
-        // Keyed by the MEASUREMENT op: ops whose formulas are exact
-        // delegations (Conv2d -> Gemm) share one measurement instead of
-        // re-profiling identical subchains.
+        let spec = strat.op.spec();
+        let meas = spec.measurement_op();
+        if meas != strat.op {
+            // Measure AS the measurement op: the subchain's blocks ARE
+            // the alias's blocks (exact-delegation ops like Conv2d →
+            // Gemm measure identically; chain ops execute
+            // `chain_kernels()` cost-symmetric alias blocks). Keying
+            // and simulating under the alias keeps the cache coherent
+            // — a conv measurement IS a gemm measurement, an attention
+            // block measurement IS a batched-gemm block measurement.
+            let alias = Strategy::for_op(meas, strat.tiles.clone(), strat.backend);
+            let block = self.measure_subchain(dtype, &alias, level);
+            let mut secs = spec.chain_kernels() as f64 * block;
+            // The fused epilogue enters at the L1 tile boundary.
+            if level >= 1 {
+                if let Some((rows, cols)) = spec.softmax_tile(strat.tiles[level]) {
+                    secs += self.measure_softmax(rows, cols);
+                }
+            }
+            return secs;
+        }
         let key = (
-            strat.op.spec().measurement_op(),
+            strat.op,
             strat.tiles[..=level].to_vec(),
             strat.backend,
             dtype.bytes(),
@@ -109,6 +154,16 @@ impl Profiler for SimProfiler {
         secs
     }
 
+    fn measure_softmax(&mut self, rows: usize, cols: usize) -> f64 {
+        if let Some(&v) = self.softmax_cache.get(&(rows, cols)) {
+            return v;
+        }
+        let secs = self.sim.softmax_secs(self.softmax_ops_per_elem, rows, cols);
+        self.account(secs);
+        self.softmax_cache.insert((rows, cols), secs);
+        secs
+    }
+
     fn tuning_secs(&self) -> f64 {
         self.tuning
     }
@@ -118,7 +173,10 @@ impl Profiler for SimProfiler {
     }
 
     fn fingerprint(&self) -> u64 {
-        self.sim.seed
+        // Seed + micro-measurement definitions: a changed softmax op
+        // count is a different measurement source and must invalidate
+        // cached libraries (ROADMAP offline-stage item).
+        crate::util::rng::hash_key(&[self.sim.seed, self.softmax_ops_per_elem.to_bits()])
     }
 }
 
@@ -159,5 +217,55 @@ mod tests {
         let l0 = p.measure_subchain(DType::F16, &s, 0);
         let l1 = p.measure_subchain(DType::F16, &s, 1);
         assert!(l1 > l0, "L1 subchain contains L0: {} vs {}", l1, l0);
+    }
+
+    #[test]
+    fn softmax_measurement_caches_and_accounts() {
+        let (mut p, _) = mk();
+        let a = p.measure_softmax(128, 64);
+        assert!(a > 0.0);
+        assert_eq!(a, p.measure_softmax(128, 64));
+        assert_eq!(p.queries(), 1, "second softmax query must hit the cache");
+        let _ = p.measure_softmax(128, 65);
+        assert_eq!(p.queries(), 2);
+    }
+
+    #[test]
+    fn attention_subchain_decomposes_into_alias_blocks_plus_softmax() {
+        // One attention block = 2 batched-gemm blocks + the fused
+        // row-softmax over the resident score tile — sharing the
+        // batched-gemm measurement cache, so the attention measurement
+        // after a batched one issues ONLY the softmax query.
+        let hw = presets::a100();
+        let bi = hw.backend_idx("tensor_core_f16").unwrap();
+        let tiles = vec![
+            crate::ir::Tile::new(&[1, 16, 8, 16]),
+            crate::ir::Tile::new(&[1, 64, 64, 32]),
+        ];
+        let bg = Strategy::for_op(OpKind::BatchedGemm, tiles.clone(), bi);
+        let at = Strategy::for_op(OpKind::FusedAttention, tiles, bi);
+        let mut p = SimProfiler::new(Simulator::new(hw, 3));
+        let block = p.measure_subchain(DType::F16, &bg, 1);
+        let q_after_bgemm = p.queries();
+        let fused = p.measure_subchain(DType::F16, &at, 1);
+        assert_eq!(p.queries(), q_after_bgemm + 1, "only the softmax is new");
+        let softmax = p.measure_softmax(64, 64);
+        assert_eq!(fused, 2.0 * block + softmax);
+        // At L0 the softmax has not entered yet (fusion is at L1).
+        let at_l0 = p.measure_subchain(DType::F16, &at, 0);
+        let bg_l0 = p.measure_subchain(DType::F16, &bg, 0);
+        assert_eq!(at_l0, 2.0 * bg_l0);
+    }
+
+    #[test]
+    fn fingerprint_covers_softmax_measurement_definition() {
+        let hw = presets::a100();
+        let a = SimProfiler::new(Simulator::new(hw.clone(), 3));
+        let mut b = SimProfiler::new(Simulator::new(hw.clone(), 3));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.softmax_ops_per_elem = 2.0 * SOFTMAX_OPS_PER_ELEM;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let c = SimProfiler::new(Simulator::new(hw, 4));
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 }

@@ -89,7 +89,7 @@ impl Simulator {
     }
 
     /// The simulated true execution time of a full strategy chain
-    /// (tiles[last] = padded problem shape).
+    /// (`tiles[last]` = padded problem shape).
     ///
     /// Hidden factors scale the tiers they belong to: the L0 factor the
     /// instruction stream, the L1 factor the on-chip subchain. They do
@@ -140,6 +140,27 @@ impl Simulator {
         up.total_secs
             * self.hidden_l1_factor(strat.backend, strat.tiles[1])
             * self.tile_penalty(&sub, 1)
+    }
+
+    /// Streaming row-softmax micro-measurement: the true cost of one
+    /// fused softmax pass over a (rows x cols) f32 score tile — one
+    /// online max/rescaled-sum sweep plus one normalization sweep,
+    /// `ops_per_elem` scalar ops per element on the widest f32 backend
+    /// — scaled by a hidden throughput factor (exp-unit pressure,
+    /// lane predication) only empirical profiling can see. This is the
+    /// attention epilogue's analog of `true_l0_secs`.
+    pub fn softmax_secs(&self, ops_per_elem: f64, rows: usize, cols: usize) -> f64 {
+        let peak = self
+            .hw
+            .backends
+            .iter()
+            .filter(|b| b.dtype_bytes == 4)
+            .map(|b| b.peak_gflops)
+            .fold(0.0, f64::max)
+            .max(1.0);
+        let base = (rows * cols) as f64 * ops_per_elem / (peak * 1e9);
+        let h = hash_key(&[self.seed, 0x50F7, rows as u64, cols as u64]);
+        base * factor(h, 0.20)
     }
 
     /// Achieved FLOP/s for a chain on a given *unpadded* problem (used
@@ -220,6 +241,20 @@ mod tests {
         let f = measured / analytic;
         // hidden factor (±30%) x possible small-tile utilization penalty
         assert!((0.69..=2.4).contains(&f), "hidden factor out of range: {}", f);
+    }
+
+    #[test]
+    fn softmax_measurement_is_deterministic_and_scales_with_tile() {
+        let s = sim();
+        let a = s.softmax_secs(8.0, 64, 64);
+        assert_eq!(a, s.softmax_secs(8.0, 64, 64));
+        assert!(a > 0.0);
+        // More elements cost more (hidden factor is bounded to ±20%,
+        // a 4x tile always dominates it).
+        assert!(s.softmax_secs(8.0, 256, 64) > a);
+        // The per-element op count is a measurement input: doubling it
+        // doubles the base term under the same hidden factor.
+        assert_eq!(s.softmax_secs(16.0, 64, 64), 2.0 * a);
     }
 
     #[test]

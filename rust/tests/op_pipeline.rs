@@ -1,7 +1,9 @@
 //! Operator-generality integration tests: `Conv2d` (strided / padded),
-//! `GroupedConv2d` (depthwise) and `BatchedGemm` compile through the
-//! SAME candgen → compile → select pipeline as GEMM (no
-//! operator-specific side path) and execute in the simulator.
+//! `GroupedConv2d` (depthwise), `BatchedGemm` and the `FusedAttention`
+//! chain compile through the SAME candgen → compile → select pipeline
+//! as GEMM (no operator-specific side path) and execute in the
+//! simulator; attention additionally serves through the BatchedGemm
+//! measurement-alias fixpoint when no native library is loaded.
 
 use vortex::compiler::{compile, CompileOpts, MicroKernelLibrary};
 use vortex::coordinator::{HwMode, Selector};
@@ -170,7 +172,12 @@ fn invalid_conv_space_never_reaches_the_selector() {
 
 #[test]
 fn per_op_libraries_round_trip_through_disk_with_op_field() {
-    for op in [OpKind::Conv2d, OpKind::BatchedGemm, OpKind::GroupedConv2d] {
+    for op in [
+        OpKind::Conv2d,
+        OpKind::BatchedGemm,
+        OpKind::GroupedConv2d,
+        OpKind::FusedAttention,
+    ] {
         let lib = compile_lib(op);
         let text = lib.to_json().dump();
         assert!(text.contains(&format!("\"op\":\"{}\"", op.name())));
@@ -197,6 +204,84 @@ fn conv_suite_serves_through_gemm_fallback_and_native_equally() {
     let b = gemm_sel.select(p.space(), HwMode::Adaptive).unwrap();
     assert_eq!(conv_sel.kernel(&a).l1, gemm_sel.kernel(&b).l1);
     assert_eq!(a.padded, b.padded);
+}
+
+#[test]
+fn attention_suite_serves_end_to_end_through_batched_gemm_alias_fixpoint() {
+    // Acceptance: the whole attention suite compiles and executes
+    // through the selector with NO attention-specific side path — the
+    // only library loaded is a BatchedGemm one, and every chain serves
+    // via the measurement-alias fixpoint FusedAttention → BatchedGemm.
+    let hw = presets::a100();
+    let lib = compile_lib(OpKind::BatchedGemm);
+    let selector = Selector::new(hw.clone(), vec![lib]);
+    assert!(!selector.has_op(OpKind::FusedAttention));
+    let sim = Simulator::new(hw, 7);
+    let cases = vortex::bench::workloads::attention_suite(DType::F16, 7);
+    assert!(!cases.is_empty());
+    for case in &cases {
+        let space = case.program.space();
+        assert_eq!(space.op, OpKind::FusedAttention);
+        let sel = selector
+            .select(space, HwMode::Adaptive)
+            .unwrap_or_else(|| panic!("no kernel for {}", case.program.id()));
+        let kern = selector.kernel(&sel);
+        assert_eq!(sel.padded.rank(), 4);
+        for d in 0..4 {
+            assert!(sel.padded[d] >= space.dims[d], "{}", case.program.id());
+            assert_eq!(sel.padded[d] % kern.l1[d], 0);
+            assert_eq!(sel.grid[d], sel.padded[d] / kern.l1[d]);
+        }
+        // The constructed chain executes in the simulator (the alias
+        // block strategy, one per constituent kernel).
+        let secs = sim.execute(DType::F16, &selector.chain(&sel));
+        assert!(secs.is_finite() && secs > 0.0, "{}", case.program.id());
+        assert!(sel.est_secs > 0.0);
+    }
+}
+
+#[test]
+fn attention_native_library_compiles_end_to_end() {
+    // The fused chain also compiles a NATIVE library through the same
+    // pipeline: candgen over the shared ladders (pruned by the fused
+    // working set), alias-decomposed ranking, and the softmax
+    // micro-measurement folded into each kernel's base_cost.
+    let hw = presets::a100();
+    let lib = compile_lib(OpKind::FusedAttention);
+    assert!(lib.kernels.iter().all(|k| k.l1.rank() == 4));
+    let selector = Selector::new(hw.clone(), vec![lib]);
+    assert!(selector.has_op(OpKind::FusedAttention));
+    let sim = Simulator::new(hw, 7);
+    for (batch, seq, d, heads) in
+        [(1usize, 476usize, 768usize, 12usize), (2, 77, 1024, 16), (8, 1, 512, 8)]
+    {
+        let p = TensorProgram::attention((batch, seq), (d, heads), DType::F16)
+            .expect("valid geometry");
+        let space = p.space();
+        let sel = selector.select(space, HwMode::Adaptive).expect("attn select");
+        let kern = selector.kernel(&sel);
+        for dim in 0..4 {
+            assert!(sel.padded[dim] >= space.dims[dim]);
+            assert_eq!(sel.padded[dim] % kern.l1[dim], 0);
+        }
+        let secs = sim.execute(DType::F16, &selector.chain(&sel));
+        assert!(secs.is_finite() && secs > 0.0);
+    }
+}
+
+#[test]
+fn invalid_attention_geometry_errors_before_the_pipeline() {
+    // Program layer: construction is the error surface (mirrors conv).
+    assert!(TensorProgram::attention((1, 64), (768, 7), DType::F16).is_err());
+    assert!(TensorProgram::attention((0, 64), (768, 12), DType::F16).is_err());
+    assert!(TensorProgram::attention((1, 64), (768, 0), DType::F16).is_err());
+}
+
+#[test]
+#[should_panic(expected = "invalid tensor program")]
+fn invalid_attention_space_never_reaches_the_selector() {
+    let p = TensorProgram::Attention { batch: 1, seq: 64, d: 768, heads: 5, dtype: DType::F16 };
+    let _ = p.space();
 }
 
 #[test]

@@ -223,6 +223,74 @@ fn conv2d_dynamic_matches_direct_reference_across_the_family() {
     }
 }
 
+/// Real-path attention selector: the profiled GEMM library plus its
+/// lift onto the batch-extended op — the attention chain then serves
+/// through the BatchedGemm measurement-alias fixpoint (no native
+/// attention library, no attention-specific side path).
+fn attention_selector(eng: &RealEngine) -> Selector {
+    use vortex::ir::OpKind;
+    let hw = presets::cpu_pjrt();
+    let lib = build_real_library(eng, &hw, DType::F32, 1).expect("library");
+    let batched = lib
+        .lift_to_batched(OpKind::BatchedGemm)
+        .expect("gemm library lifts onto the batched op");
+    Selector::new(hw, vec![lib, batched])
+}
+
+#[test]
+fn attention_dynamic_matches_direct_reference() {
+    use vortex::runtime::{attention_dynamic, attention_host_ref};
+    let Some(eng) = engine() else { return };
+    let selector = attention_selector(&eng);
+    // (batch, seq, d, heads): decode step, ragged seq, multi-head.
+    for (batch, seq, d, heads) in
+        [(1usize, 1usize, 32usize, 2usize), (1, 13, 32, 2), (2, 40, 64, 4)]
+    {
+        let hd = d / heads;
+        let len = batch * heads * seq * hd;
+        let q = rand_vec(len, 41 + seq as u64);
+        let k = rand_vec(len, 42 + seq as u64);
+        let v = rand_vec(len, 43 + seq as u64);
+        let got = attention_dynamic(
+            &eng,
+            &selector,
+            &q,
+            &k,
+            &v,
+            (batch, seq),
+            (d, heads),
+            DType::F32,
+        )
+        .expect("attention");
+        let want = attention_host_ref(&q, &k, &v, (batch, seq), (d, heads));
+        assert_close(
+            &got,
+            &want,
+            1e-3,
+            &format!("attention b{} s{} d{} h{}", batch, seq, d, heads),
+        );
+    }
+}
+
+#[test]
+fn attention_dynamic_rejects_invalid_geometry() {
+    use vortex::runtime::attention_dynamic;
+    let Some(eng) = engine() else { return };
+    let selector = attention_selector(&eng);
+    let buf = vec![0f32; 64];
+    // Heads not dividing d, zero seq: construction-time errors surfaced
+    // by the runtime entry point (mirrors conv2d_dynamic).
+    for (io, proj) in [((1usize, 4usize), (30usize, 4usize)), ((1, 0), (32, 4))] {
+        assert!(
+            attention_dynamic(&eng, &selector, &buf, &buf, &buf, io, proj, DType::F32)
+                .is_err(),
+            "geometry {:?} {:?} accepted",
+            io,
+            proj
+        );
+    }
+}
+
 #[test]
 fn conv2d_dynamic_rejects_invalid_geometry() {
     use vortex::runtime::conv2d_dynamic;
