@@ -1,0 +1,68 @@
+//! Multi-op serving demo: BERT token traffic interleaved with vision
+//! bursts, served through the `serve::` request lanes with the
+//! bucketed plan cache — then the same trace with the cache disabled,
+//! to show identical plans at a fraction of the scheduling cost.
+//!
+//! Run with: cargo run --release --example mixed_serving \
+//!             [--requests 600] [--mean-gap-us 400] [--seed 7]
+
+use vortex::bench::exp_serve::{identical_selections, warm_hit_rate};
+use vortex::hw::presets;
+use vortex::ir::DType;
+use vortex::serve::{scenario, serve_mixed_trace, SimLaneEngine};
+use vortex::sim::Simulator;
+use vortex::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n_req = args.get_usize("requests", 600);
+    let gap = args.get_f64("mean-gap-us", 400.0) * 1e-6;
+    let seed = args.get_u64("seed", 7);
+
+    // Offline: the scenario's shared demo selector — a GEMM library
+    // (serves conv via implicit GEMM) and a batched-GEMM library
+    // (serves grouped conv + attention via the alias fixpoint).
+    let hw = presets::a100();
+    let selector = scenario::demo_selector(seed);
+
+    let trace = scenario::mixed_trace(n_req, gap, seed, DType::F32);
+    let serve_cfg = scenario::serving_config();
+
+    let mut engine = SimLaneEngine { sim: Simulator::new(hw.clone(), seed) };
+    let cached = serve_mixed_trace(&mut engine, &selector, &serve_cfg, &trace);
+    let mut engine = SimLaneEngine { sim: Simulator::new(hw, seed) };
+    let fresh = serve_mixed_trace(&mut engine, &selector, &serve_cfg.without_cache(), &trace);
+
+    println!(
+        "== mixed serving: {} requests across {} lanes ==",
+        cached.count(),
+        cached.lanes.len()
+    );
+    for l in &cached.lanes {
+        let (p50, _, p99) = l.metrics.latency_percentiles();
+        println!(
+            "  lane {:<12} {:>4} reqs in {:>4} batches  p50 {:>8.2}ms  p99 {:>8.2}ms",
+            l.class.name(),
+            l.metrics.count(),
+            l.batches,
+            p50 * 1e3,
+            p99 * 1e3,
+        );
+    }
+    println!(
+        "plan cache: hit rate {:.1}% overall, {:.1}% after warmup ({} buckets missed)",
+        100.0 * cached.cache.hit_rate(),
+        100.0 * warm_hit_rate(&cached),
+        cached.cache.misses,
+    );
+    println!(
+        "scheduling seconds: {:.2e} cached vs {:.2e} fresh ({:.1}x less)",
+        cached.total_sched_secs(),
+        fresh.total_sched_secs(),
+        fresh.total_sched_secs() / cached.total_sched_secs().max(1e-12),
+    );
+    println!(
+        "identical per-request selections: {}",
+        identical_selections(&cached, &fresh),
+    );
+}

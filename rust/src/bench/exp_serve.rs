@@ -1,0 +1,172 @@
+//! Serving-layer benchmark: a mixed multi-op trace (BERT token traffic
+//! interleaved with vision bursts) through the request lanes, plan
+//! cache ON vs OFF — span, tail latency, scheduling fraction and cache
+//! hit rate, written to `serve.csv` and `BENCH_serve.json`.
+//!
+//! The cache-disabled run is the correctness baseline: identical
+//! per-request selections are REQUIRED (the plan cache's guarantee),
+//! and the event clock charges a modeled scheduling overhead either
+//! way — so the only delta is the MEASURED scheduling seconds
+//! (`Metrics`'s sched component), which the cache collapses.
+
+use std::path::Path;
+
+use crate::hw::presets;
+use crate::ir::DType;
+use crate::serve::{scenario, serve_mixed_trace, MixedStats, SimLaneEngine};
+use crate::sim::Simulator;
+use crate::util::json::Json;
+use crate::util::table::{fmt_secs, Table};
+
+/// Fraction of cache_hit outcomes after the warmup prefix (first half
+/// of the request stream) — the steady-state hit rate the acceptance
+/// gate asserts on.
+pub fn warm_hit_rate(stats: &MixedStats) -> f64 {
+    let warm = &stats.outcomes[stats.outcomes.len() / 2..];
+    if warm.is_empty() {
+        return 0.0;
+    }
+    warm.iter().filter(|o| o.cache_hit).count() as f64 / warm.len() as f64
+}
+
+/// True when both runs picked the same plan for every request
+/// (plan identity is [`crate::coordinator::Selection::same_plan`]).
+pub fn identical_selections(a: &MixedStats, b: &MixedStats) -> bool {
+    a.outcomes.len() == b.outcomes.len()
+        && a.outcomes.iter().zip(&b.outcomes).all(|(x, y)| {
+            x.id == y.id
+                && x.lane == y.lane
+                && x.batch_size == y.batch_size
+                && x.selection.same_plan(&y.selection)
+        })
+}
+
+/// The per-lane results table — shared by this bench and the
+/// `vortex serve --mixed` CLI so the two reports cannot drift.
+pub fn lanes_table(title: &str, stats: &MixedStats) -> Table {
+    let mut t = Table::new(
+        title,
+        &["lane", "requests", "batches", "units", "p50", "p99", "sched %"],
+    );
+    for l in &stats.lanes {
+        let (p50, _, p99) = l.metrics.latency_percentiles();
+        t.row(vec![
+            l.class.name().into(),
+            l.metrics.count().to_string(),
+            l.batches.to_string(),
+            l.total_units.to_string(),
+            fmt_secs(p50),
+            fmt_secs(p99),
+            format!("{:.2}", 100.0 * l.metrics.sched_fraction()),
+        ]);
+    }
+    t
+}
+
+pub fn serve(out_dir: &Path, seed: u64, frac: usize) -> Vec<Table> {
+    let hw = presets::a100();
+    let selector = scenario::demo_selector(seed);
+
+    // The acceptance gate requires >= 200 requests even in fast mode.
+    let n = (600 / frac.max(1)).max(240);
+    let trace = scenario::mixed_trace(n, 4e-4, seed, DType::F32);
+    let serve_cfg = scenario::serving_config();
+
+    let run = |cache: bool| {
+        let mut engine = SimLaneEngine { sim: Simulator::new(hw.clone(), seed) };
+        let cfg = if cache { serve_cfg.clone() } else { serve_cfg.without_cache() };
+        serve_mixed_trace(&mut engine, &selector, &cfg, &trace)
+    };
+    let cached = run(true);
+    let baseline = run(false);
+    let identical = identical_selections(&cached, &baseline);
+    let warm_rate = warm_hit_rate(&cached);
+
+    let lanes = lanes_table("serving lanes (plan cache ON, simulated A100)", &cached);
+
+    let mut cmp = Table::new(
+        "plan cache ON vs OFF",
+        &["config", "span", "p99", "sched secs", "hit rate", "warm hit rate"],
+    );
+    let row = |t: &mut Table, name: &str, s: &MixedStats, warm: f64| {
+        let (_, _, p99) = s.latency_percentiles();
+        t.row(vec![
+            name.into(),
+            fmt_secs(s.span_secs),
+            fmt_secs(p99),
+            fmt_secs(s.total_sched_secs()),
+            format!("{:.3}", s.cache.hit_rate()),
+            format!("{:.3}", warm),
+        ]);
+    };
+    row(&mut cmp, "cached", &cached, warm_rate);
+    row(&mut cmp, "no-cache", &baseline, 0.0);
+    cmp.row(vec![
+        "identical selections".into(),
+        identical.to_string(),
+        String::new(),
+        format!(
+            "{:.2}x less",
+            baseline.total_sched_secs() / cached.total_sched_secs().max(1e-12)
+        ),
+        String::new(),
+        String::new(),
+    ]);
+
+    let (c50, _, c99) = cached.latency_percentiles();
+    let (_, _, b99) = baseline.latency_percentiles();
+    let json = Json::obj(vec![
+        ("requests", Json::num(trace.len() as f64)),
+        ("lanes", Json::num(cached.lanes.len() as f64)),
+        ("span_secs", Json::num(cached.span_secs)),
+        ("p50_secs", Json::num(c50)),
+        ("p99_secs", Json::num(c99)),
+        ("sched_secs", Json::num(cached.total_sched_secs())),
+        ("sched_fraction", Json::num(cached.sched_fraction())),
+        (
+            "cache",
+            Json::obj(vec![
+                ("hits", Json::num(cached.cache.hits as f64)),
+                ("misses", Json::num(cached.cache.misses as f64)),
+                ("evictions", Json::num(cached.cache.evictions as f64)),
+                ("hit_rate", Json::num(cached.cache.hit_rate())),
+                ("hit_rate_warm", Json::num(warm_rate)),
+            ]),
+        ),
+        (
+            "baseline",
+            Json::obj(vec![
+                ("span_secs", Json::num(baseline.span_secs)),
+                ("p99_secs", Json::num(b99)),
+                ("sched_secs", Json::num(baseline.total_sched_secs())),
+                ("sched_fraction", Json::num(baseline.sched_fraction())),
+            ]),
+        ),
+        (
+            "sched_speedup",
+            Json::num(baseline.total_sched_secs() / cached.total_sched_secs().max(1e-12)),
+        ),
+        ("identical_selections", Json::Bool(identical)),
+    ]);
+    let _ = std::fs::write(out_dir.join("BENCH_serve.json"), json.dump());
+    let _ = lanes.write_csv(&out_dir.join("serve.csv"));
+    vec![lanes, cmp]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_bench_writes_report_with_identical_selections() {
+        let dir = std::env::temp_dir().join("vortex_bench_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let tables = serve(&dir, 7, 8);
+        assert_eq!(tables.len(), 2);
+        let text = std::fs::read_to_string(dir.join("BENCH_serve.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert!(j.get("requests").unwrap().as_f64().unwrap() >= 200.0);
+        assert_eq!(j.get("identical_selections").unwrap().as_bool(), Some(true));
+        assert!(j.get("cache").unwrap().get("hits").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

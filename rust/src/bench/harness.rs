@@ -78,14 +78,16 @@ impl Engine {
     /// Simulated end-to-end time for one iteration space (execution +
     /// scheduling).
     ///
-    /// Scheduling overhead is *modeled* (2 us — the paper's Fig. 14
-    /// scale on the A100 host), not the wall-clock of `select()` on
-    /// this machine: mixing this box's wall time into simulated A100
-    /// microseconds would double-count hardware differences. The real
-    /// wall-clock selection cost is reported separately by Fig. 14 and
-    /// the runtime_select bench.
+    /// Scheduling overhead is *modeled*
+    /// ([`crate::serve::SCHED_OVERHEAD_SECS`] — the paper's Fig. 14
+    /// scale on the A100 host, shared with the serving layer's event
+    /// clock), not the wall-clock of `select()` on this machine:
+    /// mixing this box's wall time into simulated A100 microseconds
+    /// would double-count hardware differences. The real wall-clock
+    /// selection cost is reported separately by Fig. 14 and the
+    /// runtime_select bench.
     pub fn time_space(&self, sim: &Simulator, space: IterSpace) -> f64 {
-        const VORTEX_SCHED_OVERHEAD: f64 = 2e-6;
+        const VORTEX_SCHED_OVERHEAD: f64 = crate::serve::SCHED_OVERHEAD_SECS;
         // A fused chain dispatched through a single-kernel lens (an
         // alias library, the folded contraction view, or a baseline
         // planner) executes one dispatch per constituent kernel.

@@ -9,6 +9,7 @@ pub mod exp_ablation;
 pub mod exp_analysis;
 pub mod exp_model;
 pub mod exp_operator;
+pub mod exp_serve;
 pub mod harness;
 pub mod workloads;
 
@@ -19,7 +20,7 @@ use crate::util::table::Table;
 /// All experiment names, in paper order.
 pub const EXPERIMENTS: &[&str] = &[
     "fig3", "fig5", "table5", "table6", "fig13", "offline", "fig14", "fig15",
-    "table7", "fig16", "ablation", "ops",
+    "table7", "fig16", "ablation", "ops", "serve",
 ];
 
 /// Run one experiment (or "all"). `fast` subsamples the big suites so a
@@ -40,6 +41,7 @@ pub fn run(name: &str, out_dir: &Path, seed: u64, fast: bool) -> Vec<Table> {
         "fig16" => exp_analysis::fig16(out_dir, seed),
         "ablation" => exp_ablation::ablation(out_dir, seed, frac),
         "ops" => exp_operator::ops(out_dir, seed),
+        "serve" => exp_serve::serve(out_dir, seed, frac),
         "all" => {
             let mut all = Vec::new();
             for e in EXPERIMENTS {

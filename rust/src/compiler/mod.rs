@@ -135,6 +135,11 @@ pub struct CompileOpts {
     /// loads `<hw>_<op>_<dtype>_<analyzer>.json` if present and writes
     /// it after a fresh build.
     pub cache_dir: Option<PathBuf>,
+    /// Fingerprint of the AOT artifact set backing the target's blocks
+    /// (`runtime::Manifest::fingerprint()` on the real testbed; 0 when
+    /// no artifacts are involved). Folded into the cache fingerprint so
+    /// regenerated real-testbed blocks invalidate stale caches.
+    pub aot_fingerprint: u64,
 }
 
 impl Default for CompileOpts {
@@ -144,6 +149,7 @@ impl Default for CompileOpts {
             profile_all_pairs: false,
             restrict_l1: Vec::new(),
             cache_dir: None,
+            aot_fingerprint: 0,
         }
     }
 }
@@ -159,11 +165,13 @@ impl CompileOpts {
 /// Fingerprint of everything the compiled library depends on besides
 /// the visible (hw name, op, dtype, analyzer) key: the full hardware
 /// spec contents (an `exp_ablation`-style relaxed clone shares the
-/// name but not the space) and the profiler's measurement identity
-/// (the simulator seed). Without this, a cache hit could silently
-/// return base costs measured under a different seed or spec.
-fn cache_fingerprint(hw: &HwSpec, profiler: &dyn Profiler) -> u64 {
-    let mut parts: Vec<u64> = vec![profiler.fingerprint()];
+/// name but not the space), the profiler's measurement identity
+/// (the simulator seed) and the AOT artifact set backing real-testbed
+/// blocks (`aot` — see [`CompileOpts::aot_fingerprint`]). Without
+/// this, a cache hit could silently return base costs measured under a
+/// different seed, spec or artifact build.
+fn cache_fingerprint(hw: &HwSpec, profiler: &dyn Profiler, aot: u64) -> u64 {
+    let mut parts: Vec<u64> = vec![profiler.fingerprint(), aot];
     for l in &hw.levels {
         parts.push(l.capacity_bytes);
         parts.push(l.load_bw_gbps.to_bits());
@@ -234,7 +242,7 @@ pub fn compile(
     opts: &CompileOpts,
 ) -> CompileReport {
     let wall0 = Instant::now();
-    let fp = cache_fingerprint(hw, profiler);
+    let fp = cache_fingerprint(hw, profiler, opts.aot_fingerprint);
     if let Some(dir) = opts.cache_dir.as_deref() {
         if opts.cacheable() {
             if let Some(library) = load_cached(dir, hw, op, dtype, cfg, fp) {
@@ -780,7 +788,7 @@ mod tests {
         let mut p1 = SimProfiler::new(Simulator::new(hw.clone(), 5));
         let r1 = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut p1, &opts);
         assert!(!r1.from_cache);
-        let fp = cache_fingerprint(&hw, &p1);
+        let fp = cache_fingerprint(&hw, &p1, 0);
         assert!(cache_path(&dir, &hw, OpKind::Gemm, DType::F16, &cfg, fp).exists());
         let mut p2 = SimProfiler::new(Simulator::new(hw.clone(), 5));
         let r2 = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut p2, &opts);
@@ -810,6 +818,18 @@ mod tests {
         p6.softmax_ops_per_elem = 2.0 * crate::profiler::SOFTMAX_OPS_PER_ELEM;
         let r6 = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut p6, &opts);
         assert!(!r6.from_cache, "softmax-measurement change aliased in the cache");
+        // ...and so must a changed AOT artifact set (ROADMAP real-
+        // testbed item): a library built against one Pallas block build
+        // never serves a compile against a regenerated one — while the
+        // SAME artifact fingerprint still hits its own cache entry.
+        let aot_opts = CompileOpts { aot_fingerprint: 0xA07, ..opts.clone() };
+        let mut p7 = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let r7 = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut p7, &aot_opts);
+        assert!(!r7.from_cache, "AOT-artifact change aliased in the cache");
+        let mut p8 = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let r8 = compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut p8, &aot_opts);
+        assert!(r8.from_cache, "unchanged AOT fingerprint must hit");
+        assert_eq!(r8.library.kernels, r7.library.kernels);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -29,7 +29,11 @@ impl Metrics {
         self.lat.len()
     }
 
-    fn pct(sorted: &[f64], p: f64) -> f64 {
+    /// Percentile of an ascending-sorted slice — the ONE index formula
+    /// every latency report uses (per-lane via `latency_percentiles`,
+    /// aggregate via `serve::MixedStats`), so per-lane and aggregate
+    /// percentiles in the same table are always computed identically.
+    pub(crate) fn pct(sorted: &[f64], p: f64) -> f64 {
         if sorted.is_empty() {
             return 0.0;
         }

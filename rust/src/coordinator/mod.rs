@@ -5,7 +5,9 @@
 //! Everything here is sample-free: the only inputs are the offline
 //! [`crate::compiler::MicroKernelLibrary`] and the concrete runtime
 //! shape. Selection is a pure analytical pass over the compact kernel
-//! set (microseconds — Fig. 14's scheduling sliver).
+//! set (microseconds — Fig. 14's scheduling sliver). Multi-op serving
+//! (request lanes, bucketed plan cache) lives in [`crate::serve`];
+//! the GEMM-only loop here delegates to a one-lane instance of it.
 
 pub mod metrics;
 pub mod select;

@@ -29,7 +29,7 @@ use crate::hw::HwSpec;
 use crate::ir::{ceil_div, DType, IterSpace, OpKind, Tile};
 
 /// Backend restriction (paper Fig. 16 modes).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum HwMode {
     /// Consider every library (the paper's default "Adaptive").
     Adaptive,
@@ -52,6 +52,22 @@ pub struct Selection {
     pub est_secs: f64,
     /// Wall-clock spent selecting (Fig. 14 "scheduling" component).
     pub select_secs: f64,
+}
+
+impl Selection {
+    /// True when `other` is the same constructed plan: every field
+    /// that affects execution (library, kernel, padded problem, grid,
+    /// estimate) — everything except the wall-clock `select_secs`.
+    /// This is the ONE definition of the equality the serving layer's
+    /// plan cache guarantees between cached and fresh selection; keep
+    /// it in sync when `Selection` grows an execution-relevant field.
+    pub fn same_plan(&self, other: &Selection) -> bool {
+        self.lib == other.lib
+            && self.kernel == other.kernel
+            && self.padded == other.padded
+            && self.grid == other.grid
+            && self.est_secs == other.est_secs
+    }
 }
 
 /// Precomputed per-kernel constants for the allocation-free selection
@@ -122,7 +138,7 @@ impl Selector {
             "xeon_8255c" => 1e-6,
             _ => 30e-6,
         };
-        let per_block_launch = hw.name == "cpu_pjrt";
+        let per_block_launch = hw.is_real_testbed();
         let top_bw = hw.levels.last().unwrap().load_bw_gbps * 1e9;
         let units = hw.level(hw.n_levels() - 2).unit_count as usize;
         let mut fast = Vec::new();
@@ -161,7 +177,11 @@ impl Selector {
     /// mismatch the space), and it terminates because every alias hop
     /// strictly reduces to a self-aliasing op. Ops whose chain ends
     /// with no library loaded make select() return None.
-    fn serving_op(&self, op: OpKind) -> OpKind {
+    ///
+    /// Public because the serving layer's plan cache
+    /// ([`crate::serve::PlanCache`]) derives its bucket key from the
+    /// serving op's L1 tile set — the same fixpoint selection scans.
+    pub fn serving_op(&self, op: OpKind) -> OpKind {
         let mut op = op;
         while !self.has_op(op) {
             let alias = op.spec().measurement_op();
@@ -189,7 +209,7 @@ impl Selector {
         // On GPU/CPU targets one launch covers the whole grid; on the
         // real PJRT path the constructor dispatches one executable call
         // per parallel block, so the overhead scales with the grid.
-        let launches = if self.hw.name == "cpu_pjrt" {
+        let launches = if self.hw.is_real_testbed() {
             spec.spatial_iters(padded, k.l1) as f64
         } else {
             1.0

@@ -1,4 +1,5 @@
-//! Dynamic-shape serving coordinator: request queue + dynamic batcher.
+//! Dynamic-shape serving coordinator: the legacy single-op (GEMM)
+//! request queue + dynamic batcher.
 //!
 //! This is the system-execution side of the paper's motivation (§2.1:
 //! "dynamic adjustment of batch sizes ... demands adaptability in the
@@ -7,13 +8,23 @@
 //! it takes, and Vortex's sample-free selector is what makes serving it
 //! efficient without a bucket/sample list.
 //!
-//! The core is a deterministic discrete-event loop (`serve_trace`) usable
-//! with both the simulated engines and the real PJRT engine; the
-//! `dynamic_batch_server` example wraps it with real threads + channels.
+//! The discrete-event core now lives in the production serving
+//! subsystem ([`crate::serve`]): [`serve_trace`] delegates to a
+//! one-lane instance of [`crate::serve::serve_mixed_trace`], keeping
+//! this GEMM-only API (and the `dynamic_batch_server` example built on
+//! it) stable while multi-op traffic goes through `serve::` lanes.
+//! The event clock charges a MODELED scheduling overhead
+//! ([`crate::serve::SCHED_OVERHEAD_SECS`]) instead of this machine's
+//! wall-clock selection time, so replay is deterministic; the measured
+//! selection wall-clock still lands in [`Metrics`] as the scheduling
+//! component.
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::select::{HwMode, Selection, Selector};
-use crate::ir::Contraction;
+use crate::ir::{Contraction, DType, TensorProgram};
+use crate::serve::{
+    serve_mixed_trace, LaneClass, LaneConfig, LaneEngine, ServeConfig, ServeRequest,
+};
 
 /// One inference request: `rows` token rows to push through a GEMM of
 /// width (n, k) — e.g. a BERT layer's QKV projection for one sequence.
@@ -35,6 +46,11 @@ pub struct ServerConfig {
     /// GEMM width shared by all requests (N, K of the served operator).
     pub n: usize,
     pub k: usize,
+    /// Element type of the served requests. This is the REQUEST dtype
+    /// the merged contraction is built with — previously the loop
+    /// silently used `selector.libraries[0].dtype` regardless of which
+    /// library selection actually picked.
+    pub dtype: DType,
 }
 
 impl Default for ServerConfig {
@@ -45,11 +61,12 @@ impl Default for ServerConfig {
             mode: HwMode::Adaptive,
             n: 768,
             k: 768,
+            dtype: DType::F32,
         }
     }
 }
 
-/// Execution backend for the serving loop.
+/// Execution backend for the legacy GEMM serving loop.
 pub trait Engine {
     /// Run the selected kernel on the (unpadded) problem; return the
     /// service time in seconds. May actually execute (real engine) or
@@ -99,7 +116,8 @@ impl ServingStats {
     }
 }
 
-/// Deterministic discrete-event serving loop over a request trace.
+/// Deterministic discrete-event serving loop over a GEMM request
+/// trace: a one-lane instance of [`crate::serve::serve_mixed_trace`].
 /// Requests must be sorted by arrival time.
 pub fn serve_trace(
     engine: &mut dyn Engine,
@@ -107,67 +125,53 @@ pub fn serve_trace(
     cfg: &ServerConfig,
     requests: &[Request],
 ) -> ServingStats {
-    debug_assert!(requests.windows(2).all(|w| w[0].arrive <= w[1].arrive));
-    let mut stats = ServingStats::default();
-    let mut clock = 0.0f64;
-    let mut i = 0;
-    while i < requests.len() {
-        // Server becomes free at `clock`; next batch forms from the
-        // first pending request.
-        let first = &requests[i];
-        let open = clock.max(first.arrive);
-        let close = open + cfg.batch_window;
-        let mut batch = vec![*first];
-        let mut j = i + 1;
-        while j < requests.len()
-            && batch.len() < cfg.max_batch
-            && requests[j].arrive <= close
-        {
-            batch.push(requests[j]);
-            j += 1;
-        }
-        // Batch launch time: when the window closes or the batch fills,
-        // but never before the server is free.
-        let launch = if batch.len() == cfg.max_batch {
-            batch.last().unwrap().arrive.max(open)
-        } else if j < requests.len() {
-            close
-        } else {
-            batch.last().unwrap().arrive.max(open)
-        };
-
-        let rows: usize = batch.iter().map(|r| r.rows).sum();
-        let c = Contraction {
-            m: rows,
-            n: cfg.n,
-            k: cfg.k,
-            dtype: selector.libraries[0].dtype,
-        };
-        let sel = selector
-            .select(c, cfg.mode)
-            .expect("selector must handle any shape (sample-free)");
-        let service = engine.execute(c, &sel, selector);
-        let done = launch + sel.select_secs + service;
-        for r in &batch {
-            let latency = done - r.arrive;
-            stats.metrics.record(
-                latency,
-                sel.select_secs / batch.len() as f64,
-                service / batch.len() as f64,
-                c.flops() * (r.rows as f64 / rows as f64),
-            );
-            stats.outcomes.push(ServeOutcome {
-                id: r.id,
-                latency,
-                batch_size: batch.len(),
-            });
-        }
-        stats.batches += 1;
-        stats.total_rows += rows;
-        clock = done;
-        i = j;
+    // Adapt the legacy contraction-view engine onto the lane trait.
+    struct Adapter<'a> {
+        inner: &'a mut dyn Engine,
     }
-    stats.metrics.span_secs = clock;
+    impl LaneEngine for Adapter<'_> {
+        fn execute(
+            &mut self,
+            space: crate::ir::IterSpace,
+            sel: &Selection,
+            selector: &Selector,
+        ) -> f64 {
+            self.inner.execute(space.contraction(), sel, selector)
+        }
+        fn name(&self) -> &'static str {
+            self.inner.name()
+        }
+    }
+
+    let reqs: Vec<ServeRequest> = requests
+        .iter()
+        .map(|r| ServeRequest {
+            id: r.id,
+            program: TensorProgram::Gemm { m: r.rows, n: cfg.n, k: cfg.k, dtype: cfg.dtype },
+            arrive: r.arrive,
+        })
+        .collect();
+    let mut serve_cfg = ServeConfig { plan_cache: None, ..ServeConfig::default() };
+    serve_cfg.lanes[LaneClass::Gemm.index()] = LaneConfig {
+        max_batch: cfg.max_batch,
+        batch_window: cfg.batch_window,
+        mode: cfg.mode,
+    };
+    let mixed = serve_mixed_trace(&mut Adapter { inner: engine }, selector, &serve_cfg, &reqs);
+
+    let mut stats = ServingStats {
+        outcomes: mixed
+            .outcomes
+            .iter()
+            .map(|o| ServeOutcome { id: o.id, latency: o.latency, batch_size: o.batch_size })
+            .collect(),
+        ..ServingStats::default()
+    };
+    if let Some(lane) = mixed.lanes.into_iter().next() {
+        stats.metrics = lane.metrics;
+        stats.batches = lane.batches;
+        stats.total_rows = lane.total_units;
+    }
     stats
 }
 
@@ -271,6 +275,62 @@ mod tests {
             "batched {} !< solo {}",
             batched.metrics.span_secs,
             solo.metrics.span_secs
+        );
+    }
+
+    #[test]
+    fn request_dtype_threads_through_to_the_engine() {
+        // The dtype-bug regression test: the merged contraction must be
+        // built with the CONFIGURED request dtype, not whatever dtype
+        // `selector.libraries[0]` happens to have.
+        struct Probe {
+            inner: SimEngine,
+            dtypes: Vec<DType>,
+        }
+        impl Engine for Probe {
+            fn execute(&mut self, c: Contraction, sel: &Selection, s: &Selector) -> f64 {
+                self.dtypes.push(c.dtype);
+                self.inner.execute(c, sel, s)
+            }
+            fn name(&self) -> &'static str {
+                "probe"
+            }
+        }
+        let hw = presets::a100();
+        let acfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        // libraries[0] is F32 — the old code leaked F32 into every
+        // request regardless of the served stream's dtype.
+        let f32lib = compile(
+            &hw,
+            crate::ir::OpKind::Gemm,
+            DType::F32,
+            &acfg,
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library;
+        let f16lib = compile(
+            &hw,
+            crate::ir::OpKind::Gemm,
+            DType::F16,
+            &acfg,
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library;
+        let sel = Selector::new(hw.clone(), vec![f32lib, f16lib]);
+        let mut probe =
+            Probe { inner: SimEngine { sim: Simulator::new(hw, 5) }, dtypes: Vec::new() };
+        let cfg = ServerConfig { dtype: DType::F16, ..ServerConfig::default() };
+        let trace = gen_trace(10, 1e-3, 1, 64, 4);
+        let stats = serve_trace(&mut probe, &sel, &cfg, &trace);
+        assert_eq!(stats.metrics.count(), 10);
+        assert!(!probe.dtypes.is_empty());
+        assert!(
+            probe.dtypes.iter().all(|&d| d == DType::F16),
+            "request dtype not threaded: {:?}",
+            probe.dtypes
         );
     }
 

@@ -89,6 +89,16 @@ impl HwSpec {
         self.backends.iter().position(|b| b.name == name)
     }
 
+    /// True for the REAL testbed (PJRT CPU today): one executable
+    /// dispatch per parallel block, and the micro-kernel library is
+    /// backed by AOT artifacts (so compile caches must fold in the
+    /// artifact fingerprint). The single place the "which testbed is
+    /// real" question is answered — callers must not re-derive it
+    /// from `name` string comparisons.
+    pub fn is_real_testbed(&self) -> bool {
+        self.name == "cpu_pjrt"
+    }
+
     /// Total parallel units at `level` across the whole chip
     /// (e.g. warps: 4 * 108 on A100).
     pub fn total_units_at(&self, level: usize) -> u64 {

@@ -54,8 +54,23 @@
 //! threads (measurements are hoisted and profiled once, sequentially,
 //! so profiler accounting stays exact), and compiled libraries can be
 //! cached on disk keyed by (hw, op, dtype, analyzer) plus a
-//! fingerprint of the hardware spec and measurement definitions — see
+//! fingerprint of the hardware spec, measurement definitions and — on
+//! the real testbed — the AOT artifact set — see
 //! [`compiler::CompileOpts`].
+//!
+//! ## Serving layer
+//!
+//! The production serving subsystem ([`serve`]) runs multi-op traffic
+//! through per-op-class request lanes (token-row merging for GEMM and
+//! attention, batch-dim merging for the conv family) with a bucketed
+//! plan cache ([`serve::PlanCache`]) that memoizes shape→kernel
+//! selection by padded-tile bucket — O(1) amortized dispatch with a
+//! guarantee that cached plans are identical to fresh selection. The
+//! "Serving layer" section of
+//! [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) covers the
+//! lanes, the bucket-key derivation and cache coherence with library
+//! reload; the `serve` bench and `vortex serve --mixed` exercise it
+//! end to end.
 
 pub mod baselines;
 pub mod bench;
@@ -68,5 +83,6 @@ pub mod ir;
 pub mod models;
 pub mod profiler;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;

@@ -35,7 +35,12 @@ USAGE:
                   [--testbed ...] [--dtype ...] [--mode adaptive|cuda|tensor]
   vortex run      --m M --n N --k K [--artifacts DIR] [--verify]
   vortex serve    [--requests N] [--mean-gap-us U] [--max-batch B]
-  vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|ops|all>
+                  [--mixed] [--no-cache]
+                  (--mixed: multi-op request lanes + bucketed plan cache
+                   over a BERT-token + vision-burst trace; --no-cache
+                   disables plan memoization. `vortex --serve ...` is an
+                   alias for the subcommand.)
+  vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|ops|serve|all>
                   [--out results/] [--seed S] [--full]
   vortex info
 ";
@@ -50,6 +55,8 @@ fn main() {
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
         "info" => cmd_info(),
+        // `vortex --serve ...` flag form (serving-mode alias).
+        _ if args.has_flag("serve") => cmd_serve(&args),
         _ => print!("{USAGE}"),
     }
 }
@@ -106,10 +113,17 @@ fn cmd_compile(args: &Args) {
         cfg.label()
     );
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
-    let opts = CompileOpts {
+    let mut opts = CompileOpts {
         cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
         ..CompileOpts::default()
     };
+    // Real-testbed builds fold the AOT artifact set into the cache
+    // fingerprint: regenerated Pallas blocks invalidate stale libraries.
+    if hw.is_real_testbed() {
+        if let Ok(m) = vortex::runtime::Manifest::load(&artifacts_dir(args)) {
+            opts.aot_fingerprint = m.fingerprint();
+        }
+    }
     let r = compile(&hw, op, dtype, &cfg, &mut prof, &opts);
     let mut t = Table::new("compile report", &["metric", "value"]);
     t.row(vec!["candidates (Algorithm 2)".into(), r.candidates_total.to_string()]);
@@ -310,6 +324,12 @@ fn cmd_serve(args: &Args) {
     let gap = args.get_f64("mean-gap-us", 500.0) * 1e-6;
     let max_batch = args.get_usize("max-batch", 8);
     let seed = args.get_u64("seed", 7);
+    if args.has_flag("mixed") {
+        // Only an EXPLICIT --max-batch overrides the scenario's
+        // per-lane caps (the legacy default of 8 is not implied).
+        let max_batch = args.get("max-batch").and_then(|v| v.parse().ok());
+        return cmd_serve_mixed(n_req, gap, seed, !args.has_flag("no-cache"), max_batch);
+    }
     let hw = presets::a100();
     let cfg = AnalyzerConfig::default_for(&hw);
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
@@ -327,6 +347,49 @@ fn cmd_serve(args: &Args) {
         stats.mean_batch()
     );
     println!("{}", stats.metrics.summary());
+}
+
+/// Multi-op serving: BERT token traffic + vision bursts through the
+/// request lanes, with the bucketed plan cache (unless disabled).
+fn cmd_serve_mixed(n_req: usize, gap: f64, seed: u64, cache: bool, max_batch: Option<usize>) {
+    use vortex::serve::{scenario, serve_mixed_trace, LaneClass, SimLaneEngine};
+    let hw = presets::a100();
+    let selector = scenario::demo_selector(seed);
+    let trace = scenario::mixed_trace(n_req, gap, seed, DType::F32);
+    let mut serve_cfg = if cache {
+        scenario::serving_config()
+    } else {
+        scenario::serving_config().without_cache()
+    };
+    if let Some(mb) = max_batch {
+        for class in LaneClass::ALL {
+            serve_cfg.lane_mut(class).max_batch = mb;
+        }
+    }
+    let mut engine = SimLaneEngine { sim: Simulator::new(hw, seed) };
+    let stats = serve_mixed_trace(&mut engine, &selector, &serve_cfg, &trace);
+    bench::exp_serve::lanes_table("multi-op serving lanes", &stats).print();
+    let (p50, _, p99) = stats.latency_percentiles();
+    println!(
+        "served {} requests across {} lanes: span {:.2} ms, p50 {:.2} ms, p99 {:.2} ms, sched {:.2}%",
+        stats.count(),
+        stats.lanes.len(),
+        stats.span_secs * 1e3,
+        p50 * 1e3,
+        p99 * 1e3,
+        100.0 * stats.sched_fraction()
+    );
+    if cache {
+        println!(
+            "plan cache: {} hits / {} misses / {} evictions (hit rate {:.1}%)",
+            stats.cache.hits,
+            stats.cache.misses,
+            stats.cache.evictions,
+            100.0 * stats.cache.hit_rate()
+        );
+    } else {
+        println!("plan cache disabled (--no-cache): every batch ran fresh selection");
+    }
 }
 
 fn cmd_bench(args: &Args) {

@@ -210,6 +210,30 @@ pub fn trace(model: Model, dynamic: usize, dtype: DType) -> Vec<TensorProgram> {
     }
 }
 
+/// Serving-request templates of a model at one dynamic-dim value: the
+/// distinct operator shapes a request stream for this model emits,
+/// consumed by the serving scenario generator
+/// (`serve::scenario::mixed_trace`). Language models request their QKV
+/// projection and attention chain at the dynamic sequence length; CNNs
+/// request their stem convolution — and depthwise-separable models
+/// additionally their first depthwise block — at the dynamic batch.
+pub fn request_ops(model: Model, dynamic: usize, dtype: DType) -> Vec<TensorProgram> {
+    let t = trace(model, dynamic, dtype);
+    if model.is_language_model() {
+        // [QKV projection, attention chain] of layer 0.
+        t.into_iter().take(2).collect()
+    } else {
+        let mut out = vec![t[0].clone()];
+        let depthwise = t.iter().find(
+            |p| matches!(p, TensorProgram::Conv2d { cin, groups, .. } if groups == cin),
+        );
+        if let Some(dw) = depthwise {
+            out.push(dw.clone());
+        }
+        out
+    }
+}
+
 /// The paper's dynamic ranges: 17 sequence lengths in [1, 476] for LLMs;
 /// batch sizes 1, 4, 8, ..., 64 for CNNs (§7.1).
 pub fn dynamic_range(model: Model) -> Vec<usize> {
@@ -317,6 +341,29 @@ mod tests {
             other => panic!("expected conv, got {}", other.id()),
         };
         assert_eq!(ops[1].conv_output().unwrap().0, pw_h);
+    }
+
+    #[test]
+    fn request_ops_are_the_serving_templates() {
+        // Language model: QKV projection + attention chain at the
+        // dynamic sequence length.
+        let bert = request_ops(Model::Bert, 77, DType::F32);
+        assert_eq!(bert.len(), 2);
+        assert_eq!(bert[0], TensorProgram::Gemm { m: 77, n: 2304, k: 768, dtype: DType::F32 });
+        assert!(matches!(&bert[1], TensorProgram::Attention { seq: 77, .. }));
+        // CNN: the stem conv at the dynamic batch.
+        let resnet = request_ops(Model::ResNet50, 3, DType::F32);
+        assert_eq!(resnet.len(), 1);
+        assert!(matches!(&resnet[0], TensorProgram::Conv2d { n: 3, h: 224, .. }));
+        // Depthwise-separable model: stem + first depthwise block.
+        let mobile = request_ops(Model::MobileNet, 2, DType::F16);
+        assert_eq!(mobile.len(), 2);
+        assert!(
+            matches!(&mobile[1], TensorProgram::Conv2d { cin, groups, .. } if groups == cin)
+        );
+        for p in bert.iter().chain(&resnet).chain(&mobile) {
+            assert!(p.validate().is_ok(), "{}", p.id());
+        }
     }
 
     #[test]

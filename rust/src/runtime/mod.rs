@@ -153,6 +153,26 @@ impl Manifest {
             .filter_map(|e| Some((e.block()?, e.name.clone())))
             .collect()
     }
+
+    /// Stable fingerprint of the AOT artifact set: every entry's name,
+    /// kind, parameters (deterministically serialized) and — when the
+    /// artifact file is readable — its bytes. Feed this into
+    /// [`crate::compiler::CompileOpts::aot_fingerprint`] so on-disk
+    /// library caches keyed on real-testbed blocks invalidate when the
+    /// Pallas blocks are regenerated (ROADMAP offline-stage item).
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::rng::{fnv1a, hash_key};
+        let mut parts: Vec<u64> = Vec::with_capacity(self.entries.len() * 4);
+        for e in &self.entries {
+            parts.push(fnv1a(e.name.as_bytes()));
+            parts.push(fnv1a(e.kind.as_bytes()));
+            parts.push(fnv1a(e.params.dump().as_bytes()));
+            if let Ok(bytes) = std::fs::read(self.dir.join(&e.file)) {
+                parts.push(fnv1a(&bytes));
+            }
+        }
+        hash_key(&parts)
+    }
 }
 
 /// The real engine: PJRT CPU client + lazily compiled executables.
@@ -889,6 +909,33 @@ mod tests {
         );
         std::fs::write(dir.join("manifest.json"), ok).unwrap();
         assert_eq!(Manifest::load(&dir).unwrap().entries.len(), 2);
+    }
+
+    #[test]
+    fn manifest_fingerprint_tracks_blocks_and_artifact_bytes() {
+        let dir = std::env::temp_dir().join("vortex_manifest_fp_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let one = format!("{{\"entries\": [{}]}}", entry_json("gemm_acc_8x128x128_f32"));
+        std::fs::write(dir.join("manifest.json"), &one).unwrap();
+        let f1 = Manifest::load(&dir).unwrap().fingerprint();
+        // Stable across reloads.
+        assert_eq!(f1, Manifest::load(&dir).unwrap().fingerprint());
+        // A (new) artifact binary enters the fingerprint...
+        std::fs::write(dir.join("gemm_acc_8x128x128_f32.hlo.txt"), "HLO v1").unwrap();
+        let f2 = Manifest::load(&dir).unwrap().fingerprint();
+        assert_ne!(f1, f2, "artifact bytes not fingerprinted");
+        // ...and changed bytes change it (a regenerated Pallas block).
+        std::fs::write(dir.join("gemm_acc_8x128x128_f32.hlo.txt"), "HLO v2").unwrap();
+        let f3 = Manifest::load(&dir).unwrap().fingerprint();
+        assert_ne!(f2, f3, "changed artifact bytes aliased");
+        // Changed block parameters change it even with the same file.
+        let changed = one.replace("\"bn\": 128", "\"bn\": 256");
+        assert_ne!(one, changed);
+        std::fs::write(dir.join("manifest.json"), &changed).unwrap();
+        let f4 = Manifest::load(&dir).unwrap().fingerprint();
+        assert_ne!(f3, f4, "changed params aliased");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

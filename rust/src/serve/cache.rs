@@ -1,0 +1,394 @@
+//! Bucketed plan cache: O(1) amortized shape→kernel dispatch.
+//!
+//! The paper's L1-tile padding math is what makes memoization sound:
+//! the selector's fast path evaluates every candidate kernel on the
+//! PADDED problem — `grid = ceil(dim / l1)` per axis, `padded = grid ·
+//! l1` — so two runtime spaces that produce the same launch grid under
+//! EVERY candidate L1 tile are indistinguishable to selection: same
+//! padded problem, same traffic terms, same launch count, same argmin.
+//! Padding therefore quantizes the unbounded dynamic-shape stream into
+//! a small set of buckets, and per-request selection collapses into a
+//! hash lookup after the first request of each bucket.
+//!
+//! The bucket key is derived from the selector itself: per serving op
+//! (the measurement-alias FIXPOINT the selector would scan), per axis,
+//! the distinct L1 extents of the loaded kernels; a space's bucket
+//! coordinate is the tuple of `ceil(dim / extent)` over those extents.
+//! Equal coordinates ⟹ equal per-kernel grids ⟹ the cached
+//! [`Selection`] is IDENTICAL to fresh selection (library index,
+//! kernel index, padded shape, grid and estimate — everything except
+//! the wall-clock `select_secs`, which a hit replaces with the lookup
+//! time). That guarantee is enforced by a property test below.
+//!
+//! Coherence: a `PlanCache` is constructed FOR one selector
+//! ([`PlanCache::for_selector`]) — the bucket tables and memoized
+//! plans are derived from that selector's libraries. Reloading or
+//! swapping libraries requires building a fresh cache; there is no
+//! partial-invalidation path by design (the rebuild is microseconds).
+
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+use crate::coordinator::select::{HwMode, Selection, Selector};
+use crate::ir::{ceil_div, DType, IterSpace, OpKind};
+
+/// Hit / miss / eviction counters of one [`PlanCache`].
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0 when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// One padded-tile bucket: everything selection can observe about a
+/// runtime space. `grids` is the per-axis launch-grid tuple under
+/// every distinct L1 extent of the serving op's kernels — equal
+/// `grids` means every candidate sees the same padded problem.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct BucketKey {
+    op: OpKind,
+    dtype: DType,
+    mode: HwMode,
+    grids: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    sel: Selection,
+    tick: u64,
+}
+
+/// Memoized `Selection`s keyed by (op, dtype, mode, padded-tile
+/// bucket), with LRU eviction and hit/miss/eviction stats.
+#[derive(Debug)]
+pub struct PlanCache {
+    capacity: usize,
+    map: HashMap<BucketKey, Entry>,
+    /// Recency index: tick → bucket, exactly one entry per live bucket
+    /// (ticks are unique and monotonic). Keeps eviction O(log n)
+    /// instead of a full map scan when the live bucket set thrashes
+    /// past `capacity`.
+    lru: BTreeMap<u64, BucketKey>,
+    /// serving op → per-axis sorted distinct L1 extents of its kernels.
+    extents: HashMap<OpKind, Vec<Vec<usize>>>,
+    tick: u64,
+    pub stats: CacheStats,
+}
+
+impl PlanCache {
+    /// Build a cache for one selector: precompute the per-axis distinct
+    /// L1 extents of every loaded op's kernel set (the quantization
+    /// grid the bucket key is computed against).
+    pub fn for_selector(selector: &Selector, capacity: usize) -> PlanCache {
+        let mut extents: HashMap<OpKind, Vec<Vec<usize>>> = HashMap::new();
+        for lib in &selector.libraries {
+            let per_axis = extents
+                .entry(lib.op)
+                .or_insert_with(|| vec![Vec::new(); lib.op.spec().rank()]);
+            for k in &lib.kernels {
+                for (a, ex) in per_axis.iter_mut().enumerate() {
+                    if !ex.contains(&k.l1[a]) {
+                        ex.push(k.l1[a]);
+                    }
+                }
+            }
+        }
+        for per_axis in extents.values_mut() {
+            for ex in per_axis.iter_mut() {
+                ex.sort_unstable();
+            }
+        }
+        PlanCache {
+            capacity: capacity.max(1),
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            extents,
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// The bucket a space falls into, or `None` when the serving op has
+    /// no loaded kernels (fresh selection returns `None` there too).
+    fn key(&self, selector: &Selector, space: IterSpace, mode: HwMode) -> Option<BucketKey> {
+        let serving = selector.serving_op(space.op);
+        let per_axis = self.extents.get(&serving)?;
+        // Alias-chain invariant: the serving op preserves rank, so the
+        // extent table lines up with the space's axes.
+        debug_assert_eq!(per_axis.len(), space.dims.rank());
+        let mut grids = Vec::with_capacity(per_axis.iter().map(Vec::len).sum());
+        for (&d, ex) in space.dims.dims().iter().zip(per_axis) {
+            for &t in ex {
+                grids.push(ceil_div(d, t));
+            }
+        }
+        Some(BucketKey { op: space.op, dtype: space.dtype, mode, grids })
+    }
+
+    /// Cached dispatch: identical to `selector.select(space, mode)` in
+    /// every field except `select_secs` (a hit reports the lookup
+    /// wall-clock instead of the full scan).
+    pub fn select(
+        &mut self,
+        selector: &Selector,
+        space: IterSpace,
+        mode: HwMode,
+    ) -> Option<Selection> {
+        let t0 = Instant::now();
+        let key = match self.key(selector, space, mode) {
+            Some(k) => k,
+            // No kernels for the serving op: pass through (None).
+            None => return selector.select(space, mode),
+        };
+        self.tick += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            let stale = e.tick;
+            e.tick = self.tick;
+            self.stats.hits += 1;
+            let mut sel = e.sel.clone();
+            sel.select_secs = t0.elapsed().as_secs_f64();
+            let bucket = self.lru.remove(&stale).expect("lru index out of sync");
+            self.lru.insert(self.tick, bucket);
+            return Some(sel);
+        }
+        let sel = selector.select(space, mode)?;
+        self.stats.misses += 1;
+        if self.map.len() >= self.capacity {
+            if let Some((_, oldest)) = self.lru.pop_first() {
+                self.map.remove(&oldest);
+                self.stats.evictions += 1;
+            }
+        }
+        self.map.insert(key.clone(), Entry { sel: sel.clone(), tick: self.tick });
+        self.lru.insert(self.tick, key);
+        debug_assert_eq!(self.lru.len(), self.map.len());
+        Some(sel)
+    }
+
+    /// Number of live buckets.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::cost::hybrid::AnalyzerConfig;
+    use crate::hw::presets;
+    use crate::ir::Tile;
+    use crate::profiler::SimProfiler;
+    use crate::sim::Simulator;
+    use crate::util::prop::{forall, prop_assert};
+
+    fn selector() -> Selector {
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 5));
+        let libs = vec![
+            compile(&hw, OpKind::Gemm, DType::F32, &cfg, &mut prof, &CompileOpts::default())
+                .library,
+            compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut prof, &CompileOpts::default())
+                .library,
+            compile(
+                &hw,
+                OpKind::BatchedGemm,
+                DType::F16,
+                &cfg,
+                &mut prof,
+                &CompileOpts::default(),
+            )
+            .library,
+        ];
+        Selector::new(hw, libs)
+    }
+
+    // Plan identity is `Selection::same_plan` — the single definition
+    // of "identical in every field except select_secs".
+    fn same_plan(a: &Selection, b: &Selection) -> bool {
+        a.same_plan(b)
+    }
+
+    #[test]
+    fn repeat_lookup_hits_and_matches_fresh() {
+        let s = selector();
+        let mut cache = PlanCache::for_selector(&s, 64);
+        let space = IterSpace::gemm(77, 2304, 768, DType::F16);
+        let fresh = s.select(space, HwMode::Adaptive).unwrap();
+        let miss = cache.select(&s, space, HwMode::Adaptive).unwrap();
+        let hit = cache.select(&s, space, HwMode::Adaptive).unwrap();
+        assert!(same_plan(&fresh, &miss));
+        assert!(same_plan(&fresh, &hit));
+        assert_eq!(cache.stats.hits, 1);
+        assert_eq!(cache.stats.misses, 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn nearby_shapes_share_a_padding_bucket() {
+        // Two shapes with equal launch grids under every L1 extent are
+        // ONE bucket: the second lookup is a hit even though the dims
+        // differ. The smallest M extent defines the finest granularity,
+        // so m and m+… within the same ceil-div cell coalesce.
+        let s = selector();
+        let mut cache = PlanCache::for_selector(&s, 64);
+        let m_extents: Vec<usize> = {
+            let mut v = Vec::new();
+            for lib in s.libraries.iter().filter(|l| l.op == OpKind::Gemm) {
+                for k in &lib.kernels {
+                    if !v.contains(&k.l1[0]) {
+                        v.push(k.l1[0]);
+                    }
+                }
+            }
+            v.sort_unstable();
+            v
+        };
+        let g = m_extents[0]; // finest quantum on the M axis
+        let lcm: usize = m_extents.iter().fold(1, |l, &e| l * e / gcd(l, e));
+        // m = lcm and m = lcm - g + 1 round up identically under every
+        // extent (both land in the top cell of each extent's grid).
+        let a = IterSpace::gemm(lcm, 768, 768, DType::F16);
+        let b = IterSpace::gemm(lcm - g + 1, 768, 768, DType::F16);
+        let _ = cache.select(&s, a, HwMode::Adaptive).unwrap();
+        let hit = cache.select(&s, b, HwMode::Adaptive).unwrap();
+        assert_eq!(cache.stats.hits, 1, "padding bucket did not coalesce");
+        let fresh = s.select(b, HwMode::Adaptive).unwrap();
+        assert!(same_plan(&fresh, &hit));
+    }
+
+    fn gcd(a: usize, b: usize) -> usize {
+        if b == 0 {
+            a
+        } else {
+            gcd(b, a % b)
+        }
+    }
+
+    #[test]
+    fn eviction_respects_capacity() {
+        let s = selector();
+        let mut cache = PlanCache::for_selector(&s, 4);
+        for m in 1..=64usize {
+            let space = IterSpace::gemm(m * 128, 768, 768, DType::F16);
+            let _ = cache.select(&s, space, HwMode::Adaptive);
+        }
+        assert!(cache.len() <= 4);
+        assert!(cache.stats.evictions > 0);
+        // An evicted bucket re-misses but still matches fresh selection.
+        let space = IterSpace::gemm(128, 768, 768, DType::F16);
+        let again = cache.select(&s, space, HwMode::Adaptive).unwrap();
+        let fresh = s.select(space, HwMode::Adaptive).unwrap();
+        assert!(same_plan(&fresh, &again));
+    }
+
+    #[test]
+    fn unservable_space_passes_through_as_none() {
+        let s = selector();
+        let mut cache = PlanCache::for_selector(&s, 16);
+        // Conv2d aliases to Gemm (served); a conv space works...
+        let conv = IterSpace {
+            op: OpKind::Conv2d,
+            dims: Tile::from3([1352, 128, 576]),
+            dtype: DType::F16,
+        };
+        assert!(cache.select(&s, conv, HwMode::Adaptive).is_some());
+        // ...while a mode with no matching backend kernels yields None
+        // from both the cache and fresh selection.
+        let none = cache.select(&s, conv, HwMode::Only("no_such_backend"));
+        assert!(none.is_none());
+        assert!(s.select(conv, HwMode::Only("no_such_backend")).is_none());
+    }
+
+    #[test]
+    fn prop_cached_dispatch_equals_fresh_selection() {
+        // Satellite: across random shapes, ops and modes, the cached
+        // plan is bit-identical to fresh selection (everything except
+        // the wall-clock select_secs) — on misses AND on hits.
+        let s = selector();
+        let mut cache = PlanCache::for_selector(&s, 256);
+        let ops = [
+            OpKind::Gemm,
+            OpKind::Conv2d,
+            OpKind::BatchedGemm,
+            OpKind::GroupedConv2d,
+            OpKind::FusedAttention,
+        ];
+        let modes = [
+            HwMode::Adaptive,
+            HwMode::Only("cuda_core_f32"),
+            HwMode::Only("tensor_core_f16"),
+        ];
+        // Some (op, mode) combos are legitimately unservable (e.g. a
+        // batched space under a mode whose only backend the batched
+        // library lacks) — both paths must agree on None there too.
+        let mut servable = 0usize;
+        forall(
+            "plan-cache-equals-fresh",
+            120,
+            0xCAC4E,
+            |r, size| {
+                let op = ops[r.usize(0, ops.len() - 1)];
+                let rank = op.spec().rank();
+                let mut dims = vec![0usize; rank];
+                // leading batch axes stay small, contraction axes wide
+                for (i, d) in dims.iter_mut().enumerate() {
+                    *d = if rank == 4 && i == 0 {
+                        r.usize(1, 48)
+                    } else {
+                        r.usize(1, 1 + 48 * size)
+                    };
+                }
+                let dtype = if r.usize(0, 1) == 0 { DType::F16 } else { DType::F32 };
+                let mode = modes[r.usize(0, modes.len() - 1)];
+                (op, dims, dtype, mode)
+            },
+            |(op, dims, dtype, mode)| {
+                let space = IterSpace { op: *op, dims: Tile::new(dims), dtype: *dtype };
+                let fresh = s.select(space, *mode);
+                // First pass (miss or hit, depending on earlier cases).
+                let c1 = cache.select(&s, space, *mode);
+                // Second pass is a guaranteed hit when servable.
+                let c2 = cache.select(&s, space, *mode);
+                match (&fresh, &c1, &c2) {
+                    (None, None, None) => Ok(()),
+                    (Some(f), Some(a), Some(b)) => {
+                        servable += 1;
+                        prop_assert(
+                            same_plan(f, a) && same_plan(f, b),
+                            format!("cached plan diverged for {:?}: {:?} vs {:?}", space, f, a),
+                        )
+                    }
+                    _ => Err(format!("cache servability diverged for {:?}", space)),
+                }
+            },
+        );
+        assert!(servable > 0, "property exercised no servable case");
+        assert!(
+            cache.stats.hits >= servable as u64,
+            "every servable case's second pass must hit: {} hits / {} servable",
+            cache.stats.hits,
+            servable
+        );
+    }
+}

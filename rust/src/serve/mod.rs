@@ -1,0 +1,587 @@
+//! Production serving subsystem: multi-op request lanes over a shared
+//! admission queue, with a bucketed plan cache for O(1) amortized
+//! dispatch — the online half of the paper, productionized.
+//!
+//! The paper's motivation (§2.1) is a serving system whose batch sizes
+//! and sequence lengths change per request; the end-to-end framing of
+//! SoD² and Relax (PAPERS.md) is the same system serving *many
+//! operators* at once. This module generalizes the single-op
+//! discrete-event loop of [`crate::coordinator::server`] into:
+//!
+//! * **Request lanes** ([`LaneClass`]): requests carry full
+//!   [`TensorProgram`]s; each op class gets its own lane with its own
+//!   [`LaneConfig`] batching policy. A lane merges *compatible*
+//!   requests (equal [`merge_key`]) along the op's natural batch axis
+//!   — token rows along M for GEMM, the leading batch dim for batched
+//!   GEMM and the conv family, and the head-group batch (padding to
+//!   the longest sequence) for attention chains.
+//! * **Plan cache** ([`PlanCache`]): per-batch shape→kernel selection
+//!   is memoized into padded-tile buckets, so steady-state dispatch is
+//!   a hash lookup; the cached plan is guaranteed identical to fresh
+//!   selection (see `serve/cache.rs`).
+//! * **Scenario + telemetry**: [`scenario`] generates mixed traffic
+//!   (BERT-style token streams interleaved with vision bursts);
+//!   [`MixedStats`] reports per-lane latency percentiles, scheduling
+//!   fraction and cache hit rates. The `serve` bench
+//!   (`bench::exp_serve`) emits `BENCH_serve.json`.
+//!
+//! The old GEMM-only API (`coordinator::server::serve_trace`)
+//! delegates to a one-lane instance of [`serve_mixed_trace`].
+
+pub mod cache;
+pub mod scenario;
+
+pub use cache::{CacheStats, PlanCache};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::select::{HwMode, Selection, Selector};
+use crate::ir::{IterSpace, TensorProgram};
+use crate::sim::Simulator;
+
+/// One serving request: a full tensor program plus its arrival time
+/// (seconds from trace start).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub program: TensorProgram,
+    pub arrive: f64,
+}
+
+/// Request lane classes: one discrete-event executor per class. The
+/// conv family (`Conv2d`, grouped/depthwise included) shares one lane
+/// — both merge along the image batch dim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LaneClass {
+    Gemm,
+    BatchedGemm,
+    Conv,
+    Attention,
+}
+
+impl LaneClass {
+    pub const ALL: [LaneClass; 4] = [
+        LaneClass::Gemm,
+        LaneClass::BatchedGemm,
+        LaneClass::Conv,
+        LaneClass::Attention,
+    ];
+
+    /// The lane a program is admitted to.
+    pub fn of(p: &TensorProgram) -> LaneClass {
+        match p {
+            TensorProgram::Gemm { .. } => LaneClass::Gemm,
+            TensorProgram::BatchedGemm { .. } => LaneClass::BatchedGemm,
+            TensorProgram::Conv2d { .. } => LaneClass::Conv,
+            TensorProgram::Attention { .. } => LaneClass::Attention,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LaneClass::Gemm => "gemm",
+            LaneClass::BatchedGemm => "batched_gemm",
+            LaneClass::Conv => "conv",
+            LaneClass::Attention => "attention",
+        }
+    }
+
+    /// Index into [`ServeConfig::lanes`].
+    pub fn index(self) -> usize {
+        match self {
+            LaneClass::Gemm => 0,
+            LaneClass::BatchedGemm => 1,
+            LaneClass::Conv => 2,
+            LaneClass::Attention => 3,
+        }
+    }
+}
+
+/// Batching policy of one lane (the per-lane half of the old
+/// `ServerConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneConfig {
+    pub max_batch: usize,
+    /// Max time the batcher waits after the first queued request.
+    pub batch_window: f64,
+    pub mode: HwMode,
+}
+
+impl Default for LaneConfig {
+    fn default() -> Self {
+        LaneConfig { max_batch: 8, batch_window: 2e-3, mode: HwMode::Adaptive }
+    }
+}
+
+/// Full serving configuration: one [`LaneConfig`] per lane class plus
+/// the plan-cache capacity (`None` disables caching — every batch
+/// runs fresh selection, the baseline the `serve` bench compares
+/// against).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub lanes: [LaneConfig; 4],
+    pub plan_cache: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { lanes: [LaneConfig::default(); 4], plan_cache: Some(1024) }
+    }
+}
+
+impl ServeConfig {
+    pub fn lane(&self, class: LaneClass) -> &LaneConfig {
+        &self.lanes[class.index()]
+    }
+
+    pub fn lane_mut(&mut self, class: LaneClass) -> &mut LaneConfig {
+        &mut self.lanes[class.index()]
+    }
+
+    /// The cache-disabled twin of this config (baseline runs).
+    pub fn without_cache(&self) -> ServeConfig {
+        ServeConfig { plan_cache: None, ..self.clone() }
+    }
+}
+
+/// Two requests batch together iff their merge keys are equal: the key
+/// is the program with its merge axis zeroed (token rows M for GEMM,
+/// the batch dim for batched GEMM and conv, batch AND seq for
+/// attention — attention batches pad shorter sequences to the longest,
+/// so any two chains with equal (d, heads, dtype) are compatible).
+pub fn merge_key(p: &TensorProgram) -> TensorProgram {
+    let mut key = p.clone();
+    match &mut key {
+        TensorProgram::Gemm { m, .. } => *m = 0,
+        TensorProgram::BatchedGemm { b, .. } => *b = 0,
+        TensorProgram::Conv2d { n, .. } => *n = 0,
+        TensorProgram::Attention { batch, seq, .. } => {
+            *batch = 0;
+            *seq = 0;
+        }
+    }
+    key
+}
+
+/// Merge a batch of key-compatible programs into the one program the
+/// lane executes: sum the merge axis; attention pads to the longest
+/// sequence in the batch.
+fn merge_programs(programs: &[&TensorProgram]) -> TensorProgram {
+    let mut merged = programs[0].clone();
+    for &p in &programs[1..] {
+        match (&mut merged, p) {
+            (TensorProgram::Gemm { m, .. }, TensorProgram::Gemm { m: m2, .. }) => *m += m2,
+            (
+                TensorProgram::BatchedGemm { b, .. },
+                TensorProgram::BatchedGemm { b: b2, .. },
+            ) => *b += b2,
+            (TensorProgram::Conv2d { n, .. }, TensorProgram::Conv2d { n: n2, .. }) => {
+                *n += n2
+            }
+            (
+                TensorProgram::Attention { batch, seq, .. },
+                TensorProgram::Attention { batch: b2, seq: s2, .. },
+            ) => {
+                *batch += b2;
+                *seq = (*seq).max(*s2);
+            }
+            _ => unreachable!("merge across incompatible programs"),
+        }
+    }
+    merged
+}
+
+/// The merged dynamic-axis extent (token rows / batch elements) a
+/// program contributes — the lane-throughput unit.
+fn dynamic_units(p: &TensorProgram) -> usize {
+    match *p {
+        TensorProgram::Gemm { m, .. } => m,
+        TensorProgram::BatchedGemm { b, .. } => b,
+        TensorProgram::Conv2d { n, .. } => n,
+        TensorProgram::Attention { batch, .. } => batch,
+    }
+}
+
+/// Execution backend of the serving loop, operator-generic.
+pub trait LaneEngine {
+    /// Run the selected kernel on the merged space; return the service
+    /// time in seconds.
+    fn execute(&mut self, space: IterSpace, sel: &Selection, selector: &Selector) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+/// Simulator-backed engine. A space served through a measurement-alias
+/// library dispatches one alias block strategy per constituent kernel
+/// (mirrors `bench::harness::Engine::time_space`).
+pub struct SimLaneEngine {
+    pub sim: Simulator,
+}
+
+impl LaneEngine for SimLaneEngine {
+    fn execute(&mut self, space: IterSpace, sel: &Selection, selector: &Selector) -> f64 {
+        let lib = &selector.libraries[sel.lib];
+        let mult = if lib.op == space.op {
+            1.0
+        } else {
+            space.op.spec().chain_kernels() as f64
+        };
+        self.sim.execute(lib.dtype, &selector.chain(sel)) * mult
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+/// Per-request serving record (one per admitted request).
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub lane: LaneClass,
+    /// Event-clock latency (queueing + modeled scheduling + service) —
+    /// deterministic under replay; see [`SCHED_OVERHEAD_SECS`].
+    pub latency: f64,
+    pub batch_size: usize,
+    /// True when the batch's plan came from the cache.
+    pub cache_hit: bool,
+    /// The constructed plan the request's batch executed.
+    pub selection: Selection,
+}
+
+/// Per-lane telemetry.
+#[derive(Debug, Clone)]
+pub struct LaneStats {
+    pub class: LaneClass,
+    pub metrics: Metrics,
+    pub batches: usize,
+    /// Σ merged dynamic-axis extents over the lane's batches.
+    pub total_units: usize,
+}
+
+/// Full mixed-trace serving result.
+#[derive(Debug, Clone, Default)]
+pub struct MixedStats {
+    pub lanes: Vec<LaneStats>,
+    /// All outcomes, sorted by request id.
+    pub outcomes: Vec<RequestOutcome>,
+    pub cache: CacheStats,
+    /// Max lane span (lanes run as concurrent executors).
+    pub span_secs: f64,
+}
+
+impl MixedStats {
+    pub fn count(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    pub fn total_sched_secs(&self) -> f64 {
+        self.lanes.iter().map(|l| l.metrics.total_sched_secs()).sum()
+    }
+
+    pub fn total_exec_secs(&self) -> f64 {
+        self.lanes.iter().map(|l| l.metrics.total_exec_secs()).sum()
+    }
+
+    /// Aggregate scheduling share across lanes (Fig. 14 style).
+    pub fn sched_fraction(&self) -> f64 {
+        let (s, e) = (self.total_sched_secs(), self.total_exec_secs());
+        if s + e == 0.0 {
+            0.0
+        } else {
+            s / (s + e)
+        }
+    }
+
+    /// Aggregate (p50, p95, p99) request latency across lanes —
+    /// same index formula as the per-lane [`Metrics`] percentiles.
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let mut lat: Vec<f64> = self.outcomes.iter().map(|o| o.latency).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            Metrics::pct(&lat, 0.5),
+            Metrics::pct(&lat, 0.95),
+            Metrics::pct(&lat, 0.99),
+        )
+    }
+}
+
+/// Modeled per-batch scheduling overhead charged on the event clock
+/// (the paper's Fig. 14 scale on the A100 host; `bench::harness`
+/// imports this constant). The clock deliberately does NOT advance by
+/// this machine's wall-clock selection time: mixing wall time into
+/// simulated seconds would double-count hardware differences AND make
+/// replay non-deterministic (batch membership would depend on
+/// selection jitter). The MEASURED selection/lookup wall-clock is
+/// recorded in [`Metrics`] as the scheduling component instead —
+/// that is the number the plan cache shrinks.
+pub const SCHED_OVERHEAD_SECS: f64 = 2e-6;
+
+/// Deterministic discrete-event serving loop over a mixed multi-op
+/// trace. Requests must be sorted by arrival time; each lane runs the
+/// same size/window batching policy as the old single-op loop, over
+/// merge-key-compatible requests, and all lanes share one plan cache.
+/// Replay is deterministic: the event clock advances by launch +
+/// [`SCHED_OVERHEAD_SECS`] + service only.
+pub fn serve_mixed_trace(
+    engine: &mut dyn LaneEngine,
+    selector: &Selector,
+    cfg: &ServeConfig,
+    requests: &[ServeRequest],
+) -> MixedStats {
+    debug_assert!(requests.windows(2).all(|w| w[0].arrive <= w[1].arrive));
+    let mut plan_cache = cfg.plan_cache.map(|cap| PlanCache::for_selector(selector, cap));
+    let mut stats = MixedStats::default();
+    for class in LaneClass::ALL {
+        let lane_reqs: Vec<&ServeRequest> = requests
+            .iter()
+            .filter(|r| LaneClass::of(&r.program) == class)
+            .collect();
+        if lane_reqs.is_empty() {
+            continue;
+        }
+        let lane = serve_lane(
+            engine,
+            selector,
+            cfg.lane(class),
+            class,
+            &lane_reqs,
+            plan_cache.as_mut(),
+            &mut stats.outcomes,
+        );
+        stats.span_secs = stats.span_secs.max(lane.metrics.span_secs);
+        stats.lanes.push(lane);
+    }
+    stats.outcomes.sort_by_key(|o| o.id);
+    stats.cache = plan_cache.map(|c| c.stats).unwrap_or_default();
+    stats
+}
+
+/// One lane's discrete-event loop: the old `serve_trace` core,
+/// generalized to merge-key batching. Incompatible requests never
+/// merge — they stay queued and the next batch forms from the earliest
+/// pending request.
+fn serve_lane(
+    engine: &mut dyn LaneEngine,
+    selector: &Selector,
+    cfg: &LaneConfig,
+    class: LaneClass,
+    requests: &[&ServeRequest],
+    mut plan_cache: Option<&mut PlanCache>,
+    outcomes: &mut Vec<RequestOutcome>,
+) -> LaneStats {
+    let mut metrics = Metrics::default();
+    let mut batches = 0usize;
+    let mut total_units = 0usize;
+    let mut clock = 0.0f64;
+    let mut served = vec![false; requests.len()];
+    let mut pending = requests.len();
+    let mut next = 0usize;
+    while next < requests.len() {
+        // Server becomes free at `clock`; the next batch forms from the
+        // earliest pending request and its merge-key-compatible peers.
+        let first = requests[next];
+        let key = merge_key(&first.program);
+        let open = clock.max(first.arrive);
+        let close = open + cfg.batch_window;
+        let mut batch = vec![next];
+        for (j, r) in requests.iter().enumerate().skip(next + 1) {
+            if batch.len() >= cfg.max_batch || r.arrive > close {
+                break;
+            }
+            if !served[j] && merge_key(&r.program) == key {
+                batch.push(j);
+            }
+        }
+        // Batch launch time: when the window closes or the batch fills,
+        // but never before the server is free — identical to the old
+        // single-op rule.
+        let last_arrive = requests[*batch.last().unwrap()].arrive;
+        // Unserved requests outside this batch (every unserved index is
+        // >= next, so the counter is exact) — O(1), not a trace rescan.
+        let more_pending = pending > batch.len();
+        let launch = if batch.len() == cfg.max_batch || !more_pending {
+            last_arrive.max(open)
+        } else {
+            close
+        };
+
+        let programs: Vec<&TensorProgram> =
+            batch.iter().map(|&j| &requests[j].program).collect();
+        let merged = merge_programs(&programs);
+        let space = merged.space();
+        let (sel, cache_hit) = match plan_cache.as_deref_mut() {
+            Some(c) => {
+                let hits0 = c.stats.hits;
+                let sel = c
+                    .select(selector, space, cfg.mode)
+                    .expect("selector must handle any shape (sample-free)");
+                (sel, c.stats.hits > hits0)
+            }
+            None => (
+                selector
+                    .select(space, cfg.mode)
+                    .expect("selector must handle any shape (sample-free)"),
+                false,
+            ),
+        };
+        let service = engine.execute(space, &sel, selector);
+        let done = launch + SCHED_OVERHEAD_SECS + service;
+        let bsz = batch.len();
+        let merged_flops = space.flops();
+        let own: Vec<f64> = programs.iter().map(|p| p.flops()).collect();
+        let own_sum: f64 = own.iter().sum();
+        for (bi, &j) in batch.iter().enumerate() {
+            let r = requests[j];
+            let latency = done - r.arrive;
+            metrics.record(
+                latency,
+                sel.select_secs / bsz as f64,
+                service / bsz as f64,
+                merged_flops * own[bi] / own_sum,
+            );
+            outcomes.push(RequestOutcome {
+                id: r.id,
+                lane: class,
+                latency,
+                batch_size: bsz,
+                cache_hit,
+                selection: sel.clone(),
+            });
+            served[j] = true;
+        }
+        batches += 1;
+        total_units += dynamic_units(&merged);
+        pending -= bsz;
+        clock = done;
+        while next < requests.len() && served[next] {
+            next += 1;
+        }
+    }
+    metrics.span_secs = clock;
+    LaneStats { class, metrics, batches, total_units }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+    use crate::ir::DType;
+
+    fn gemm(m: usize) -> TensorProgram {
+        TensorProgram::Gemm { m, n: 768, k: 768, dtype: DType::F32 }
+    }
+
+    fn conv(n: usize) -> TensorProgram {
+        TensorProgram::conv2d((n, 28, 28, 64), (3, 3, 128), (1, 1, 1), DType::F32).unwrap()
+    }
+
+    fn attn(batch: usize, seq: usize) -> TensorProgram {
+        TensorProgram::attention((batch, seq), (768, 12), DType::F32).unwrap()
+    }
+
+    fn selector() -> Selector {
+        scenario::demo_selector(5)
+    }
+
+    #[test]
+    fn merge_keys_partition_by_shape_family() {
+        assert_eq!(merge_key(&gemm(1)), merge_key(&gemm(400)));
+        assert_ne!(
+            merge_key(&gemm(1)),
+            merge_key(&TensorProgram::Gemm { m: 1, n: 768, k: 1024, dtype: DType::F32 })
+        );
+        assert_eq!(merge_key(&conv(1)), merge_key(&conv(32)));
+        // Attention merges across BOTH batch and sequence (padding).
+        assert_eq!(merge_key(&attn(1, 77)), merge_key(&attn(4, 476)));
+        assert_ne!(
+            merge_key(&attn(1, 77)),
+            merge_key(&TensorProgram::attention((1, 77), (1024, 16), DType::F32).unwrap())
+        );
+    }
+
+    #[test]
+    fn merged_programs_sum_the_merge_axis() {
+        let g = merge_programs(&[&gemm(3), &gemm(5), &gemm(7)]);
+        assert_eq!(g, gemm(15));
+        let c = merge_programs(&[&conv(2), &conv(6)]);
+        assert_eq!(c, conv(8));
+        let a = merge_programs(&[&attn(1, 77), &attn(2, 128), &attn(1, 64)]);
+        assert_eq!(a, attn(4, 128)); // batch summed, seq padded to max
+        assert!(a.validate().is_ok());
+    }
+
+    #[test]
+    fn mixed_trace_serves_every_lane_once() {
+        let s = selector();
+        let mut requests = Vec::new();
+        for i in 0..30u64 {
+            let program = match i % 3 {
+                0 => gemm(16 + i as usize),
+                1 => conv(1 + (i as usize % 4)),
+                _ => attn(1, 64),
+            };
+            requests.push(ServeRequest { id: i, program, arrive: 1e-4 * i as f64 });
+        }
+        let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let stats = serve_mixed_trace(&mut engine, &s, &ServeConfig::default(), &requests);
+        assert_eq!(stats.count(), 30);
+        let ids: Vec<u64> = stats.outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(ids, (0..30).collect::<Vec<_>>());
+        // Three lanes active (gemm, conv, attention), none lost.
+        assert_eq!(stats.lanes.len(), 3);
+        assert!(stats.span_secs > 0.0);
+        let (p50, p95, p99) = stats.latency_percentiles();
+        assert!(p50 <= p95 && p95 <= p99);
+    }
+
+    #[test]
+    fn incompatible_requests_never_merge() {
+        let s = selector();
+        // Two interleaved gemm widths arriving simultaneously: batches
+        // must be key-pure, so each batch's size stays within its own
+        // key's population.
+        let wide = |m: usize| TensorProgram::Gemm { m, n: 1024, k: 768, dtype: DType::F32 };
+        let mut requests = Vec::new();
+        for i in 0..16u64 {
+            let program = if i % 2 == 0 { gemm(8) } else { wide(8) };
+            requests.push(ServeRequest { id: i, program, arrive: 1e-6 * i as f64 });
+        }
+        let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let stats = serve_mixed_trace(&mut engine, &s, &ServeConfig::default(), &requests);
+        assert_eq!(stats.count(), 16);
+        // All 16 share the gemm lane; a merged batch of mixed keys
+        // would produce a single 16-deep batch, key-purity caps it at 8.
+        assert!(stats.outcomes.iter().all(|o| o.batch_size <= 8));
+        let lane = &stats.lanes[0];
+        assert!(lane.batches >= 2);
+    }
+
+    #[test]
+    fn cache_disabled_and_enabled_pick_identical_plans() {
+        let s = selector();
+        let requests: Vec<ServeRequest> = (0..24u64)
+            .map(|i| ServeRequest {
+                id: i,
+                program: attn(1, 64 + 64 * (i as usize % 3)),
+                arrive: 2e-4 * i as f64,
+            })
+            .collect();
+        let cfg = ServeConfig::default();
+        let mut e1 = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let cached = serve_mixed_trace(&mut e1, &s, &cfg, &requests);
+        let mut e2 = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let fresh = serve_mixed_trace(&mut e2, &s, &cfg.without_cache(), &requests);
+        assert!(cached.cache.hits > 0);
+        assert_eq!(fresh.cache.lookups(), 0);
+        for (a, b) in cached.outcomes.iter().zip(&fresh.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.batch_size, b.batch_size);
+            assert!(
+                a.selection.same_plan(&b.selection),
+                "plan diverged for request {}: {:?} vs {:?}",
+                a.id,
+                a.selection,
+                b.selection
+            );
+        }
+    }
+}

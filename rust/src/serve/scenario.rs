@@ -1,0 +1,174 @@
+//! Mixed-traffic scenario generator: BERT-style token traffic
+//! interleaved with ResNet/MobileNet vision bursts, with every request
+//! template drawn from the model zoo ([`crate::models::request_ops`]).
+//!
+//! Production streams are not uniform random: token traffic clusters
+//! at a few context buckets (the paper's BERT evaluation sweeps a
+//! fixed seq-length grid), and vision requests arrive in camera-batch
+//! bursts of near-simultaneous frames with fixed geometry. That
+//! clustering is exactly what the bucketed plan cache exploits —
+//! merged batch shapes recur, so steady-state dispatch is a hash
+//! lookup. The generator is deterministic from its seed.
+
+use crate::compiler::{compile, CompileOpts};
+use crate::coordinator::Selector;
+use crate::cost::hybrid::AnalyzerConfig;
+use crate::hw::presets;
+use crate::ir::{DType, OpKind, TensorProgram};
+use crate::models::{self, Model};
+use crate::profiler::SimProfiler;
+use crate::serve::{LaneClass, LaneConfig, ServeConfig, ServeRequest};
+use crate::sim::Simulator;
+use crate::util::rng::Rng;
+
+/// Token context buckets the language streams draw from.
+const SEQ_BUCKETS: [usize; 3] = [64, 128, 256];
+
+/// Generate a mixed multi-op request trace: ~40% BERT QKV token GEMMs,
+/// ~30% BERT attention chains (both at context-bucket sequence
+/// lengths), ~30% vision bursts — ResNet stem convolutions and
+/// MobileNet depthwise blocks, 2–4 near-simultaneous frames per burst
+/// at camera batch 1–2. Arrivals are Poisson-ish with the given mean
+/// gap; the trace is sorted by arrival and ids are assigned in arrival
+/// order.
+pub fn mixed_trace(
+    n_requests: usize,
+    mean_interarrival: f64,
+    seed: u64,
+    dtype: DType,
+) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(seed);
+    // Request templates from the model zoo: per context bucket the
+    // BERT [QKV, attention] pair; per camera batch the ResNet stem and
+    // the MobileNet depthwise block.
+    let lm: Vec<Vec<TensorProgram>> = SEQ_BUCKETS
+        .iter()
+        .map(|&seq| models::request_ops(Model::Bert, seq, dtype))
+        .collect();
+    let vision: Vec<[TensorProgram; 2]> = (1..=2usize)
+        .map(|b| {
+            let resnet = models::request_ops(Model::ResNet50, b, dtype);
+            let mobile = models::request_ops(Model::MobileNet, b, dtype);
+            [resnet[0].clone(), mobile[1].clone()]
+        })
+        .collect();
+
+    let mut t = 0.0f64;
+    let mut out: Vec<ServeRequest> = Vec::with_capacity(n_requests);
+    while out.len() < n_requests {
+        t += rng.exp(mean_interarrival);
+        let roll = rng.f64();
+        if roll < 0.7 {
+            // Token traffic: QKV projection or attention chain at a
+            // context-bucket sequence length.
+            let bucket = rng.usize(0, SEQ_BUCKETS.len() - 1);
+            let which = usize::from(roll >= 0.4);
+            out.push(ServeRequest {
+                id: out.len() as u64,
+                program: lm[bucket][which].clone(),
+                arrive: t,
+            });
+        } else {
+            // Vision burst: a few camera frames land almost together.
+            let kind = usize::from(roll >= 0.9); // 0 = ResNet, 1 = depthwise
+            let frames = rng.usize(2, 4);
+            for _ in 0..frames {
+                if out.len() >= n_requests {
+                    break;
+                }
+                t += rng.exp(mean_interarrival / 8.0);
+                let batch = rng.usize(1, 2);
+                out.push(ServeRequest {
+                    id: out.len() as u64,
+                    program: vision[batch - 1][kind].clone(),
+                    arrive: t,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The selector the mixed scenario is served with — ONE definition
+/// shared by the `serve` bench, the `vortex serve --mixed` CLI, the
+/// `mixed_serving` example and the acceptance tests, so their library
+/// sets can never drift apart: a GEMM F32 library (serves conv via
+/// implicit GEMM) plus a batched-GEMM F32 library (serves grouped conv
+/// and attention chains via the measurement-alias fixpoint), compiled
+/// offline on the simulated A100.
+pub fn demo_selector(seed: u64) -> Selector {
+    let hw = presets::a100();
+    let cfg = AnalyzerConfig::default_for(&hw);
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+    let libs = vec![
+        compile(&hw, OpKind::Gemm, DType::F32, &cfg, &mut prof, &CompileOpts::default())
+            .library,
+        compile(
+            &hw,
+            OpKind::BatchedGemm,
+            DType::F32,
+            &cfg,
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library,
+    ];
+    Selector::new(hw, libs)
+}
+
+/// The lane configuration the mixed scenario is served with: modest
+/// per-lane batch caps (merged shapes stay within the recurring bucket
+/// set) under the default 2 ms batching window.
+pub fn serving_config() -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    for class in LaneClass::ALL {
+        *cfg.lane_mut(class) = LaneConfig { max_batch: 4, ..LaneConfig::default() };
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::OpKind;
+    use std::collections::HashSet;
+
+    #[test]
+    fn trace_is_sorted_valid_and_mixed() {
+        let trace = mixed_trace(300, 4e-4, 9, DType::F32);
+        assert_eq!(trace.len(), 300);
+        assert!(trace.windows(2).all(|w| w[0].arrive <= w[1].arrive));
+        let ids: Vec<u64> = trace.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..300).collect::<Vec<_>>());
+        let mut kinds: HashSet<OpKind> = HashSet::new();
+        for r in &trace {
+            assert!(r.program.validate().is_ok(), "{}", r.program.id());
+            kinds.insert(r.program.space().op);
+        }
+        // Token GEMMs, attention chains, strided convs and depthwise
+        // (grouped) convs — at least 3 distinct op kinds guaranteed.
+        assert!(kinds.len() >= 3, "only {:?}", kinds);
+    }
+
+    #[test]
+    fn trace_is_deterministic_from_seed() {
+        let a = mixed_trace(100, 4e-4, 7, DType::F32);
+        let b = mixed_trace(100, 4e-4, 7, DType::F32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.program, y.program);
+            assert_eq!(x.arrive, y.arrive);
+        }
+        let c = mixed_trace(100, 4e-4, 8, DType::F32);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.program != y.program));
+    }
+
+    #[test]
+    fn serving_config_caps_every_lane() {
+        let cfg = serving_config();
+        for class in LaneClass::ALL {
+            assert_eq!(cfg.lane(class).max_batch, 4);
+        }
+        assert!(cfg.plan_cache.is_some());
+    }
+}
