@@ -1,7 +1,8 @@
 //! Multi-op serving demo: BERT token traffic interleaved with vision
-//! bursts, served through the `serve::` request lanes with the
-//! bucketed plan cache — then the same trace with the cache disabled,
-//! to show identical plans at a fraction of the scheduling cost.
+//! bursts, served three ways over the same trace — the compile-time
+//! dispatch table (zero warm-up), the bucketed plan cache (one fresh
+//! scan per bucket), and fresh per-batch selection — to show identical
+//! plans at a fraction of the scheduling cost.
 //!
 //! Run with: cargo run --release --example mixed_serving \
 //!             [--requests 600] [--mean-gap-us 400] [--seed 7]
@@ -29,6 +30,13 @@ fn main() {
     let serve_cfg = scenario::serving_config();
 
     let mut engine = SimLaneEngine { sim: Simulator::new(hw.clone(), seed) };
+    let table = serve_mixed_trace(
+        &mut engine,
+        &selector,
+        &serve_cfg.with_dispatch(scenario::dispatch_config()),
+        &trace,
+    );
+    let mut engine = SimLaneEngine { sim: Simulator::new(hw.clone(), seed) };
     let cached = serve_mixed_trace(&mut engine, &selector, &serve_cfg, &trace);
     let mut engine = SimLaneEngine { sim: Simulator::new(hw, seed) };
     let fresh = serve_mixed_trace(&mut engine, &selector, &serve_cfg.without_cache(), &trace);
@@ -49,6 +57,18 @@ fn main() {
             p99 * 1e3,
         );
     }
+    let build = table.dispatch_build.clone().unwrap_or_default();
+    println!(
+        "dispatch table: {} table / {} cache / {} fresh — warm-start {:.1}% \
+         ({} cells merged from {}, built offline in {:.1} ms)",
+        table.dispatch.table,
+        table.dispatch.cache,
+        table.dispatch.fresh,
+        100.0 * table.dispatch.warm_start_rate(),
+        build.cells,
+        build.cells_enumerated,
+        build.build_secs * 1e3,
+    );
     println!(
         "plan cache: hit rate {:.1}% overall, {:.1}% after warmup ({} buckets missed)",
         100.0 * cached.cache.hit_rate(),
@@ -56,13 +76,13 @@ fn main() {
         cached.cache.misses,
     );
     println!(
-        "scheduling seconds: {:.2e} cached vs {:.2e} fresh ({:.1}x less)",
+        "scheduling seconds: {:.2e} table vs {:.2e} cached vs {:.2e} fresh",
+        table.total_sched_secs(),
         cached.total_sched_secs(),
         fresh.total_sched_secs(),
-        fresh.total_sched_secs() / cached.total_sched_secs().max(1e-12),
     );
     println!(
         "identical per-request selections: {}",
-        identical_selections(&cached, &fresh),
+        identical_selections(&table, &fresh) && identical_selections(&cached, &fresh),
     );
 }

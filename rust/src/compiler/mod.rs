@@ -77,6 +77,15 @@ pub struct MicroKernelLibrary {
     pub dtype: DType,
     pub analyzer: AnalyzerConfig,
     pub kernels: Vec<MicroKernel>,
+    /// Precomputed shape-space dispatch tables shipped with the
+    /// library (schema v3, [`crate::dispatch`]): built by
+    /// `vortex compile --dispatch` for the single-library selector of
+    /// this library, fingerprinted against it. Empty for v1/v2 files
+    /// and libraries compiled without `--dispatch`; adoption at load
+    /// time goes through [`crate::dispatch::DispatchTable::from_data`]
+    /// which refuses fingerprint mismatches (a multi-library serving
+    /// selector rebuilds its own table instead).
+    pub dispatch: Vec<crate::dispatch::TableData>,
 }
 
 /// Offline statistics (paper §7.4 offline-overhead analysis).
@@ -422,6 +431,7 @@ pub fn compile(
             dtype,
             analyzer: cfg.clone(),
             kernels,
+            dispatch: Vec::new(),
         },
         candidates_total,
         chains_analyzed: chains,
@@ -492,6 +502,9 @@ impl MicroKernelLibrary {
                     base_cost: k.base_cost,
                 })
                 .collect(),
+            // Any embedded dispatch tables were fingerprinted against
+            // the UNLIFTED library; they do not carry over.
+            dispatch: Vec::new(),
         })
     }
 }
@@ -501,7 +514,13 @@ impl MicroKernelLibrary {
 // ---------------------------------------------------------------------------
 
 /// Current library schema version. v1 (implicit) had no "version"/"op"
-/// fields and was GEMM-only; v2 adds both.
+/// fields and was GEMM-only; v2 adds both; v3 adds the optional
+/// `"dispatch"` field — precomputed shape-space dispatch tables
+/// ([`crate::dispatch::TableData`]) fingerprinted against the
+/// single-library selector they were built for. v1 and v2 files still
+/// load (with no tables); a v3 file whose `"dispatch"` payload is
+/// malformed is rejected outright, like every other strict-loader
+/// failure.
 ///
 /// Valid `"op"` strings are exactly the [`OpKind::parse`] names:
 /// `"gemm"`, `"batched_gemm"`, `"conv2d"`, `"grouped_conv2d"` and
@@ -514,14 +533,14 @@ impl MicroKernelLibrary {
 /// libraries via the measurement-alias fixpoint (one alias block per
 /// constituent kernel), so a deployment that only ever compiled
 /// batched-GEMM libraries still executes attention chains.
-pub const LIBRARY_SCHEMA_VERSION: usize = 2;
+pub const LIBRARY_SCHEMA_VERSION: usize = 3;
 
 impl MicroKernelLibrary {
     pub fn to_json(&self) -> Json {
         let tile = |t: Tile| {
             Json::arr(t.iter().map(|&x| Json::num(x as f64)).collect())
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("version", Json::num(LIBRARY_SCHEMA_VERSION as f64)),
             ("hw", Json::str(self.hw_name.clone())),
             ("op", Json::str(self.op.name())),
@@ -543,7 +562,14 @@ impl MicroKernelLibrary {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if !self.dispatch.is_empty() {
+            fields.push((
+                "dispatch",
+                Json::arr(self.dispatch.iter().map(|d| d.to_json()).collect()),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Strict loader: unknown schema versions, unknown ops, unknown
@@ -586,12 +612,24 @@ impl MicroKernelLibrary {
                 })
             })
             .collect::<Option<Vec<_>>>()?;
+        // v3: optional embedded dispatch tables. Absent (v1/v2 or no
+        // --dispatch compile) means none; present-but-malformed is a
+        // load error, not a silent drop.
+        let dispatch = match v.get("dispatch") {
+            None => Vec::new(),
+            Some(d) => d
+                .as_arr()?
+                .iter()
+                .map(crate::dispatch::TableData::from_json)
+                .collect::<Option<Vec<_>>>()?,
+        };
         Some(MicroKernelLibrary {
             hw_name: v.get("hw")?.as_str()?.to_string(),
             op,
             dtype: DType::parse(v.get("dtype")?.as_str()?)?,
             analyzer,
             kernels,
+            dispatch,
         })
     }
 }
@@ -731,6 +769,45 @@ mod tests {
     }
 
     #[test]
+    fn schema_v3_dispatch_round_trips_and_legacy_v2_loads() {
+        use crate::coordinator::{HwMode, Selector};
+        use crate::dispatch::{DispatchConfig, DispatchTable};
+        use crate::ir::IterSpace;
+        let hw = presets::a100();
+        let r = compile_tc();
+        let mut lib = r.library.clone();
+        let selector = Selector::new(hw.clone(), vec![lib.clone()]);
+        let table = DispatchTable::for_selector(&selector, &DispatchConfig::default());
+        lib.dispatch = table.to_data(&selector);
+        assert!(!lib.dispatch.is_empty());
+        let text = lib.to_json().dump();
+        assert!(text.contains("\"version\":3"));
+        assert!(text.contains("\"dispatch\""));
+        let loaded = MicroKernelLibrary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(loaded.kernels, lib.kernels);
+        assert_eq!(loaded.dispatch, lib.dispatch);
+        // Adoption: a selector over the loaded library accepts the
+        // shipped tables (same fingerprint) and answers identically to
+        // fresh selection — the zero-warm-up deployment path.
+        let s2 = Selector::new(hw, vec![loaded.clone()]);
+        let adopted =
+            DispatchTable::from_data(&s2, &loaded.dispatch).expect("fingerprint must match");
+        let space = IterSpace::gemm(33, 100, 77, DType::F16);
+        let a = adopted.select(&s2, space, HwMode::Adaptive).expect("in-horizon");
+        let fresh = s2.select(space, HwMode::Adaptive).unwrap();
+        assert!(fresh.same_plan(&a));
+        // A v2 file (no dispatch field) still loads...
+        let v2 = r.library.to_json().dump().replace("\"version\":3", "\"version\":2");
+        let lib_v2 = MicroKernelLibrary::from_json(&Json::parse(&v2).unwrap()).unwrap();
+        assert!(lib_v2.dispatch.is_empty());
+        assert_eq!(lib_v2.kernels, r.library.kernels);
+        // ...while a malformed dispatch payload is a LOAD error (strict
+        // loader), not a silent drop.
+        let bad = text.replace("\"fingerprint\":\"", "\"fingerprint\":\"zz");
+        assert!(MicroKernelLibrary::from_json(&Json::parse(&bad).unwrap()).is_none());
+    }
+
+    #[test]
     fn legacy_v1_gemm_json_still_loads() {
         // A pre-versioning library file: no "version", no "op".
         let text = r#"{"analyzer":"E: L0, L1","dtype":"f16","hw":"a100",
@@ -752,7 +829,7 @@ mod tests {
             MicroKernelLibrary::from_json(&Json::parse(&bad1).unwrap()).is_none()
         );
         // unknown schema version
-        let bad2 = ok.replace("\"version\":2", "\"version\":99");
+        let bad2 = ok.replace("\"version\":3", "\"version\":99");
         assert!(
             MicroKernelLibrary::from_json(&Json::parse(&bad2).unwrap()).is_none()
         );

@@ -1,0 +1,1134 @@
+//! Offline shape-space partitioning: compile-time dispatch tables that
+//! replace per-request selection scans (the sample-free endgame of the
+//! paper's runtime stage).
+//!
+//! Vortex's headline claim is that the shape→kernel decision is a pure
+//! function of hardware structure — nothing about it needs to be
+//! *discovered* at serve time. The serving layer's plan cache
+//! ([`crate::serve::PlanCache`]) already proved the key fact: the
+//! selection argmin depends on the runtime shape ONLY through the
+//! per-axis launch grids `ceil(dim / extent)` under the serving op's
+//! distinct L1 extents. This module turns that observation from a
+//! memoization key into an *enumeration*: at compile time, each axis
+//! is partitioned into intervals whose boundaries are the L1-extent
+//! multiples up to a configurable horizon, the winning `(lib, kernel)`
+//! is recorded per cell of the resulting lattice, and adjacent
+//! intervals whose winner hyperplanes coincide are merged back into
+//! regions. The shipped [`DispatchTable`] then answers any in-horizon
+//! runtime shape in `O(axes · log intervals)` — zero warm-up, no cold
+//! misses, and **provably identical plans to fresh selection**.
+//!
+//! ## Soundness
+//!
+//! Within one cell, every candidate kernel sees the same launch grid
+//! (the cell boundaries include every multiple of every distinct L1
+//! extent on the axis, so no kernel's `ceil(dim / l1)` can change
+//! inside it), hence the same padded problem, traffic terms, launch
+//! count and estimate — the argmin is constant, and it is computed
+//! with the *same* [`FastKernel` arithmetic and tie-break
+//! order](crate::coordinator::Selector::select_plan) the online scan
+//! uses, including the alias-chain scaling (`chain_kernels()`), so a
+//! table answer is bit-identical to a fresh scan. Alias-served ops
+//! (Conv2d → Gemm, GroupedConv2d / FusedAttention → BatchedGemm) route
+//! through the same [`Selector::serving_op`] fixpoint: there is no
+//! side path. Region merging only coalesces intervals whose recorded
+//! winner slices are equal, and a lookup reconstructs the `Selection`
+//! from `(kernel, actual dims)` — never from a representative — so
+//! padded shape, grid and estimate stay exact after merging.
+//!
+//! ## Horizon fallback
+//!
+//! Shapes with any dim beyond the effective horizon return `None` from
+//! [`DispatchTable::select`]; the serving layer demotes the PR 4 plan
+//! cache to exactly this beyond-horizon tail (tri-state accounting:
+//! table / cache / fresh). A cell budget ([`DispatchConfig::max_cells`])
+//! bounds table construction: when the requested horizons would exceed
+//! it, the widest axis is halved until the lattice fits (recorded as
+//! `clamped` in [`BuildStats`]), trading coverage — never correctness.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::coordinator::select::{HwMode, Selection, Selector};
+use crate::ir::{ceil_div, AxisRole, IterSpace, OpKind, Tile};
+use crate::util::json::Json;
+use crate::util::rng::hash_key;
+
+/// Offline partitioning configuration: how far out each axis is
+/// enumerated before the live-selection fallback takes over.
+#[derive(Debug, Clone)]
+pub struct DispatchConfig {
+    /// Default per-axis horizon for spatial / reduction axes.
+    pub horizon: usize,
+    /// Default horizon for batch-role axes (batched GEMM batch, conv
+    /// groups, attention head groups) — typically far smaller than the
+    /// spatial extents.
+    pub batch_horizon: usize,
+    /// Per-op horizon overrides (full per-axis vectors, rank-matched):
+    /// the deployment's advertised shape envelope.
+    pub per_op: Vec<(OpKind, Vec<usize>)>,
+    /// Requested ops to enumerate tables for; empty means every op in
+    /// [`OpKind::ALL`].
+    pub ops: Vec<OpKind>,
+    /// Backend modes to enumerate tables for.
+    pub modes: Vec<HwMode>,
+    /// Per-table cell budget: horizons are halved (widest axis first)
+    /// until the lattice fits. Bounds offline build time and table
+    /// size, never correctness.
+    pub max_cells: usize,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        DispatchConfig {
+            horizon: 256,
+            batch_horizon: 32,
+            per_op: Vec::new(),
+            ops: Vec::new(),
+            modes: vec![HwMode::Adaptive],
+            max_cells: 1 << 20,
+        }
+    }
+}
+
+impl DispatchConfig {
+    /// The configured horizon vector for one op (override or
+    /// role-derived defaults). Panics on a rank-mismatched override —
+    /// a config bug must fail loudly, not truncate axes.
+    pub fn horizons_for(&self, op: OpKind) -> Vec<usize> {
+        if let Some((_, h)) = self.per_op.iter().find(|(o, _)| *o == op) {
+            assert_eq!(
+                h.len(),
+                op.spec().rank(),
+                "horizon override for {} must have one entry per axis",
+                op
+            );
+            return h.clone();
+        }
+        op.spec()
+            .axes()
+            .iter()
+            .map(|a| {
+                if a.role == AxisRole::Batch {
+                    self.batch_horizon
+                } else {
+                    self.horizon
+                }
+            })
+            .collect()
+    }
+
+    /// Builder-style per-op horizon override. Panics unless `horizons`
+    /// has exactly one entry per axis of `op`'s iteration space.
+    pub fn with_op_horizons(mut self, op: OpKind, horizons: &[usize]) -> Self {
+        assert_eq!(
+            horizons.len(),
+            op.spec().rank(),
+            "horizon override for {} must have one entry per axis",
+            op
+        );
+        self.per_op.retain(|(o, _)| *o != op);
+        self.per_op.push((op, horizons.to_vec()));
+        self
+    }
+}
+
+/// One (requested op, mode) table: per-axis interval upper edges and
+/// the row-major winner lattice (indices into the selector's fast
+/// path, so reconstruction shares the scan's exact arithmetic).
+#[derive(Debug, Clone)]
+struct OpTable {
+    op: OpKind,
+    mode: HwMode,
+    /// Per-axis strictly-increasing interval upper edges (inclusive);
+    /// `edges[a].last()` is the effective horizon of axis `a`.
+    edges: Vec<Vec<usize>>,
+    /// Row-major winners (axis 0 outermost): index into
+    /// `Selector::fast`.
+    winners: Vec<u32>,
+    clamped: bool,
+}
+
+/// Offline build statistics.
+#[derive(Debug, Clone, Default)]
+pub struct BuildStats {
+    /// (op, mode) tables built (ops with no servable kernels skipped).
+    pub tables: usize,
+    /// Lattice cells enumerated before region merging.
+    pub cells_enumerated: usize,
+    /// Cells stored after region merging.
+    pub cells: usize,
+    /// Wall-clock of the whole build.
+    pub build_secs: f64,
+    /// True when any table's horizons were halved to fit `max_cells`.
+    pub clamped: bool,
+}
+
+/// The compile-time dispatch table: one [`OpTable`] per (requested op,
+/// mode) with at least one servable kernel. Like
+/// [`crate::serve::PlanCache`], a table is built FOR one selector —
+/// [`DispatchTable::fingerprint`] records that selector's identity and
+/// [`DispatchTable::from_data`] refuses to adopt serialized tables
+/// built for a different one.
+#[derive(Debug, Clone)]
+pub struct DispatchTable {
+    tables: Vec<OpTable>,
+    fingerprint: u64,
+    pub stats: BuildStats,
+}
+
+/// Fingerprint of everything a table answer depends on: the hardware
+/// spec contents (including the per-launch overhead) and every loaded
+/// library's identity — op, dtype, kernel tiles, backends and base
+/// costs, in load order (the scan's tie-break order).
+pub fn selector_fingerprint(selector: &Selector) -> u64 {
+    let hw = &selector.hw;
+    let mut parts: Vec<u64> = vec![hw.launch_overhead_secs.to_bits()];
+    for l in &hw.levels {
+        parts.push(l.capacity_bytes);
+        parts.push(l.load_bw_gbps.to_bits());
+        parts.push(l.unit_count as u64);
+    }
+    for b in &hw.backends {
+        parts.push(b.peak_gflops.to_bits());
+        parts.extend(b.isa.iter().map(|&x| x as u64));
+        parts.push(b.dtype_bytes as u64);
+        parts.push(b.launch_factor.to_bits());
+    }
+    parts.push(hw.is_real_testbed() as u64);
+    for lib in &selector.libraries {
+        parts.push(lib.op as u64);
+        parts.push(lib.dtype as u64);
+        for k in &lib.kernels {
+            parts.extend(k.l0.dims().iter().map(|&d| d as u64));
+            parts.extend(k.l1.dims().iter().map(|&d| d as u64));
+            parts.push(k.backend as u64);
+            parts.push(k.base_cost.to_bits());
+        }
+    }
+    hash_key(&parts)
+}
+
+/// Interval upper edges of one axis: every multiple of every distinct
+/// L1 extent below the horizon, plus the horizon itself. Between two
+/// consecutive edges no kernel's `ceil(dim / extent)` can change, so
+/// the selection argmin is constant per interval (see module docs).
+fn axis_edges(extents: &[usize], horizon: usize) -> Vec<usize> {
+    let mut edges: Vec<usize> = Vec::new();
+    for &e in extents {
+        let mut m = e;
+        while m < horizon {
+            edges.push(m);
+            m += e;
+        }
+    }
+    edges.push(horizon.max(1));
+    edges.sort_unstable();
+    edges.dedup();
+    edges
+}
+
+/// Per-kernel evaluation grid: the kernel's chain-scaled estimates at
+/// every distinct launch grid the table lattice can produce, plus the
+/// per-axis map from table interval to estimate index contribution.
+struct KernelGrid {
+    /// Index into `Selector::fast` (the tie-break identity).
+    fast_idx: u32,
+    /// `contrib[a][i]` = (kernel-grid position of table interval `i`
+    /// on axis `a`) × (kernel-lattice stride of axis `a`).
+    contrib: Vec<Vec<usize>>,
+    /// Row-major chain-scaled estimates over the kernel's own lattice.
+    est: Vec<f64>,
+}
+
+fn build_kernel_grid(
+    selector: &Selector,
+    fast_idx: usize,
+    edges: &[Vec<usize>],
+    chain: f64,
+) -> KernelGrid {
+    let fk = &selector.fast[fast_idx];
+    let rank = edges.len();
+    // Distinct kernel-grid coordinates per axis (non-decreasing over
+    // the sorted edges) and each interval's position among them.
+    let mut gvals: Vec<Vec<usize>> = Vec::with_capacity(rank);
+    let mut pos: Vec<Vec<usize>> = Vec::with_capacity(rank);
+    for a in 0..rank {
+        let mut g: Vec<usize> = Vec::new();
+        let mut p = Vec::with_capacity(edges[a].len());
+        for &d in &edges[a] {
+            let gv = ceil_div(d, fk.l1[a]);
+            if g.last() != Some(&gv) {
+                g.push(gv);
+            }
+            p.push(g.len() - 1);
+        }
+        gvals.push(g);
+        pos.push(p);
+    }
+    let mut kstride = vec![1usize; rank];
+    for a in (0..rank - 1).rev() {
+        kstride[a] = kstride[a + 1] * gvals[a + 1].len();
+    }
+    let kcells: usize = gvals.iter().map(Vec::len).product();
+    let mut est = vec![0f64; kcells];
+    let mut digits = vec![0usize; rank];
+    for e in est.iter_mut() {
+        let mut dims = Tile::ones(rank);
+        for a in 0..rank {
+            // A representative shape with exactly this launch grid:
+            // the padded problem itself.
+            dims[a] = gvals[a][digits[a]] * fk.l1[a];
+        }
+        *e = fk.estimate(dims).0 * chain;
+        for a in (0..rank).rev() {
+            digits[a] += 1;
+            if digits[a] < gvals[a].len() {
+                break;
+            }
+            digits[a] = 0;
+        }
+    }
+    let contrib: Vec<Vec<usize>> = (0..rank)
+        .map(|a| pos[a].iter().map(|&p| p * kstride[a]).collect())
+        .collect();
+    KernelGrid { fast_idx: fast_idx as u32, contrib, est }
+}
+
+/// Below this lattice size one kernel's whole cell pass is cheaper
+/// than spawning a thread scope for it.
+const PARALLEL_CELL_THRESHOLD: usize = 1 << 14;
+
+/// Stream one kernel over a contiguous range of table cells starting
+/// at flat index `start`: decode the start into per-axis digits, then
+/// advance an odometer, updating the running argmin (`best`/`winners`)
+/// with a strict `<` so the first kernel keeps ties. Shared by the
+/// sequential and per-chunk-threaded build paths.
+fn cell_pass(
+    kg: &KernelGrid,
+    edges: &[Vec<usize>],
+    stride: &[usize],
+    start: usize,
+    best: &mut [f64],
+    winners: &mut [u32],
+) {
+    let rank = edges.len();
+    let mut digits = vec![0usize; rank];
+    let mut rem = start;
+    for a in 0..rank {
+        digits[a] = rem / stride[a];
+        rem %= stride[a];
+    }
+    let mut kidx: usize = (0..rank).map(|a| kg.contrib[a][digits[a]]).sum();
+    for (b, w) in best.iter_mut().zip(winners.iter_mut()) {
+        let secs = kg.est[kidx];
+        if secs < *b {
+            *b = secs;
+            *w = kg.fast_idx;
+        }
+        for a in (0..rank).rev() {
+            let old = kg.contrib[a][digits[a]];
+            digits[a] += 1;
+            if digits[a] < edges[a].len() {
+                kidx = kidx - old + kg.contrib[a][digits[a]];
+                break;
+            }
+            digits[a] = 0;
+            kidx = kidx - old + kg.contrib[a][0];
+        }
+    }
+}
+
+/// Enumerate the winner lattice for one (op, mode): for every cell,
+/// the first strict argmin over the eligible kernels in fast-path
+/// order — the same comparison, order and chain scaling as
+/// [`Selector::select_plan`].
+fn build_op_table(
+    selector: &Selector,
+    op: OpKind,
+    mode: HwMode,
+    cfg: &DispatchConfig,
+) -> Option<(OpTable, usize)> {
+    let serving = selector.serving_op(op);
+    let chain = selector.chain_factor(op);
+    let eligible: Vec<usize> = (0..selector.fast.len())
+        .filter(|&i| {
+            selector.fast[i].op == serving && selector.mode_admits(&selector.fast[i], mode)
+        })
+        .collect();
+    if eligible.is_empty() {
+        return None;
+    }
+    let rank = op.spec().rank();
+    let mut horizons = cfg.horizons_for(op);
+    debug_assert_eq!(horizons.len(), rank);
+    let mut extents: Vec<Vec<usize>> = vec![Vec::new(); rank];
+    for &i in &eligible {
+        let l1 = selector.fast[i].l1;
+        for (a, ex) in extents.iter_mut().enumerate() {
+            if !ex.contains(&l1[a]) {
+                ex.push(l1[a]);
+            }
+        }
+    }
+    let mut edges: Vec<Vec<usize>> = extents
+        .iter()
+        .zip(&horizons)
+        .map(|(ex, &h)| axis_edges(ex, h))
+        .collect();
+    // Cell budget: halve the widest axis until the lattice fits.
+    let mut clamped = false;
+    loop {
+        let cells: usize = edges.iter().map(Vec::len).product();
+        if cells <= cfg.max_cells.max(1) {
+            break;
+        }
+        let widest = (0..rank).max_by_key(|&a| edges[a].len()).unwrap();
+        if horizons[widest] <= 1 {
+            break; // every axis already minimal
+        }
+        horizons[widest] = (horizons[widest] / 2).max(1);
+        edges[widest] = axis_edges(&extents[widest], horizons[widest]);
+        clamped = true;
+    }
+    let n_cells: usize = edges.iter().map(Vec::len).product();
+    let mut stride = vec![1usize; rank];
+    for a in (0..rank - 1).rev() {
+        stride[a] = stride[a + 1] * edges[a + 1].len();
+    }
+
+    let mut best = vec![f64::INFINITY; n_cells];
+    let mut winners = vec![0u32; n_cells];
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 16);
+    let chunk = n_cells.div_ceil(threads).max(1);
+    // Kernel-outer streaming: ONE kernel's evaluation grid is alive at
+    // a time (its lattice is at most the table lattice, so peak memory
+    // is O(n_cells), never O(n_cells × kernels)), and each kernel's
+    // cell pass fans out across threads over disjoint winner chunks —
+    // but only when the lattice is big enough to amortize the spawns
+    // (small tables would otherwise pay a scope per kernel for ns of
+    // compare work). Kernels run in fast-path order with a strict `<`
+    // update, so the per-cell result is the first strict argmin —
+    // exactly `select_plan`'s tie-break.
+    let parallel = threads > 1 && n_cells >= PARALLEL_CELL_THRESHOLD;
+    for &fi in &eligible {
+        let kg = build_kernel_grid(selector, fi, &edges, chain);
+        if !parallel {
+            cell_pass(&kg, &edges, &stride, 0, &mut best, &mut winners);
+            continue;
+        }
+        std::thread::scope(|s| {
+            let kg = &kg;
+            let edges = &edges;
+            let stride = &stride;
+            let handles: Vec<_> = best
+                .chunks_mut(chunk)
+                .zip(winners.chunks_mut(chunk))
+                .enumerate()
+                .map(|(ci, (bc, wc))| {
+                    s.spawn(move || cell_pass(kg, edges, stride, ci * chunk, bc, wc))
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    let mut table = OpTable { op, mode, edges, winners, clamped };
+    merge_regions(&mut table);
+    Some((table, n_cells))
+}
+
+/// Region merging: collapse adjacent intervals whose winner
+/// hyperplanes are identical, per axis, to a fixpoint. Lookups are
+/// unchanged — a merged interval's winner is the winner of every cell
+/// it covers — while storage shrinks to the argmin's actual region
+/// structure.
+fn merge_regions(t: &mut OpTable) {
+    loop {
+        let mut changed = false;
+        for axis in 0..t.edges.len() {
+            changed |= merge_axis(t, axis);
+        }
+        if !changed {
+            break;
+        }
+    }
+}
+
+fn merge_axis(t: &mut OpTable, axis: usize) -> bool {
+    let dims: Vec<usize> = t.edges.iter().map(Vec::len).collect();
+    let n = dims[axis];
+    if n <= 1 {
+        return false;
+    }
+    // Row-major: `block` cells per interval of `axis` within one outer
+    // block; `super_stride` cells per full sweep of the axis.
+    let block: usize = dims[axis + 1..].iter().product();
+    let super_stride = block * n;
+    let outers = t.winners.len() / super_stride;
+    let same = |i: usize, j: usize| -> bool {
+        (0..outers).all(|o| {
+            let bi = o * super_stride + i * block;
+            let bj = o * super_stride + j * block;
+            t.winners[bi..bi + block] == t.winners[bj..bj + block]
+        })
+    };
+    // Runs of identical consecutive slices become one region keeping
+    // the run's LAST upper edge.
+    let mut reps: Vec<usize> = Vec::new();
+    let mut new_edges: Vec<usize> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let rep = i;
+        let mut j = i + 1;
+        while j < n && same(j, rep) {
+            j += 1;
+        }
+        reps.push(rep);
+        new_edges.push(t.edges[axis][j - 1]);
+        i = j;
+    }
+    if reps.len() == n {
+        return false;
+    }
+    let mut new_winners = Vec::with_capacity(outers * reps.len() * block);
+    for o in 0..outers {
+        for &r in &reps {
+            let b = o * super_stride + r * block;
+            new_winners.extend_from_slice(&t.winners[b..b + block]);
+        }
+    }
+    t.winners = new_winners;
+    t.edges[axis] = new_edges;
+    true
+}
+
+impl DispatchTable {
+    /// Build the full dispatch table for one selector: every op in
+    /// [`OpKind::ALL`] × every configured mode with at least one
+    /// servable kernel (through the measurement-alias fixpoint).
+    pub fn for_selector(selector: &Selector, cfg: &DispatchConfig) -> DispatchTable {
+        let t0 = Instant::now();
+        let mut tables = Vec::new();
+        let mut stats = BuildStats::default();
+        let ops: Vec<OpKind> = if cfg.ops.is_empty() {
+            OpKind::ALL.to_vec()
+        } else {
+            cfg.ops.clone()
+        };
+        for op in ops {
+            for &mode in &cfg.modes {
+                if let Some((t, enumerated)) = build_op_table(selector, op, mode, cfg) {
+                    stats.tables += 1;
+                    stats.cells_enumerated += enumerated;
+                    stats.cells += t.winners.len();
+                    stats.clamped |= t.clamped;
+                    tables.push(t);
+                }
+            }
+        }
+        stats.build_secs = t0.elapsed().as_secs_f64();
+        DispatchTable { tables, fingerprint: selector_fingerprint(selector), stats }
+    }
+
+    /// The selector identity this table was built for.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// True when this table was built for (a selector identical to)
+    /// `selector` — the precondition of [`DispatchTable::select`].
+    pub fn matches(&self, selector: &Selector) -> bool {
+        self.fingerprint == selector_fingerprint(selector)
+    }
+
+    fn table_for(&self, op: OpKind, mode: HwMode) -> Option<&OpTable> {
+        self.tables.iter().find(|t| t.op == op && t.mode == mode)
+    }
+
+    /// True when the table answers this (space, mode): a table exists
+    /// for the op and every dim is within the effective horizon.
+    pub fn covers(&self, space: IterSpace, mode: HwMode) -> bool {
+        match self.table_for(space.op, mode) {
+            None => false,
+            Some(t) => space
+                .dims
+                .dims()
+                .iter()
+                .zip(&t.edges)
+                .all(|(&d, e)| d <= *e.last().unwrap()),
+        }
+    }
+
+    /// Effective per-axis horizons of one (op, mode) table, if built.
+    pub fn horizons(&self, op: OpKind, mode: HwMode) -> Option<Vec<usize>> {
+        self.table_for(op, mode)
+            .map(|t| t.edges.iter().map(|e| *e.last().unwrap()).collect())
+    }
+
+    /// Compile-time dispatch: `O(axes · log intervals)` interval
+    /// lookup plus ONE kernel evaluation at the actual dims — returns
+    /// a plan identical to `selector.select(space, mode)` in every
+    /// field except `select_secs` (which reports the lookup
+    /// wall-clock). `None` when the space is beyond the horizon or no
+    /// table serves the (op, mode) — the caller falls back to live
+    /// selection.
+    pub fn select(
+        &self,
+        selector: &Selector,
+        space: IterSpace,
+        mode: HwMode,
+    ) -> Option<Selection> {
+        let t0 = Instant::now();
+        let t = self.table_for(space.op, mode)?;
+        debug_assert_eq!(t.edges.len(), space.dims.rank());
+        let mut flat = 0usize;
+        for (&d, e) in space.dims.dims().iter().zip(&t.edges) {
+            let idx = e.partition_point(|&edge| edge < d);
+            if idx == e.len() {
+                return None; // beyond the horizon: live-selection fallback
+            }
+            flat = flat * e.len() + idx;
+        }
+        let chain = selector.chain_factor(space.op);
+        let mut sel = selector.selection_from(t.winners[flat] as usize, space.dims, chain);
+        sel.select_secs = t0.elapsed().as_secs_f64();
+        Some(sel)
+    }
+
+    /// Serialize every table to the schema-v3 payload, keyed by the
+    /// build selector's fingerprint.
+    pub fn to_data(&self, selector: &Selector) -> Vec<TableData> {
+        self.tables
+            .iter()
+            .map(|t| {
+                let mut runs: Vec<(usize, usize, usize)> = Vec::new();
+                for &w in &t.winners {
+                    let fk = &selector.fast[w as usize];
+                    match runs.last_mut() {
+                        Some((n, lib, kernel)) if *lib == fk.lib && *kernel == fk.kernel => {
+                            *n += 1
+                        }
+                        _ => runs.push((1, fk.lib, fk.kernel)),
+                    }
+                }
+                let mode = mode_name(t.mode);
+                let digest = table_digest(t.op, &mode, &t.edges, &runs, t.clamped);
+                TableData {
+                    op: t.op,
+                    mode,
+                    edges: t.edges.clone(),
+                    runs,
+                    clamped: t.clamped,
+                    fingerprint: self.fingerprint,
+                    digest,
+                }
+            })
+            .collect()
+    }
+
+    /// Adopt serialized tables for `selector`. Returns `None` when the
+    /// fingerprint does not match the selector (tables built for a
+    /// different hardware spec or library set), when a mode names an
+    /// unknown backend, or when any lattice is malformed — never a
+    /// silently-wrong table.
+    pub fn from_data(selector: &Selector, data: &[TableData]) -> Option<DispatchTable> {
+        let fingerprint = selector_fingerprint(selector);
+        // (lib, kernel) → fast index.
+        let by_pair: HashMap<(usize, usize), u32> = selector
+            .fast
+            .iter()
+            .enumerate()
+            .map(|(i, fk)| ((fk.lib, fk.kernel), i as u32))
+            .collect();
+        let mut tables = Vec::with_capacity(data.len());
+        let mut stats = BuildStats::default();
+        for d in data {
+            if d.fingerprint != fingerprint {
+                return None;
+            }
+            // Content integrity: any corruption of edges / runs /
+            // clamped since `to_data` is refused, never served.
+            if d.digest != table_digest(d.op, &d.mode, &d.edges, &d.runs, d.clamped) {
+                return None;
+            }
+            let mode = parse_mode(&d.mode, selector)?;
+            if d.edges.len() != d.op.spec().rank() {
+                return None;
+            }
+            for e in &d.edges {
+                if e.is_empty() || e.windows(2).any(|w| w[0] >= w[1]) {
+                    return None;
+                }
+            }
+            // Checked product: adversarial edge arrays must not
+            // overflow (or allocate) their way past the strict loader.
+            let n_cells = d
+                .edges
+                .iter()
+                .try_fold(1usize, |acc, e| acc.checked_mul(e.len()))?;
+            let serving = selector.serving_op(d.op);
+            let mut winners = Vec::with_capacity(n_cells);
+            for &(n, lib, kernel) in &d.runs {
+                let fi = *by_pair.get(&(lib, kernel))?;
+                // Every winner must be a kernel the online scan could
+                // have picked for this (op, mode): right serving op
+                // (also pins the tile rank) and an admitted backend.
+                // The fingerprint pins the selector; this pins the
+                // payload — a tampered file is refused, never served.
+                let fk = &selector.fast[fi as usize];
+                if fk.op != serving || !selector.mode_admits(fk, mode) {
+                    return None;
+                }
+                // Bound each run BEFORE materializing it: a corrupt
+                // run length must fail, not OOM (subtraction order
+                // keeps the check overflow-proof for huge `n`).
+                if n == 0 || n > n_cells - winners.len() {
+                    return None;
+                }
+                winners.extend(std::iter::repeat_n(fi, n));
+            }
+            if winners.len() != n_cells {
+                return None;
+            }
+            stats.tables += 1;
+            stats.cells += n_cells;
+            stats.clamped |= d.clamped;
+            tables.push(OpTable {
+                op: d.op,
+                mode,
+                edges: d.edges.clone(),
+                winners,
+                clamped: d.clamped,
+            });
+        }
+        Some(DispatchTable { tables, fingerprint, stats })
+    }
+}
+
+fn mode_name(mode: HwMode) -> String {
+    match mode {
+        HwMode::Adaptive => "adaptive".to_string(),
+        HwMode::Only(name) => format!("only:{name}"),
+    }
+}
+
+/// Inverse of [`mode_name`], resolving backend names against the
+/// selector's hardware spec (whose names are `'static`).
+fn parse_mode(s: &str, selector: &Selector) -> Option<HwMode> {
+    if s == "adaptive" {
+        return Some(HwMode::Adaptive);
+    }
+    let name = s.strip_prefix("only:")?;
+    selector
+        .hw
+        .backends
+        .iter()
+        .find(|b| b.name == name)
+        .map(|b| HwMode::Only(b.name))
+}
+
+/// Pure serialized form of one (op, mode) table — the `"dispatch"`
+/// payload of the schema-v3 library JSON
+/// ([`crate::compiler::LIBRARY_SCHEMA_VERSION`]). Winners are stored
+/// as run-length-encoded `(count, lib, kernel)` triples over the
+/// row-major lattice; the fingerprint pins the selector the table was
+/// built for, and the digest pins THIS payload's contents (edges,
+/// winners, clamped flag) so a corrupted or hand-edited file is
+/// refused at adoption instead of silently serving shifted intervals.
+/// (An integrity check against accidents, not a cryptographic
+/// signature.)
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableData {
+    pub op: OpKind,
+    /// `"adaptive"` or `"only:<backend name>"`.
+    pub mode: String,
+    pub edges: Vec<Vec<usize>>,
+    pub runs: Vec<(usize, usize, usize)>,
+    /// True when the build clamped horizons to fit the cell budget —
+    /// carried through adoption so "unclamped ⟹ full envelope
+    /// coverage" reasoning survives serialization.
+    pub clamped: bool,
+    pub fingerprint: u64,
+    /// [`table_digest`] of (op, mode, edges, runs, clamped).
+    pub digest: u64,
+}
+
+/// Content digest of one serialized table (see [`TableData::digest`]).
+fn table_digest(
+    op: OpKind,
+    mode: &str,
+    edges: &[Vec<usize>],
+    runs: &[(usize, usize, usize)],
+    clamped: bool,
+) -> u64 {
+    let mut parts: Vec<u64> = vec![op as u64, clamped as u64];
+    parts.extend(mode.bytes().map(|b| b as u64));
+    for e in edges {
+        parts.push(u64::MAX); // axis separator
+        parts.extend(e.iter().map(|&x| x as u64));
+    }
+    for &(n, lib, kernel) in runs {
+        parts.push(n as u64);
+        parts.push(lib as u64);
+        parts.push(kernel as u64);
+    }
+    hash_key(&parts)
+}
+
+impl TableData {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str(self.op.name())),
+            ("mode", Json::str(self.mode.clone())),
+            ("clamped", Json::Bool(self.clamped)),
+            ("fingerprint", Json::str(format!("{:016x}", self.fingerprint))),
+            ("digest", Json::str(format!("{:016x}", self.digest))),
+            (
+                "edges",
+                Json::arr(
+                    self.edges
+                        .iter()
+                        .map(|e| {
+                            Json::arr(e.iter().map(|&x| Json::num(x as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "runs",
+                Json::arr(
+                    self.runs
+                        .iter()
+                        .map(|&(n, lib, kernel)| {
+                            Json::arr(vec![
+                                Json::num(n as f64),
+                                Json::num(lib as f64),
+                                Json::num(kernel as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Strict parse; `None` on any malformed field.
+    pub fn from_json(v: &Json) -> Option<TableData> {
+        let op = OpKind::parse(v.get("op")?.as_str()?)?;
+        let mode = v.get("mode")?.as_str()?.to_string();
+        let clamped = v.get("clamped")?.as_bool()?;
+        let fingerprint = u64::from_str_radix(v.get("fingerprint")?.as_str()?, 16).ok()?;
+        let digest = u64::from_str_radix(v.get("digest")?.as_str()?, 16).ok()?;
+        let edges = v
+            .get("edges")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                e.as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Option<Vec<usize>>>()
+            })
+            .collect::<Option<Vec<Vec<usize>>>>()?;
+        let runs = v
+            .get("runs")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                let a = r.as_arr()?;
+                if a.len() != 3 {
+                    return None;
+                }
+                Some((a[0].as_usize()?, a[1].as_usize()?, a[2].as_usize()?))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(TableData { op, mode, edges, runs, clamped, fingerprint, digest })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::cost::hybrid::AnalyzerConfig;
+    use crate::hw::presets;
+    use crate::ir::DType;
+    use crate::profiler::SimProfiler;
+    use crate::sim::Simulator;
+    use crate::util::prop::{forall, prop_assert};
+
+    fn selector(seed: u64) -> Selector {
+        let hw = presets::a100();
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+        let libs = vec![
+            compile(&hw, OpKind::Gemm, DType::F32, &cfg, &mut prof, &CompileOpts::default())
+                .library,
+            compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut prof, &CompileOpts::default())
+                .library,
+            compile(
+                &hw,
+                OpKind::BatchedGemm,
+                DType::F16,
+                &cfg,
+                &mut prof,
+                &CompileOpts::default(),
+            )
+            .library,
+        ];
+        Selector::new(hw, libs)
+    }
+
+    fn test_config() -> DispatchConfig {
+        DispatchConfig {
+            horizon: 96,
+            batch_horizon: 8,
+            modes: vec![
+                HwMode::Adaptive,
+                HwMode::Only("cuda_core_f32"),
+                HwMode::Only("tensor_core_f16"),
+            ],
+            max_cells: 1 << 17,
+            ..DispatchConfig::default()
+        }
+    }
+
+    #[test]
+    fn builds_tables_for_served_ops_only() {
+        let s = selector(5);
+        let t = DispatchTable::for_selector(&s, &test_config());
+        assert!(t.stats.tables > 0);
+        assert!(t.stats.cells > 0);
+        assert!(t.stats.cells <= t.stats.cells_enumerated);
+        // Gemm and its conv alias are servable under every mode;
+        // batched/grouped/attention only where the f16 batched library
+        // has backends.
+        assert!(t.horizons(OpKind::Gemm, HwMode::Adaptive).is_some());
+        assert!(t.horizons(OpKind::Conv2d, HwMode::Adaptive).is_some());
+        assert!(t.horizons(OpKind::FusedAttention, HwMode::Adaptive).is_some());
+        // The batched library is tensor-core f16: a cuda-core-only mode
+        // has no eligible kernels, so no table is built — and lookups
+        // fall through to fresh selection, which returns None too.
+        let batched = IterSpace::batched_gemm(2, 64, 64, 32, DType::F16);
+        if t.horizons(OpKind::BatchedGemm, HwMode::Only("cuda_core_f32")).is_none() {
+            assert!(t
+                .select(&s, batched, HwMode::Only("cuda_core_f32"))
+                .is_none());
+        }
+        assert!(t.matches(&s));
+    }
+
+    #[test]
+    fn prop_table_answers_equal_fresh_selection() {
+        // The acceptance property: across random shapes (within AND
+        // beyond the horizon), every op kind, both dtypes and all
+        // modes, a table answer is same_plan-identical to fresh
+        // Selector::select — and a table non-answer is exactly the
+        // beyond-horizon / unservable case.
+        let s = selector(5);
+        let cfg = test_config();
+        let table = DispatchTable::for_selector(&s, &cfg);
+        let modes = [
+            HwMode::Adaptive,
+            HwMode::Only("cuda_core_f32"),
+            HwMode::Only("tensor_core_f16"),
+        ];
+        let mut answered = 0usize;
+        let mut fallback = 0usize;
+        forall(
+            "dispatch-table-equals-fresh",
+            160,
+            0xD15B,
+            |r, size| {
+                let op = OpKind::ALL[r.usize(0, OpKind::ALL.len() - 1)];
+                let rank = op.spec().rank();
+                let mut dims = vec![0usize; rank];
+                for (i, d) in dims.iter_mut().enumerate() {
+                    // Half the draws stay near the horizon, half go
+                    // well beyond it.
+                    let cap = if rank == 4 && i == 0 { 24 } else { 80 * size.max(1) };
+                    *d = r.usize(1, cap.max(2));
+                }
+                let dtype = if r.usize(0, 1) == 0 { DType::F16 } else { DType::F32 };
+                let mode = modes[r.usize(0, modes.len() - 1)];
+                (op, dims, dtype, mode)
+            },
+            |(op, dims, dtype, mode)| {
+                let space = IterSpace { op: *op, dims: Tile::new(dims), dtype: *dtype };
+                let fresh = s.select(space, *mode);
+                match table.select(&s, space, *mode) {
+                    Some(t) => {
+                        answered += 1;
+                        match &fresh {
+                            Some(f) => prop_assert(
+                                f.same_plan(&t),
+                                format!("table diverged for {:?}: {:?} vs {:?}", space, f, t),
+                            ),
+                            None => Err(format!("table answered unservable {:?}", space)),
+                        }
+                    }
+                    None => {
+                        fallback += 1;
+                        prop_assert(
+                            !table.covers(space, *mode) || fresh.is_none(),
+                            format!("covered space {:?} got no table answer", space),
+                        )
+                    }
+                }
+            },
+        );
+        assert!(answered > 0, "property never exercised a table answer");
+        assert!(fallback > 0, "property never exercised the horizon fallback");
+    }
+
+    #[test]
+    fn exhaustive_equality_on_a_small_lattice() {
+        // Brute force every shape of a small envelope (plus the first
+        // beyond-horizon row) against fresh selection — no sampling
+        // gaps at interval boundaries.
+        let s = selector(7);
+        let cfg = DispatchConfig {
+            per_op: vec![(OpKind::Gemm, vec![48, 48, 48])],
+            ops: vec![OpKind::Gemm],
+            ..DispatchConfig::default()
+        };
+        let table = DispatchTable::for_selector(&s, &cfg);
+        for m in 1..=50usize {
+            for n in (1..=50usize).step_by(7) {
+                for k in (1..=50usize).step_by(11) {
+                    let space = IterSpace::gemm(m, n, k, DType::F32);
+                    let fresh = s.select(space, HwMode::Adaptive).unwrap();
+                    match table.select(&s, space, HwMode::Adaptive) {
+                        Some(t) => assert!(
+                            fresh.same_plan(&t),
+                            "diverged at {:?}: {:?} vs {:?}",
+                            (m, n, k),
+                            fresh,
+                            t
+                        ),
+                        None => assert!(
+                            m > 48 || n > 48 || k > 48,
+                            "in-horizon {:?} unanswered",
+                            (m, n, k)
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn region_merging_compresses_without_changing_answers() {
+        // A single-kernel library wins every cell, so the whole
+        // lattice provably merges to ONE region per table — while the
+        // merged table still reconstructs the exact per-shape plan
+        // (padded, grid, estimate) from the actual dims.
+        let hw = presets::a100();
+        let acfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 9));
+        let mut lib = compile(
+            &hw,
+            OpKind::Gemm,
+            DType::F32,
+            &acfg,
+            &mut prof,
+            &CompileOpts::default(),
+        )
+        .library;
+        lib.kernels.truncate(1);
+        let s = Selector::new(hw, vec![lib]);
+        let cfg = DispatchConfig {
+            per_op: vec![(OpKind::Gemm, vec![96, 96, 96]), (OpKind::Conv2d, vec![96, 96, 96])],
+            ..DispatchConfig::default()
+        };
+        let table = DispatchTable::for_selector(&s, &cfg);
+        // One cell per table after merging (Gemm + its Conv2d alias).
+        assert_eq!(table.stats.tables, 2);
+        assert_eq!(table.stats.cells, 2, "uniform winners must fully merge");
+        assert!(table.stats.cells_enumerated > 2);
+        for m in [1usize, 7, 16, 33, 48, 96] {
+            for n in [1usize, 24, 96] {
+                let space = IterSpace::gemm(m, n, 64, DType::F32);
+                let fresh = s.select(space, HwMode::Adaptive).unwrap();
+                let t = table.select(&s, space, HwMode::Adaptive).unwrap();
+                assert!(fresh.same_plan(&t), "merged table diverged at {:?}", (m, n));
+            }
+        }
+        // Distinct shapes still get distinct plans out of one region.
+        let a = table.select(&s, IterSpace::gemm(5, 40, 40, DType::F32), HwMode::Adaptive);
+        let b = table.select(&s, IterSpace::gemm(90, 40, 40, DType::F32), HwMode::Adaptive);
+        assert_ne!(a.unwrap().padded, b.unwrap().padded);
+    }
+
+    #[test]
+    fn cell_budget_clamps_horizons_soundly() {
+        let s = selector(5);
+        let cfg = DispatchConfig {
+            per_op: vec![(OpKind::Gemm, vec![4096, 4096, 4096])],
+            ops: vec![OpKind::Gemm],
+            max_cells: 512,
+            ..DispatchConfig::default()
+        };
+        let table = DispatchTable::for_selector(&s, &cfg);
+        assert!(table.stats.clamped, "huge horizons must clamp at 512 cells");
+        let h = table.horizons(OpKind::Gemm, HwMode::Adaptive).unwrap();
+        assert!(h.iter().any(|&x| x < 4096));
+        // Clamping trades coverage, never correctness.
+        for m in [1usize, 3, 9, 31] {
+            let space = IterSpace::gemm(m, 32, 32, DType::F32);
+            if let Some(t) = table.select(&s, space, HwMode::Adaptive) {
+                let fresh = s.select(space, HwMode::Adaptive).unwrap();
+                assert!(fresh.same_plan(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn serialization_round_trips_and_rejects_foreign_selectors() {
+        let s = selector(5);
+        let cfg = test_config();
+        let table = DispatchTable::for_selector(&s, &cfg);
+        let data = table.to_data(&s);
+        assert_eq!(data.len(), table.stats.tables);
+        // JSON round trip of every payload.
+        let parsed: Vec<TableData> = data
+            .iter()
+            .map(|d| TableData::from_json(&Json::parse(&d.to_json().dump()).unwrap()).unwrap())
+            .collect();
+        assert_eq!(parsed, data);
+        // Adoption by the SAME selector reproduces identical answers.
+        let adopted = DispatchTable::from_data(&s, &parsed).expect("adoption");
+        for (m, n, k) in [(1usize, 64usize, 64usize), (33, 100, 150), (160, 160, 160)] {
+            let space = IterSpace::gemm(m, n, k, DType::F16);
+            let a = adopted.select(&s, space, HwMode::Adaptive);
+            let b = table.select(&s, space, HwMode::Adaptive);
+            match (a, b) {
+                (None, None) => {}
+                (Some(x), Some(y)) => assert!(x.same_plan(&y)),
+                other => panic!("adoption diverged: {:?}", other),
+            }
+        }
+        // A selector with different base costs (different profiler
+        // seed) must refuse the tables.
+        let other = selector(6);
+        assert!(
+            DispatchTable::from_data(&other, &parsed).is_none(),
+            "foreign selector adopted a stale table"
+        );
+        // Tampering with an interval edge (fingerprint untouched) is
+        // caught by the content digest — never a silently-shifted
+        // lookup.
+        let mut tampered = parsed.clone();
+        tampered[0].edges[0][0] += 1;
+        assert!(
+            DispatchTable::from_data(&s, &tampered).is_none(),
+            "edge-tampered table adopted"
+        );
+    }
+}

@@ -70,6 +70,12 @@ pub struct HwSpec {
     /// level-1 unit (the paper's "1024 threads-per-block" constraint:
     /// 32 warps/CTA on A100).
     pub max_l0_per_l1: u32,
+    /// Per-launch overhead in seconds, before the backend's
+    /// `launch_factor` multiplier (measured on the real testbed;
+    /// simulator value on the paper testbeds). Owned by the preset —
+    /// like [`HwSpec::is_real_testbed`], callers must not re-derive
+    /// this from `name` string comparisons.
+    pub launch_overhead_secs: f64,
 }
 
 impl HwSpec {
@@ -129,6 +135,21 @@ mod tests {
                 assert!(b.isa.iter().all(|&g| g > 0));
             }
         }
+    }
+
+    #[test]
+    fn launch_overhead_is_a_preset_field() {
+        // The per-launch overhead lives in the spec (like
+        // `is_real_testbed`), not in scattered name matches: every
+        // preset declares a positive value, and the real single-core
+        // PJRT testbed pays more per dispatch than the GPU/CPU sims.
+        for spec in [presets::a100(), presets::xeon_8255c(), presets::cpu_pjrt()] {
+            assert!(spec.launch_overhead_secs > 0.0, "{}", spec.name);
+        }
+        assert!(
+            presets::cpu_pjrt().launch_overhead_secs
+                > presets::a100().launch_overhead_secs
+        );
     }
 
     #[test]

@@ -51,6 +51,7 @@ pub fn a100() -> HwSpec {
         ],
         min_util: 0.25,
         max_l0_per_l1: 32, // 1024 threads / 32-thread warps per CTA
+        launch_overhead_secs: 4e-6, // CUDA kernel-launch latency class
     }
 }
 
@@ -93,6 +94,7 @@ pub fn xeon_8255c() -> HwSpec {
         // L0 has no parallel binding on CPU (Table 1: "-"): register
         // blocking inside a thread is serial, so no concurrency cap.
         max_l0_per_l1: 4096,
+        launch_overhead_secs: 1e-6, // thread-pool dispatch, no driver
     }
 }
 
@@ -149,6 +151,9 @@ pub fn cpu_pjrt() -> HwSpec {
         ],
         min_util: 0.01,
         max_l0_per_l1: 4096, // single core: pallas grid steps are serial
+        // One PJRT executable invocation per block: client call +
+        // buffer hand-off dominates (measured order of magnitude).
+        launch_overhead_secs: 30e-6,
     }
 }
 

@@ -65,12 +65,23 @@
 //! attention, batch-dim merging for the conv family) with a bucketed
 //! plan cache ([`serve::PlanCache`]) that memoizes shape→kernel
 //! selection by padded-tile bucket — O(1) amortized dispatch with a
-//! guarantee that cached plans are identical to fresh selection. The
-//! "Serving layer" section of
-//! [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) covers the
-//! lanes, the bucket-key derivation and cache coherence with library
-//! reload; the `serve` bench and `vortex serve --mixed` exercise it
-//! end to end.
+//! guarantee that cached plans are identical to fresh selection.
+//!
+//! On top of the cache sits the offline **shape-space partitioner**
+//! ([`dispatch`]): at compile time each dynamic axis is partitioned at
+//! L1-extent multiples up to a configurable horizon and the winning
+//! kernel is enumerated per cell, yielding a
+//! [`dispatch::DispatchTable`] that answers any in-horizon shape in
+//! `O(axes · log intervals)` with zero warm-up and provably identical
+//! plans to fresh selection; the plan cache is demoted to the
+//! beyond-horizon fallback (tri-state table / cache / fresh stats).
+//! Tables ship inside schema-v3 library JSON
+//! ([`compiler::LIBRARY_SCHEMA_VERSION`]) via `vortex compile
+//! --dispatch`. The "Serving layer" and "Dispatch tables" sections of
+//! [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) cover the
+//! lanes, the bucket-key derivation, the region-soundness argument and
+//! cache coherence with library reload; the `serve` bench and `vortex
+//! serve --mixed [--dispatch]` exercise it end to end.
 
 pub mod baselines;
 pub mod bench;
@@ -78,6 +89,7 @@ pub mod candgen;
 pub mod compiler;
 pub mod coordinator;
 pub mod cost;
+pub mod dispatch;
 pub mod hw;
 pub mod ir;
 pub mod models;

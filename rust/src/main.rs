@@ -30,16 +30,23 @@ USAGE:
   vortex compile  [--testbed sim-a100|sim-xeon|real] [--dtype f32|f16|bf16]
                   [--op gemm|batched_gemm|conv2d|grouped_conv2d|attention]
                   [--analyzer default|analytical|e0|e1] [--cache-dir DIR]
+                  [--dispatch] [--horizon H] [--batch-horizon B]
                   [--dump-library PATH] [--emit-manifest PATH]
+                  (--dispatch: enumerate the shape-space dispatch table
+                   offline and embed it in the dumped library — schema
+                   v3 — so serving starts with zero warm-up.)
   vortex select   --m M --n N --k K [--b B(atch/groups/head-groups)] [--op ...]
                   [--testbed ...] [--dtype ...] [--mode adaptive|cuda|tensor]
   vortex run      --m M --n N --k K [--artifacts DIR] [--verify]
   vortex serve    [--requests N] [--mean-gap-us U] [--max-batch B]
-                  [--mixed] [--no-cache]
+                  [--mixed] [--no-cache] [--dispatch]
                   (--mixed: multi-op request lanes + bucketed plan cache
                    over a BERT-token + vision-burst trace; --no-cache
-                   disables plan memoization. `vortex --serve ...` is an
-                   alias for the subcommand.)
+                   disables plan memoization; --dispatch answers
+                   in-horizon shapes from the compile-time table and
+                   demotes the cache to the beyond-horizon fallback.
+                   `vortex --serve ...` is an alias for the
+                   subcommand.)
   vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|ops|serve|all>
                   [--out results/] [--seed S] [--full]
   vortex info
@@ -124,7 +131,23 @@ fn cmd_compile(args: &Args) {
             opts.aot_fingerprint = m.fingerprint();
         }
     }
-    let r = compile(&hw, op, dtype, &cfg, &mut prof, &opts);
+    let mut r = compile(&hw, op, dtype, &cfg, &mut prof, &opts);
+    // Offline shape-space partitioning: enumerate the dispatch table
+    // for this library's single-library selector and embed it (schema
+    // v3) so a deployment loading the dump serves with zero warm-up.
+    let mut dispatch_stats = None;
+    if args.has_flag("dispatch") {
+        use vortex::dispatch::{DispatchConfig, DispatchTable};
+        let dcfg = DispatchConfig {
+            horizon: args.get_usize("horizon", 256),
+            batch_horizon: args.get_usize("batch-horizon", 32),
+            ..DispatchConfig::default()
+        };
+        let selector = Selector::new(hw.clone(), vec![r.library.clone()]);
+        let table = DispatchTable::for_selector(&selector, &dcfg);
+        r.library.dispatch = table.to_data(&selector);
+        dispatch_stats = Some(table.stats);
+    }
     let mut t = Table::new("compile report", &["metric", "value"]);
     t.row(vec!["candidates (Algorithm 2)".into(), r.candidates_total.to_string()]);
     t.row(vec!["chains analyzed".into(), r.chains_analyzed.to_string()]);
@@ -143,6 +166,20 @@ fn cmd_compile(args: &Args) {
         format!("{} / {:.2}x", r.analysis_threads, r.analysis_speedup()),
     ]);
     t.row(vec!["loaded from cache".into(), r.from_cache.to_string()]);
+    if let Some(ds) = &dispatch_stats {
+        t.row(vec![
+            "dispatch tables (op x mode)".into(),
+            format!("{} ({} clamped)", ds.tables, if ds.clamped { "horizons" } else { "none" }),
+        ]);
+        t.row(vec![
+            "dispatch cells (merged / enumerated)".into(),
+            format!("{} / {}", ds.cells, ds.cells_enumerated),
+        ]);
+        t.row(vec![
+            "dispatch build time".into(),
+            vortex::util::table::fmt_secs(ds.build_secs),
+        ]);
+    }
     t.print();
     if let Some(path) = args.get("dump-library") {
         std::fs::write(path, r.library.to_json().dump()).expect("write library");
@@ -328,7 +365,14 @@ fn cmd_serve(args: &Args) {
         // Only an EXPLICIT --max-batch overrides the scenario's
         // per-lane caps (the legacy default of 8 is not implied).
         let max_batch = args.get("max-batch").and_then(|v| v.parse().ok());
-        return cmd_serve_mixed(n_req, gap, seed, !args.has_flag("no-cache"), max_batch);
+        return cmd_serve_mixed(
+            n_req,
+            gap,
+            seed,
+            !args.has_flag("no-cache"),
+            args.has_flag("dispatch"),
+            max_batch,
+        );
     }
     let hw = presets::a100();
     let cfg = AnalyzerConfig::default_for(&hw);
@@ -350,8 +394,16 @@ fn cmd_serve(args: &Args) {
 }
 
 /// Multi-op serving: BERT token traffic + vision bursts through the
-/// request lanes, with the bucketed plan cache (unless disabled).
-fn cmd_serve_mixed(n_req: usize, gap: f64, seed: u64, cache: bool, max_batch: Option<usize>) {
+/// request lanes, with the bucketed plan cache (unless disabled) and
+/// optionally the compile-time dispatch table in front of it.
+fn cmd_serve_mixed(
+    n_req: usize,
+    gap: f64,
+    seed: u64,
+    cache: bool,
+    dispatch: bool,
+    max_batch: Option<usize>,
+) {
     use vortex::serve::{scenario, serve_mixed_trace, LaneClass, SimLaneEngine};
     let hw = presets::a100();
     let selector = scenario::demo_selector(seed);
@@ -361,6 +413,9 @@ fn cmd_serve_mixed(n_req: usize, gap: f64, seed: u64, cache: bool, max_batch: Op
     } else {
         scenario::serving_config().without_cache()
     };
+    if dispatch {
+        serve_cfg = serve_cfg.with_dispatch(scenario::dispatch_config());
+    }
     if let Some(mb) = max_batch {
         for class in LaneClass::ALL {
             serve_cfg.lane_mut(class).max_batch = mb;
@@ -379,6 +434,23 @@ fn cmd_serve_mixed(n_req: usize, gap: f64, seed: u64, cache: bool, max_batch: Op
         p99 * 1e3,
         100.0 * stats.sched_fraction()
     );
+    if dispatch {
+        let b = stats.dispatch_build.clone().unwrap_or_default();
+        println!(
+            "dispatch table: {} table hits / {} cache hits / {} fresh \
+             (warm-start rate {:.1}%; {} tables, {} cells merged from {}, \
+             built offline in {:.1} ms{})",
+            stats.dispatch.table,
+            stats.dispatch.cache,
+            stats.dispatch.fresh,
+            100.0 * stats.dispatch.warm_start_rate(),
+            b.tables,
+            b.cells,
+            b.cells_enumerated,
+            b.build_secs * 1e3,
+            if b.clamped { "; horizons clamped by cell budget" } else { "" }
+        );
+    }
     if cache {
         println!(
             "plan cache: {} hits / {} misses / {} evictions (hit rate {:.1}%)",

@@ -493,6 +493,7 @@ pub fn build_real_library(
         dtype,
         analyzer: crate::cost::hybrid::AnalyzerConfig::empirical(1),
         kernels,
+        dispatch: Vec::new(),
     })
 }
 

@@ -25,6 +25,17 @@
 //! plans are derived from that selector's libraries. Reloading or
 //! swapping libraries requires building a fresh cache; there is no
 //! partial-invalidation path by design (the rebuild is microseconds).
+//!
+//! Since the offline shape-space partitioner landed
+//! ([`crate::dispatch`]), this cache is the BEYOND-HORIZON fallback:
+//! in-horizon shapes are answered by the compile-time
+//! [`crate::dispatch::DispatchTable`] with no warm-up at all, and only
+//! the tail past the configured horizon still flows through the
+//! reactive memoization here (tri-state accounting in
+//! [`crate::serve::DispatchStats`]). The bucket-key insight is the
+//! same in both: selection is a function of the per-axis
+//! `ceil(dim/extent)` grid coordinates only — the table enumerates
+//! that function offline, the cache memoizes it online.
 
 use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;

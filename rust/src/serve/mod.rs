@@ -15,10 +15,17 @@
 //!   — token rows along M for GEMM, the leading batch dim for batched
 //!   GEMM and the conv family, and the head-group batch (padding to
 //!   the longest sequence) for attention chains.
-//! * **Plan cache** ([`PlanCache`]): per-batch shape→kernel selection
-//!   is memoized into padded-tile buckets, so steady-state dispatch is
-//!   a hash lookup; the cached plan is guaranteed identical to fresh
-//!   selection (see `serve/cache.rs`).
+//! * **Dispatch table** ([`crate::dispatch::DispatchTable`], enabled
+//!   via [`ServeConfig::dispatch`]): the offline shape-space partition
+//!   answers in-horizon batches at request time with ZERO warm-up —
+//!   the shape→kernel decision was enumerated at compile time. Plans
+//!   are provably identical to fresh selection.
+//! * **Plan cache** ([`PlanCache`]): the beyond-horizon fallback —
+//!   per-batch shape→kernel selection is memoized into padded-tile
+//!   buckets, so steady-state dispatch is a hash lookup; the cached
+//!   plan is guaranteed identical to fresh selection (see
+//!   `serve/cache.rs`). Accounting is tri-state per request:
+//!   table hit / cache hit / fresh scan ([`DispatchStats`]).
 //! * **Scenario + telemetry**: [`scenario`] generates mixed traffic
 //!   (BERT-style token streams interleaved with vision bursts);
 //!   [`MixedStats`] reports per-lane latency percentiles, scheduling
@@ -35,8 +42,46 @@ pub use cache::{CacheStats, PlanCache};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::select::{HwMode, Selection, Selector};
+use crate::dispatch::{DispatchConfig, DispatchTable};
 use crate::ir::{IterSpace, TensorProgram};
 use crate::sim::Simulator;
+
+/// Where one request's plan came from — the tri-state accounting of
+/// the dispatch-table / plan-cache / fresh-selection stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Answered by the compile-time dispatch table (zero warm-up).
+    Table,
+    /// Beyond the horizon, answered by a plan-cache hit.
+    Cache,
+    /// Beyond the horizon, first touch: a full selection scan ran
+    /// (the only cold path left).
+    Fresh,
+}
+
+/// Per-request counts by [`PlanSource`]; sums to the request count.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DispatchStats {
+    pub table: u64,
+    pub cache: u64,
+    pub fresh: u64,
+}
+
+impl DispatchStats {
+    pub fn total(&self) -> u64 {
+        self.table + self.cache + self.fresh
+    }
+
+    /// Fraction of requests that never paid a fresh selection scan —
+    /// 1.0 means no cold misses anywhere in the run.
+    pub fn warm_start_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            (self.table + self.cache) as f64 / self.total() as f64
+        }
+    }
+}
 
 /// One serving request: a full tensor program plus its arrival time
 /// (seconds from trace start).
@@ -120,11 +165,20 @@ impl Default for LaneConfig {
 pub struct ServeConfig {
     pub lanes: [LaneConfig; 4],
     pub plan_cache: Option<usize>,
+    /// Offline shape-space partitioning: when set, a
+    /// [`DispatchTable`] is built for the selector BEFORE the trace
+    /// starts (the compile-time half) and consulted first for every
+    /// batch; the plan cache only sees the beyond-horizon tail.
+    pub dispatch: Option<DispatchConfig>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { lanes: [LaneConfig::default(); 4], plan_cache: Some(1024) }
+        ServeConfig {
+            lanes: [LaneConfig::default(); 4],
+            plan_cache: Some(1024),
+            dispatch: None,
+        }
     }
 }
 
@@ -140,6 +194,11 @@ impl ServeConfig {
     /// The cache-disabled twin of this config (baseline runs).
     pub fn without_cache(&self) -> ServeConfig {
         ServeConfig { plan_cache: None, ..self.clone() }
+    }
+
+    /// This config with compile-time dispatch tables enabled.
+    pub fn with_dispatch(&self, cfg: DispatchConfig) -> ServeConfig {
+        ServeConfig { dispatch: Some(cfg), ..self.clone() }
     }
 }
 
@@ -241,10 +300,17 @@ pub struct RequestOutcome {
     /// deterministic under replay; see [`SCHED_OVERHEAD_SECS`].
     pub latency: f64,
     pub batch_size: usize,
-    /// True when the batch's plan came from the cache.
-    pub cache_hit: bool,
+    /// Where the batch's plan came from (table / cache / fresh).
+    pub source: PlanSource,
     /// The constructed plan the request's batch executed.
     pub selection: Selection,
+}
+
+impl RequestOutcome {
+    /// True when the request never paid a fresh selection scan.
+    pub fn warm(&self) -> bool {
+        self.source != PlanSource::Fresh
+    }
 }
 
 /// Per-lane telemetry.
@@ -264,6 +330,12 @@ pub struct MixedStats {
     /// All outcomes, sorted by request id.
     pub outcomes: Vec<RequestOutcome>,
     pub cache: CacheStats,
+    /// Per-request tri-state accounting (table / cache / fresh);
+    /// `dispatch.total()` always equals `count()`.
+    pub dispatch: DispatchStats,
+    /// Offline build statistics of the dispatch table, when one was
+    /// enabled (cells, merge compression, whether horizons clamped).
+    pub dispatch_build: Option<crate::dispatch::BuildStats>,
     /// Max lane span (lanes run as concurrent executors).
     pub span_secs: f64,
 }
@@ -328,8 +400,15 @@ pub fn serve_mixed_trace(
     requests: &[ServeRequest],
 ) -> MixedStats {
     debug_assert!(requests.windows(2).all(|w| w[0].arrive <= w[1].arrive));
+    // The compile-time half: the dispatch table is built (or shipped
+    // with the library) BEFORE any request arrives — its cost is
+    // offline, not serving wall-clock.
+    let dispatch = cfg.dispatch.as_ref().map(|d| DispatchTable::for_selector(selector, d));
     let mut plan_cache = cfg.plan_cache.map(|cap| PlanCache::for_selector(selector, cap));
-    let mut stats = MixedStats::default();
+    let mut stats = MixedStats {
+        dispatch_build: dispatch.as_ref().map(|t| t.stats.clone()),
+        ..MixedStats::default()
+    };
     for class in LaneClass::ALL {
         let lane_reqs: Vec<&ServeRequest> = requests
             .iter()
@@ -344,6 +423,7 @@ pub fn serve_mixed_trace(
             cfg.lane(class),
             class,
             &lane_reqs,
+            dispatch.as_ref(),
             plan_cache.as_mut(),
             &mut stats.outcomes,
         );
@@ -352,6 +432,13 @@ pub fn serve_mixed_trace(
     }
     stats.outcomes.sort_by_key(|o| o.id);
     stats.cache = plan_cache.map(|c| c.stats).unwrap_or_default();
+    for o in &stats.outcomes {
+        match o.source {
+            PlanSource::Table => stats.dispatch.table += 1,
+            PlanSource::Cache => stats.dispatch.cache += 1,
+            PlanSource::Fresh => stats.dispatch.fresh += 1,
+        }
+    }
     stats
 }
 
@@ -359,12 +446,14 @@ pub fn serve_mixed_trace(
 /// generalized to merge-key batching. Incompatible requests never
 /// merge — they stay queued and the next batch forms from the earliest
 /// pending request.
+#[allow(clippy::too_many_arguments)]
 fn serve_lane(
     engine: &mut dyn LaneEngine,
     selector: &Selector,
     cfg: &LaneConfig,
     class: LaneClass,
     requests: &[&ServeRequest],
+    dispatch: Option<&DispatchTable>,
     mut plan_cache: Option<&mut PlanCache>,
     outcomes: &mut Vec<RequestOutcome>,
 ) -> LaneStats {
@@ -408,20 +497,31 @@ fn serve_lane(
             batch.iter().map(|&j| &requests[j].program).collect();
         let merged = merge_programs(&programs);
         let space = merged.space();
-        let (sel, cache_hit) = match plan_cache.as_deref_mut() {
-            Some(c) => {
-                let hits0 = c.stats.hits;
-                let sel = c
-                    .select(selector, space, cfg.mode)
-                    .expect("selector must handle any shape (sample-free)");
-                (sel, c.stats.hits > hits0)
-            }
-            None => (
-                selector
-                    .select(space, cfg.mode)
-                    .expect("selector must handle any shape (sample-free)"),
-                false,
-            ),
+        // Tri-state resolution: compile-time table first, then the
+        // plan cache (beyond-horizon fallback), then a fresh scan.
+        let table_sel = dispatch.and_then(|t| t.select(selector, space, cfg.mode));
+        let (sel, source) = match table_sel {
+            Some(sel) => (sel, PlanSource::Table),
+            None => match plan_cache.as_deref_mut() {
+                Some(c) => {
+                    let hits0 = c.stats.hits;
+                    let sel = c
+                        .select(selector, space, cfg.mode)
+                        .expect("selector must handle any shape (sample-free)");
+                    let source = if c.stats.hits > hits0 {
+                        PlanSource::Cache
+                    } else {
+                        PlanSource::Fresh
+                    };
+                    (sel, source)
+                }
+                None => (
+                    selector
+                        .select(space, cfg.mode)
+                        .expect("selector must handle any shape (sample-free)"),
+                    PlanSource::Fresh,
+                ),
+            },
         };
         let service = engine.execute(space, &sel, selector);
         let done = launch + SCHED_OVERHEAD_SECS + service;
@@ -443,7 +543,7 @@ fn serve_lane(
                 lane: class,
                 latency,
                 batch_size: bsz,
-                cache_hit,
+                source,
                 selection: sel.clone(),
             });
             served[j] = true;
@@ -553,6 +653,59 @@ mod tests {
         assert!(stats.outcomes.iter().all(|o| o.batch_size <= 8));
         let lane = &stats.lanes[0];
         assert!(lane.batches >= 2);
+    }
+
+    #[test]
+    fn dispatch_tri_state_counts_and_matches_fresh_plans() {
+        use crate::dispatch::DispatchConfig;
+        use crate::ir::OpKind;
+        let s = selector();
+        // Horizon covers the gemm template at small m only; arrivals
+        // are spaced past the batch window so every batch is one
+        // request and the counts are exact.
+        let dcfg = DispatchConfig {
+            ops: vec![OpKind::Gemm],
+            ..DispatchConfig::default()
+        }
+        .with_op_horizons(OpKind::Gemm, &[64, 768, 768]);
+        let mut cfg = ServeConfig::default().with_dispatch(dcfg);
+        for class in LaneClass::ALL {
+            cfg.lane_mut(class).max_batch = 1;
+        }
+        let requests: Vec<ServeRequest> = (0..12u64)
+            .map(|i| ServeRequest {
+                id: i,
+                program: gemm(if i % 2 == 0 { 16 } else { 500 }),
+                arrive: 5e-3 * i as f64,
+            })
+            .collect();
+        let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let stats = serve_mixed_trace(&mut engine, &s, &cfg, &requests);
+        // Tri-state accounting sums to the request count, with every
+        // outcome kind represented: m=16 is table-answered, the first
+        // m=500 batch is the one fresh scan, its repeats hit the cache.
+        assert_eq!(stats.dispatch.total(), 12);
+        assert_eq!(stats.dispatch.table, 6);
+        assert_eq!(stats.dispatch.fresh, 1);
+        assert_eq!(stats.dispatch.cache, 5);
+        assert!((stats.dispatch.warm_start_rate() - 11.0 / 12.0).abs() < 1e-12);
+        for o in &stats.outcomes {
+            assert_eq!(o.warm(), o.source != PlanSource::Fresh);
+        }
+        // Plans are identical to a run with no table and no cache.
+        let mut e2 = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let plain = ServeConfig { plan_cache: None, dispatch: None, lanes: cfg.lanes };
+        let fresh = serve_mixed_trace(&mut e2, &s, &plain, &requests);
+        assert_eq!(fresh.dispatch.fresh, 12);
+        for (a, b) in stats.outcomes.iter().zip(&fresh.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert!(
+                a.selection.same_plan(&b.selection),
+                "plan diverged for request {} ({:?})",
+                a.id,
+                a.source
+            );
+        }
     }
 
     #[test]

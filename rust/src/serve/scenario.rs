@@ -13,6 +13,7 @@
 use crate::compiler::{compile, CompileOpts};
 use crate::coordinator::Selector;
 use crate::cost::hybrid::AnalyzerConfig;
+use crate::dispatch::DispatchConfig;
 use crate::hw::presets;
 use crate::ir::{DType, OpKind, TensorProgram};
 use crate::models::{self, Model};
@@ -127,6 +128,36 @@ pub fn serving_config() -> ServeConfig {
     cfg
 }
 
+/// The offline dispatch-table configuration matching this scenario's
+/// advertised shape envelope — per-op horizons covering every merged
+/// batch the generator + lane caps can produce, so in the nominal case
+/// the whole trace is answered at compile time (zero cold misses):
+///
+/// * GEMM: QKV token rows merge up to `max_batch (4) × top context
+///   bucket (256)`; (n, k) are the BERT projection (2304, 768).
+/// * Attention: 12 head groups × up to 4 merged chains, sequences
+///   padded to the 256 bucket, head dim 64.
+/// * Conv: the ResNet stem's implicit GEMM at up to 8 merged frames
+///   (4 requests × camera batch 2) of 112×112 output — M = 100352 —
+///   with (cout, kh·kw·cin) = (64, 147).
+/// * Grouped conv: the MobileNet depthwise block (32 groups, same
+///   merged-frame envelope, 1 output channel per group, 3·3·1 taps).
+///
+/// This is capacity planning (a service-level envelope), not shape
+/// sampling: no profile of the traffic is taken, and shapes beyond the
+/// envelope still serve exactly via the plan-cache fallback. The cell
+/// budget bounds the offline build; if a library's extent set is so
+/// fine that the envelope exceeds it, horizons clamp (recorded in
+/// [`crate::dispatch::BuildStats::clamped`]) and the tail degrades to
+/// the cache — correctness is never traded.
+pub fn dispatch_config() -> DispatchConfig {
+    DispatchConfig { max_cells: 1 << 22, ..DispatchConfig::default() }
+        .with_op_horizons(OpKind::Gemm, &[1024, 2304, 768])
+        .with_op_horizons(OpKind::FusedAttention, &[48, 256, 256, 64])
+        .with_op_horizons(OpKind::Conv2d, &[100_352, 64, 147])
+        .with_op_horizons(OpKind::GroupedConv2d, &[32, 100_352, 1, 9])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +192,38 @@ mod tests {
         }
         let c = mixed_trace(100, 4e-4, 8, DType::F32);
         assert!(a.iter().zip(&c).any(|(x, y)| x.program != y.program));
+    }
+
+    #[test]
+    fn dispatch_envelope_covers_every_merged_trace_shape() {
+        // Every space the generator emits — scaled on its merge axis
+        // by the worst the lane caps allow (4 key-compatible requests
+        // per batch) — must fall inside the configured horizons, so
+        // that in the nominal (unclamped) case the whole trace is
+        // table-answered with zero cold misses.
+        let cfg = dispatch_config();
+        let trace = mixed_trace(300, 4e-4, 9, DType::F32);
+        for r in &trace {
+            let space = r.program.space();
+            let horizons = cfg.horizons_for(space.op);
+            let merge_axis = match space.op {
+                OpKind::GroupedConv2d => 1,
+                _ => 0,
+            };
+            for (a, (&d, &h)) in
+                space.dims.dims().iter().zip(&horizons).enumerate()
+            {
+                let worst = if a == merge_axis { d * 4 } else { d };
+                assert!(
+                    worst <= h,
+                    "{}: axis {} worst-merged dim {} exceeds horizon {}",
+                    r.program.id(),
+                    a,
+                    worst,
+                    h
+                );
+            }
+        }
     }
 
     #[test]

@@ -39,11 +39,9 @@ fn factor(h: u64, spread: f64) -> f64 {
 
 impl Simulator {
     pub fn new(hw: HwSpec, seed: u64) -> Simulator {
-        let launch_overhead = match hw.name {
-            "a100" => 4e-6,     // CUDA launch
-            "xeon_8255c" => 1e-6,
-            _ => 30e-6,         // PJRT dispatch on this machine
-        };
+        // Owned by the preset (like `is_real_testbed`): no name
+        // string-matching here.
+        let launch_overhead = hw.launch_overhead_secs;
         Simulator { hw, seed, launch_overhead }
     }
 
