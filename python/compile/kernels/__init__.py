@@ -1,2 +1,2 @@
 # L1: Pallas micro-kernels for the paper compute hot-spots + jnp oracles.
-from . import gemm_epilogue, gemm_tile, ref, softmax_tile  # noqa: F401
+from . import bgemm_tile, gemm_epilogue, gemm_tile, ref, softmax_tile  # noqa: F401

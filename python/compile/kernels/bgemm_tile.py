@@ -1,0 +1,79 @@
+"""L1: batched blocked GEMM micro-kernel as a Pallas kernel.
+
+One `bgemm_acc` launch contracts a whole stack of (bm, bk) x (bk, bn)
+blocks — the batch/group/head loop that `rust/src/runtime` used to walk
+on the host, one `gemm_acc` launch per group, now rides the grid's
+leading axis on-device. `GroupedConv2d` and `FusedAttention` alias
+`BatchedGemm::artifact_name`, so a single artifact family serves grouped
+conv (batch = groups), attention (batch = batch*heads), and plain
+batched GEMM.
+
+Same contract as gemm_tile.gemm_acc otherwise: C_in seeds an f32 VMEM
+accumulator, K is the innermost grid axis, the untupled output buffer
+feeds back as the next call's accumulator input. interpret=True for the
+CPU PJRT testbed (see gemm_tile.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gemm_tile import _check_tiles
+
+
+def _bgemm_acc_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, k_steps: int):
+    """Grid (B, M/tm, N/tn, K/tk), K innermost; one batch slab per step."""
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = c_ref[0].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def bgemm_acc(
+    a: jax.Array,
+    b: jax.Array,
+    c_in: jax.Array,
+    *,
+    tm: int,
+    tn: int,
+    tk: int,
+) -> jax.Array:
+    """O[g] = C_in[g] + A[g] @ B[g] for every g in the leading batch axis.
+
+    The Rust runtime chains these over K super-blocks exactly like the
+    scalar form — first call gets C_in = 0, later calls feed the previous
+    output back in — but each launch covers `batch` groups at once, so a
+    G-group conv costs ceil(G / bb) launch chains instead of G.
+    """
+    batch, m, k = a.shape
+    b2, k2, n = b.shape
+    assert batch == b2, (batch, b2)
+    assert k == k2, (k, k2)
+    assert c_in.shape == (batch, m, n), (c_in.shape, batch, m, n)
+    _check_tiles(m, n, k, tm, tn, tk)
+    k_steps = k // tk
+    return pl.pallas_call(
+        functools.partial(_bgemm_acc_kernel, k_steps=k_steps),
+        grid=(batch, m // tm, n // tn, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, tm, tk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, tk, tn), lambda bb, i, j, kk: (bb, kk, j)),
+            pl.BlockSpec((1, tm, tn), lambda bb, i, j, kk: (bb, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tm, tn), lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m, n), c_in.dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=True,
+    )(a, b, c_in)

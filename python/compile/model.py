@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernels import gemm_epilogue, gemm_tile, ref, softmax_tile
+from .kernels import bgemm_tile, gemm_epilogue, gemm_tile, ref, softmax_tile
 
 _DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
 
@@ -57,6 +57,27 @@ def make_gemm_acc(bm, bn, bk, tm, tn, tk, in_dtype="f32"):
         jax.ShapeDtypeStruct((bm, bk), dt),
         jax.ShapeDtypeStruct((bk, bn), dt),
         jax.ShapeDtypeStruct((bm, bn), jnp.float32),
+    )
+    return fn, args
+
+
+def make_bgemm_acc(bb, bm, bn, bk, tm, tn, tk, in_dtype="f32"):
+    """O[bb,bm,bn] = C_in + A[bb,bm,bk] @ B[bb,bk,bn] — batched accumulate.
+
+    The rank-4 analog of make_gemm_acc: one launch contracts `bb` group
+    blocks (conv groups / attention heads / batched GEMM batch), so the
+    Rust runtime's batch loop runs on-device. Named per
+    BatchedGemm::artifact_name: bgemm_acc_{bb}x{bm}x{bn}x{bk}_{dtype}.
+    """
+    dt = dtype_of(in_dtype)
+
+    def fn(a, b, c_in):
+        return (bgemm_tile.bgemm_acc(a, b, c_in, tm=tm, tn=tn, tk=tk),)
+
+    args = (
+        jax.ShapeDtypeStruct((bb, bm, bk), dt),
+        jax.ShapeDtypeStruct((bb, bk, bn), dt),
+        jax.ShapeDtypeStruct((bb, bm, bn), jnp.float32),
     )
     return fn, args
 
@@ -193,6 +214,7 @@ def make_encoder_layer(seq, d, ff, n_heads, tm, tn, tk):
 BUILDERS = {
     "gemm": make_gemm,
     "gemm_acc": make_gemm_acc,
+    "bgemm_acc": make_bgemm_acc,
     "gemm_bias_act": make_gemm_bias_act,
     "softmax": make_softmax,
     "conv2d": make_conv2d,

@@ -144,4 +144,14 @@ impl PjRtClient {
     ) -> Result<PjRtBuffer> {
         unavailable()
     }
+    /// Upload an already-shaped (and dtype-converted) literal to a
+    /// device buffer — the profiling path pre-uploads inputs once with
+    /// this so timed reps measure pure `execute_b` launches.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
 }

@@ -12,9 +12,10 @@ use crate::bench::harness::{
 use crate::bench::workloads;
 use crate::cost::Strategy;
 use crate::hw::HwSpec;
-use crate::ir::{Contraction, DType, OpKind};
+use crate::ir::{ceil_div, Contraction, DType, OpKind};
 use crate::profiler::SimProfiler;
 use crate::sim::Simulator;
+use crate::util::json::Json;
 use crate::util::table::{fmt_x, Table};
 
 /// Fig. 3: DietCode in-sample vs out-of-sample vs cuBLAS on the BERT
@@ -172,19 +173,95 @@ pub fn table5(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
     vec![summary]
 }
 
-/// Operator-generality study: GEMM, batched GEMM, Conv2d, grouped /
-/// depthwise conv and the attention-fused chain each compiled through
-/// the SAME candgen → compile → select pipeline (one native library
-/// per op) and executed in the simulator. Demonstrates the
-/// hierarchized strategy space over every registered op — the
-/// extension point every new workload plugs into.
-pub fn ops(out_dir: &Path, seed: u64) -> Vec<Table> {
+/// One case of the launch-composition study: a batched/grouped/fused op
+/// executed (a) as the pre-batching host loop — one `gemm_acc` launch
+/// chain per group plus host-materialized operands — and (b) as the
+/// native `bgemm_acc` path that folds `bb` groups into every launch and
+/// gathers operand blocks on demand (`runtime::OperandSource`).
+struct CompCase {
+    op: &'static str,
+    case: &'static str,
+    /// Conv groups / batch·heads / batch — the host loop's trip count.
+    groups: usize,
+    /// Per-group GEMM problem (m, n, k).
+    mnk: [usize; 3],
+    /// GEMM stages chained per group (attention: score + context).
+    kernels: usize,
+    /// Per-group f32 elements the host path materializes (im2col patch
+    /// matrix `m·kh·kw·cg`, attention's `kt` transpose copy) that the
+    /// block-provider path never builds.
+    extra_elems: usize,
+}
+
+/// The L1 block both paths run, matching the checked-in
+/// `bgemm_acc_4x8x128x128_f32` artifact (microkernels.json); the host
+/// loop runs its rank-3 tail per group.
+const COMP_BLOCK: [usize; 4] = [4, 8, 128, 128];
+
+fn comp_cases() -> Vec<CompCase> {
+    let c = |op, case, groups, mnk, kernels, extra_elems| CompCase {
+        op,
+        case,
+        groups,
+        mnk,
+        kernels,
+        extra_elems,
+    };
+    vec![
+        // Plain batched GEMM: batch rides the leading grid axis.
+        c("batched_gemm", "bmm_b8_128x256x256", 8, [128, 256, 256], 1, 0),
+        c("batched_gemm", "bmm_b16_64x512x64", 16, [64, 512, 64], 1, 0),
+        c("batched_gemm", "bmm_b32_448x64x128", 32, [448, 64, 128], 1, 0),
+        // Grouped conv (implicit GEMM): m = n·oh·ow, n = cout/g,
+        // k = kh·kw·cg; the host path materializes the m×k patch matrix
+        // per group.
+        c("grouped_conv", "resnext_3x3_g32_14x14", 32, [1568, 8, 72], 1, 1568 * 72),
+        c("grouped_conv", "mobilenet_dw3x3_g96_28x28", 96, [3136, 1, 9], 1, 3136 * 9),
+        c("grouped_conv", "shuffle_1x1_g8_28x28", 8, [3136, 30, 30], 1, 3136 * 30),
+        // Attention: two chained GEMM stages per head group; the host
+        // path copies kt (seq·hd) per group before stage 1.
+        c("attention", "bert_base_s384_b8h12", 96, [384, 384, 64], 2, 384 * 64),
+        c("attention", "gpt_s128_b4h16", 64, [128, 128, 64], 2, 128 * 64),
+        c("attention", "long_s512_b2h8", 16, [512, 512, 64], 2, 512 * 64),
+    ]
+}
+
+/// Operator-generality study + launch-composition model.
+///
+/// Part 1 (ops.csv): GEMM, batched GEMM, Conv2d, grouped / depthwise
+/// conv and the attention-fused chain each compiled through the SAME
+/// candgen → compile → select pipeline (one native library per op) and
+/// executed in the simulator. Demonstrates the hierarchized strategy
+/// space over every registered op — the extension point every new
+/// workload plugs into. `fraction` subsamples these suites (CI smoke
+/// passes 8).
+///
+/// Part 2 (BENCH_ops.json): before/after rows for the native-batching
+/// runtime, from a deterministic analytic model priced with the
+/// cpu_pjrt preset (the testbed `RealEngine` actually runs on). Both
+/// paths share the identical padded-FLOP term; they differ only in the
+/// terms the PR changed, each taken straight from the preset:
+///
+/// - launches: host = groups · cells · chain, native =
+///   ceil(groups/bb) · cells · chain, each costing
+///   `launch_overhead_secs × launch_factor` (the per-`execute_b`
+///   dispatch the simulator also charges);
+/// - materialization traffic: the host path writes + reads the
+///   per-group im2col patch matrix / kt copy through DRAM
+///   (`8 · groups · extra_elems` bytes at the preset's DRAM bandwidth);
+///   the provider path never allocates it.
+///
+/// The model is intentionally closed-form — no RNG, no selector — so
+/// the committed BENCH_ops.json is bit-reproducible on any machine and
+/// CI can regenerate + diff it (`bench-smoke` step).
+pub fn ops(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
     let tb = Testbed::GpuTensorCore;
     let sim = Simulator::new(tb.hw(), seed);
     let engine = vortex_engine_ops(tb, seed, &OpKind::ALL);
     let crate::bench::harness::Engine::Vortex { selector, .. } = &engine else {
         unreachable!()
     };
+    let frac = fraction.max(1);
     let mut t = Table::new(
         "Operator generality — per-op libraries through one pipeline (GPU Tensor Core)",
         &["op", "libraries", "kernels", "cases", "geomean GFLOPS"],
@@ -193,15 +270,15 @@ pub fn ops(out_dir: &Path, seed: u64) -> Vec<Table> {
         let cases: Vec<workloads::Case> = match op {
             OpKind::Gemm => workloads::gemm_suite(tb.dtype(), seed)
                 .into_iter()
-                .step_by(40)
+                .step_by(40 * frac)
                 .collect(),
             OpKind::BatchedGemm => workloads::batched_gemm_suite(tb.dtype(), seed)
                 .into_iter()
-                .step_by(16)
+                .step_by(16 * frac)
                 .collect(),
             OpKind::Conv2d => workloads::conv_suite(tb.dtype(), seed)
                 .into_iter()
-                .step_by(55)
+                .step_by(55 * frac)
                 .collect(),
             // ResNet-strided cases optimize in the ungrouped conv space;
             // the grouped row takes the depthwise + grouped family.
@@ -211,11 +288,12 @@ pub fn ops(out_dir: &Path, seed: u64) -> Vec<Table> {
                     matches!(c.program, crate::ir::TensorProgram::Conv2d { groups, .. }
                         if groups > 1)
                 })
+                .step_by(frac)
                 .collect(),
             // The fused chain: seq-swept attention head groups.
             OpKind::FusedAttention => workloads::attention_suite(tb.dtype(), seed)
                 .into_iter()
-                .step_by(4)
+                .step_by(4 * frac)
                 .collect(),
         };
         let libs = selector.libraries.iter().filter(|l| l.op == op).count();
@@ -239,7 +317,88 @@ pub fn ops(out_dir: &Path, seed: u64) -> Vec<Table> {
         ]);
     }
     let _ = t.write_csv(&out_dir.join("ops.csv"));
-    vec![t]
+
+    // Part 2: the launch-composition model (see the doc comment).
+    let hw = crate::hw::presets::cpu_pjrt();
+    let bi = hw.backend_idx("mxu_f32").unwrap();
+    let launch = hw.launch_overhead_secs * hw.backends[bi].launch_factor;
+    let bw = hw.levels.last().unwrap().load_bw_gbps * 1e9;
+    let peak = hw.backends[bi].peak_gflops * 1e9;
+    let [bb, bm, bn, bk] = COMP_BLOCK;
+    let mut comp = Table::new(
+        "Launch composition — host-loop vs native batched runtime (cpu_pjrt model)",
+        &["op", "case", "groups", "l_host", "l_native", "host (ms)", "native (ms)", "speedup"],
+    );
+    let mut rows = Vec::new();
+    let mut logs: Vec<(&'static str, f64, usize)> = Vec::new();
+    for c in comp_cases() {
+        let [m, n, k] = c.mnk;
+        let cells = ceil_div(m, bm) * ceil_div(n, bn);
+        let chain = ceil_div(k, bk);
+        let l_host = c.groups * cells * chain;
+        let l_native = ceil_div(c.groups, bb) * cells * chain;
+        let padded = c.groups * (cells * bm * bn) * (chain * bk);
+        let compute = 2.0 * padded as f64 / peak;
+        let extra = (8 * c.groups * c.extra_elems) as f64 / bw;
+        let kf = c.kernels as f64;
+        let sched = crate::serve::SCHED_OVERHEAD_SECS;
+        let host = kf * (compute + l_host as f64 * launch) + extra + sched;
+        let native = kf * (compute + l_native as f64 * launch) + sched;
+        let speedup = host / native;
+        comp.row(vec![
+            c.op.into(),
+            c.case.into(),
+            c.groups.to_string(),
+            l_host.to_string(),
+            l_native.to_string(),
+            format!("{:.3}", host * 1e3),
+            format!("{:.3}", native * 1e3),
+            fmt_x(speedup),
+        ]);
+        rows.push(Json::obj(vec![
+            ("op", Json::str(c.op)),
+            ("case", Json::str(c.case)),
+            ("groups", Json::num(c.groups as f64)),
+            ("m", Json::num(m as f64)),
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(k as f64)),
+            ("kernels", Json::num(c.kernels as f64)),
+            ("extra_elems", Json::num(c.extra_elems as f64)),
+            ("launches_host", Json::num(l_host as f64)),
+            ("launches_native", Json::num(l_native as f64)),
+            ("host_loop_secs", Json::num(host)),
+            ("native_secs", Json::num(native)),
+            ("speedup", Json::num(speedup)),
+        ]));
+        match logs.iter_mut().find(|(op, ..)| *op == c.op) {
+            Some((_, s, cnt)) => {
+                *s += speedup.ln();
+                *cnt += 1;
+            }
+            None => logs.push((c.op, speedup.ln(), 1)),
+        }
+    }
+    let mut geo: Vec<(&str, Json)> = Vec::new();
+    let mut all = (0.0, 0usize);
+    for &(op, s, cnt) in &logs {
+        geo.push((op, Json::num((s / cnt as f64).exp())));
+        all.0 += s;
+        all.1 += cnt;
+    }
+    geo.push(("overall", Json::num((all.0 / all.1 as f64).exp())));
+    let report = Json::obj(vec![
+        ("schema", Json::str("vortex-bench-ops-v1")),
+        ("testbed", Json::str(hw.name)),
+        ("block", Json::arr(COMP_BLOCK.iter().map(|&v| Json::num(v as f64)).collect())),
+        ("launch_overhead_secs", Json::num(launch)),
+        ("sched_overhead_secs", Json::num(crate::serve::SCHED_OVERHEAD_SECS)),
+        ("dram_gbps", Json::num(hw.levels.last().unwrap().load_bw_gbps)),
+        ("peak_gflops", Json::num(hw.backends[bi].peak_gflops)),
+        ("rows", Json::arr(rows)),
+        ("geomean_speedup", Json::obj(geo)),
+    ]);
+    let _ = std::fs::write(out_dir.join("BENCH_ops.json"), report.dump() + "\n");
+    vec![t, comp]
 }
 
 /// Table 6: Vortex vs DietCode across M ranges, with DietCode sampled
@@ -281,4 +440,54 @@ pub fn table6(out_dir: &Path, seed: u64) -> Vec<Table> {
     ]);
     let _ = t.write_csv(&out_dir.join("table6.csv"));
     vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_writes_composition_report_with_real_speedups() {
+        let dir = std::env::temp_dir().join("vortex_bench_ops_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let tables = ops(&dir, 7, 8);
+        assert_eq!(tables.len(), 2, "generality + composition tables");
+        let text = std::fs::read_to_string(dir.join("BENCH_ops.json")).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str().unwrap(), "vortex-bench-ops-v1");
+        assert_eq!(v.get("testbed").unwrap().as_str().unwrap(), "cpu_pjrt");
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), comp_cases().len());
+        for op in ["batched_gemm", "grouped_conv", "attention"] {
+            assert!(
+                rows.iter().any(|r| r.get("op").unwrap().as_str().unwrap() == op),
+                "no {} row",
+                op
+            );
+            let g = v.get("geomean_speedup").unwrap().get(op).unwrap().as_f64().unwrap();
+            assert!(g > 1.0, "{} geomean {} not a speedup", op, g);
+        }
+        for r in rows {
+            let host = r.get("host_loop_secs").unwrap().as_f64().unwrap();
+            let native = r.get("native_secs").unwrap().as_f64().unwrap();
+            let speedup = r.get("speedup").unwrap().as_f64().unwrap();
+            assert!(host.is_finite() && native > 0.0);
+            assert!(speedup > 1.0, "{:?}: native path not faster", r.get("case"));
+            assert!((speedup - host / native).abs() < 1e-12);
+            // The native path never launches more chains than the loop.
+            let lh = r.get("launches_host").unwrap().as_usize().unwrap();
+            let ln = r.get("launches_native").unwrap().as_usize().unwrap();
+            assert!(ln < lh, "batching did not reduce launches");
+        }
+        let overall =
+            v.get("geomean_speedup").unwrap().get("overall").unwrap().as_f64().unwrap();
+        assert!(overall > 1.0, "overall geomean {}", overall);
+        // Deterministic: independent of seed and fraction (the model has
+        // no RNG), so CI can regenerate and diff the committed file.
+        let dir2 = std::env::temp_dir().join("vortex_bench_ops_test2");
+        std::fs::create_dir_all(&dir2).unwrap();
+        ops(&dir2, 99, 16);
+        let text2 = std::fs::read_to_string(dir2.join("BENCH_ops.json")).unwrap();
+        assert_eq!(text, text2, "BENCH_ops.json must not depend on seed/fraction");
+    }
 }

@@ -40,7 +40,7 @@ pub fn run(name: &str, out_dir: &Path, seed: u64, fast: bool) -> Vec<Table> {
         "table7" => exp_analysis::table7(out_dir, seed, frac),
         "fig16" => exp_analysis::fig16(out_dir, seed),
         "ablation" => exp_ablation::ablation(out_dir, seed, frac),
-        "ops" => exp_operator::ops(out_dir, seed),
+        "ops" => exp_operator::ops(out_dir, seed, frac),
         "serve" => exp_serve::serve(out_dir, seed, frac),
         "all" => {
             let mut all = Vec::new();

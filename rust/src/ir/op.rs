@@ -110,6 +110,19 @@ impl Tile {
         [self.dims[0], self.dims[1], self.dims[2]]
     }
 
+    /// Rank-4 (batched-contraction) constructor, `[b, m, n, k]`.
+    pub fn from4(d: [usize; 4]) -> Tile {
+        Tile::new(&d)
+    }
+
+    /// Back to `[b, m, n, k]`; panics on other ranks. This is the
+    /// block the runtime's batched constructor
+    /// (`runtime::RealEngine::bgemm_dynamic`) executes.
+    pub fn to4(self) -> [usize; 4] {
+        assert_eq!(self.rank, 4, "tile {} is not rank 4", self);
+        [self.dims[0], self.dims[1], self.dims[2], self.dims[3]]
+    }
+
     pub fn rank(self) -> usize {
         self.rank as usize
     }

@@ -17,7 +17,13 @@
 //!
 //! Python never runs at serving time: [`runtime`] loads the AOT
 //! artifacts via the PJRT CPU client and the coordinator composes them
-//! over dynamic shapes.
+//! over dynamic shapes. Dynamic execution streams operand tiles through
+//! zero-materialization block providers (`OperandSource`: dense /
+//! implicit-im2col / transpose views), batches group loops into native
+//! `bgemm_acc` launches, and runs independent (M, N) grid cells on
+//! scoped threads with bit-identical results — the "Runtime execution"
+//! section of [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md)
+//! documents the invariants.
 //!
 //! ## Operator-generic architecture
 //!

@@ -292,6 +292,56 @@ fn attention_dynamic_rejects_invalid_geometry() {
 }
 
 #[test]
+fn bgemm_dynamic_native_matches_per_group_loop() {
+    use vortex::runtime::OperandSource;
+    let Some(eng) = engine() else { return };
+    if eng.manifest.bgemm_acc_blocks(DType::F32).is_empty() {
+        eprintln!("SKIP: no bgemm_acc artifacts in manifest — rerun `make artifacts`");
+        return;
+    }
+    // Ragged on every axis, batch not a multiple of bb=4: edge chunks
+    // zero-pad groups past the batch, edge cells crop rows/cols.
+    let (batch, m, n, k) = (6usize, 12usize, 200usize, 300usize);
+    let a: Vec<Vec<f32>> = (0..batch).map(|g| rand_vec(m * k, 50 + g as u64)).collect();
+    let b: Vec<Vec<f32>> = (0..batch).map(|g| rand_vec(k * n, 60 + g as u64)).collect();
+    let a_srcs: Vec<OperandSource> =
+        a.iter().map(|v| OperandSource::dense(v, m, k)).collect();
+    let b_srcs: Vec<OperandSource> =
+        b.iter().map(|v| OperandSource::dense(v, k, n)).collect();
+    let got = eng
+        .bgemm_dynamic(&a_srcs, &b_srcs, (m, n, k), [4, 8, 128, 128], DType::F32)
+        .expect("bgemm");
+    let mut want = Vec::new();
+    for g in 0..batch {
+        want.extend(
+            eng.gemm_dynamic(&a[g], &b[g], (m, n, k), [8, 128, 128], DType::F32)
+                .expect("gemm"),
+        );
+    }
+    assert_close(&got, &want, 1e-4, "bgemm native vs per-group loop");
+}
+
+#[test]
+fn real_libraries_include_profiled_batched_blocks() {
+    use vortex::ir::OpKind;
+    use vortex::runtime::build_real_libraries;
+    let Some(eng) = engine() else { return };
+    let hw = presets::cpu_pjrt();
+    let libs = build_real_libraries(&eng, &hw, DType::F32, 1).expect("libraries");
+    assert_eq!(libs[0].op, OpKind::Gemm);
+    if eng.manifest.bgemm_acc_blocks(DType::F32).is_empty() {
+        eprintln!("SKIP: no bgemm_acc artifacts — batched library not built");
+        return;
+    }
+    let batched =
+        libs.iter().find(|l| l.op == OpKind::BatchedGemm).expect("batched library");
+    assert!(!batched.kernels.is_empty());
+    assert!(batched.kernels.iter().all(|k| k.l1.rank() == 4 && k.base_cost > 0.0));
+    // Profiled batch tiles are real blocks, not the lift's batch=1.
+    assert!(batched.kernels.iter().any(|k| k.l1[0] > 1));
+}
+
+#[test]
 fn conv2d_dynamic_rejects_invalid_geometry() {
     use vortex::runtime::conv2d_dynamic;
     let Some(eng) = engine() else { return };
