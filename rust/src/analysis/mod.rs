@@ -1,0 +1,872 @@
+//! Layer 8 — static analysis: the sample-free plan auditor.
+//!
+//! Vortex's selection thesis — hardware structure lets you reason
+//! about the whole dynamic-shape strategy space without runtime
+//! samples — applies to *correctness* too. Every invariant the runtime
+//! and serving layers depend on is finitely checkable once it is
+//! phrased over the `ceil(dim / extent)` lattice instead of over raw
+//! shapes, so [`PlanAuditor`] proves them **symbolically over each
+//! axis interval**, never at sampled points:
+//!
+//! 1. **Write-set disjointness** — for every (op, kernel) the
+//!    `run_cells` launch grid's output regions are pairwise disjoint
+//!    and exactly cover the output, including zero-padded edge chunks
+//!    and beyond-grid batch chunks. The model is the per-axis
+//!    [`OpSpec::write_axes`] / [`OpSpec::write_footprint`] hooks;
+//!    footprints are per-axis interval boxes, so cross-axis
+//!    disjointness and cover follow from the per-axis partitions
+//!    (two distinct cells differ in at least one axis coordinate).
+//!    Per axis, the dim range is split at L1-extent multiples; within
+//!    one segment the grid is constant and every footprint is an
+//!    affine function of the dim (constant for non-terminal cells,
+//!    `end = d` for the terminal cell), so checking both segment
+//!    endpoints plus non-terminal stability proves every in-segment
+//!    shape — the same monotone-segment argument the dispatch layer
+//!    uses for selection.
+//! 2. **Capacity bounds** — `OpSpec::working_set` is documented
+//!    monotone in every tile dim and edge tiles are zero-padded to the
+//!    full tile, so its supremum over every admissible runtime shape
+//!    is attained at the closed-form per-axis extrema corner
+//!    ([`OpSpec::axis_extrema`]). One evaluation per (kernel, level)
+//!    bounds all shapes.
+//! 3. **Dispatch-region soundness** — for every
+//!    [`DispatchTable`] cell, the recorded winner's chain-scaled
+//!    [`FastKernel`](crate::coordinator::Selector) estimate must be
+//!    the first strict argmin over every eligible rival across the
+//!    WHOLE cell. Estimates depend on dims only through the launch
+//!    grid, and the audit's fine lattice splits every axis at every
+//!    eligible L1-extent multiple, so one representative per fine cell
+//!    (the upper edge) is a proof, not a sample; the audit also checks
+//!    every stored (merged) edge lies ON that lattice — a tampered
+//!    edge cannot hide between two grid-constant segments.
+//! 4. **Artifact/alias consistency** — `measurement_op` alias chains
+//!    reach a fixpoint with ranks preserved, backend dtypes agree with
+//!    library dtypes, manifest `artifact_name`s resolve (when a
+//!    manifest is supplied), and embedded schema-v3 table payloads
+//!    carry matching selector fingerprints and content digests.
+//!
+//! Findings are structured [`Diagnostic`]s (severity, op/mode/kernel/
+//! axis coordinates, counterexample dims when refutable). The same
+//! struct backs the context-rich rejection messages of
+//! [`DispatchTable::from_data_checked`](crate::dispatch::DispatchTable::from_data_checked)
+//! and `runtime::Manifest::load`, and the `vortex audit [--lib
+//! dump.json] [--dispatch] [--deny warnings]` CLI (wired into CI)
+//! turns the report into an exit code. See the "Static analysis
+//! layer" section of `docs/ARCHITECTURE.md`.
+
+use std::fmt;
+
+use crate::coordinator::Selector;
+use crate::dispatch::{self, DispatchTable};
+use crate::hw::HwSpec;
+use crate::ir::{ceil_div, OpKind, OpSpec, Tile};
+use crate::runtime::Manifest;
+
+// ---------------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------------
+
+/// Finding severity. `Error` refutes an invariant (with a
+/// counterexample where one exists); `Warning` flags a condition the
+/// audit cannot prove but cannot refute either (e.g. a foreign table
+/// payload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One structured audit finding. Also the diagnostic currency of the
+/// strict loaders ([`crate::dispatch::DispatchTable::from_data_checked`],
+/// `runtime::Manifest::load`): every rejection names the offending
+/// (op, mode, entry) through the same struct the auditor emits.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Stable machine-checkable code, e.g. `"dispatch.winner_dominated"`.
+    pub code: &'static str,
+    pub op: Option<OpKind>,
+    /// Mode name (`"adaptive"` / `"only:<backend>"`).
+    pub mode: Option<String>,
+    /// (library index, kernel index) coordinates.
+    pub kernel: Option<(usize, usize)>,
+    pub axis: Option<usize>,
+    /// Refuting problem dims, when the finding is refutable.
+    pub counterexample: Option<Tile>,
+    /// Free-form context slot (manifest entry name, payload index, ...).
+    pub entry: Option<String>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            severity: Severity::Error,
+            code,
+            op: None,
+            mode: None,
+            kernel: None,
+            axis: None,
+            counterexample: None,
+            entry: None,
+            message: message.into(),
+        }
+    }
+
+    pub fn warning(code: &'static str, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { severity: Severity::Warning, ..Diagnostic::error(code, message) }
+    }
+
+    pub fn with_op(mut self, op: OpKind) -> Self {
+        self.op = Some(op);
+        self
+    }
+
+    pub fn with_mode(mut self, mode: impl Into<String>) -> Self {
+        self.mode = Some(mode.into());
+        self
+    }
+
+    pub fn with_kernel(mut self, lib: usize, kernel: usize) -> Self {
+        self.kernel = Some((lib, kernel));
+        self
+    }
+
+    pub fn with_axis(mut self, axis: usize) -> Self {
+        self.axis = Some(axis);
+        self
+    }
+
+    pub fn with_counterexample(mut self, dims: Tile) -> Self {
+        self.counterexample = Some(dims);
+        self
+    }
+
+    pub fn with_entry(mut self, entry: impl Into<String>) -> Self {
+        self.entry = Some(entry.into());
+        self
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]", self.severity, self.code)?;
+        if let Some(op) = self.op {
+            write!(f, " op={op}")?;
+        }
+        if let Some(mode) = &self.mode {
+            write!(f, " mode={mode}")?;
+        }
+        if let Some((l, k)) = self.kernel {
+            write!(f, " kernel=({l},{k})")?;
+        }
+        if let Some(a) = self.axis {
+            write!(f, " axis={a}")?;
+        }
+        if let Some(dims) = self.counterexample {
+            write!(f, " dims={dims}")?;
+        }
+        if let Some(e) = &self.entry {
+            write!(f, " entry={e}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// Audit outcome: the findings plus proof-obligation counters (what
+/// was actually discharged, so "clean" is distinguishable from
+/// "vacuous").
+#[derive(Debug, Clone, Default)]
+pub struct AuditReport {
+    pub diagnostics: Vec<Diagnostic>,
+    /// (library, kernel) pairs whose write-set + capacity obligations
+    /// were discharged.
+    pub kernels_checked: usize,
+    /// Per-axis affine segments proven in the write-set pass.
+    pub segments_checked: usize,
+    /// Fine-lattice cells whose argmin was re-proven in the dispatch
+    /// pass.
+    pub cells_checked: usize,
+    /// (op, mode) dispatch tables audited.
+    pub tables_checked: usize,
+}
+
+impl AuditReport {
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// True when the audit gates green: no errors, and no warnings
+    /// either when `deny_warnings` (the CI posture).
+    pub fn is_clean(&self, deny_warnings: bool) -> bool {
+        self.errors() == 0 && (!deny_warnings || self.warnings() == 0)
+    }
+
+    /// Fold another report's findings and counters into this one.
+    pub fn merge(&mut self, other: AuditReport) {
+        self.diagnostics.extend(other.diagnostics);
+        self.kernels_checked += other.kernels_checked;
+        self.segments_checked += other.segments_checked;
+        self.cells_checked += other.cells_checked;
+        self.tables_checked += other.tables_checked;
+    }
+
+    /// One-line human summary of the discharged obligations.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} kernels, {} write-set segments, {} dispatch cells across {} tables: \
+             {} errors, {} warnings",
+            self.kernels_checked,
+            self.segments_checked,
+            self.cells_checked,
+            self.tables_checked,
+            self.errors(),
+            self.warnings()
+        )
+    }
+}
+
+/// Auditor configuration: the symbolic horizons of the write-set pass
+/// (role-derived like [`crate::dispatch::DispatchConfig`] — the proof
+/// covers every shape with all dims inside the horizon box).
+#[derive(Debug, Clone)]
+pub struct AuditConfig {
+    pub horizon: usize,
+    pub batch_horizon: usize,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig { horizon: 256, batch_horizon: 32 }
+    }
+}
+
+impl AuditConfig {
+    fn horizons_for(&self, spec: &dyn OpSpec) -> Vec<usize> {
+        spec.axes()
+            .iter()
+            .map(|a| {
+                if a.role == crate::ir::AxisRole::Batch {
+                    self.batch_horizon
+                } else {
+                    self.horizon
+                }
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PlanAuditor
+// ---------------------------------------------------------------------------
+
+/// The static verification pass: walks a [`Selector`]'s compiled
+/// libraries and kernels (and, via [`audit_dispatch_table`], its
+/// dispatch tables) and discharges the four invariant families
+/// documented in the module docs. Construction is free; every proof
+/// obligation runs in [`PlanAuditor::audit`].
+pub struct PlanAuditor<'a> {
+    selector: &'a Selector,
+    manifest: Option<&'a Manifest>,
+    cfg: AuditConfig,
+}
+
+impl<'a> PlanAuditor<'a> {
+    pub fn new(selector: &'a Selector, cfg: AuditConfig) -> Self {
+        PlanAuditor { selector, manifest: None, cfg }
+    }
+
+    /// Also resolve every kernel's `artifact_name` against an AOT
+    /// manifest (real-testbed deployments).
+    pub fn with_manifest(mut self, manifest: &'a Manifest) -> Self {
+        self.manifest = Some(manifest);
+        self
+    }
+
+    /// Run the write-set, capacity and artifact/alias passes over
+    /// every library kernel. Dispatch tables are audited separately
+    /// ([`audit_dispatch_table`]) because they are optional payloads.
+    pub fn audit(&self) -> AuditReport {
+        let mut report = AuditReport::default();
+        self.audit_aliases(&mut report);
+        for (li, lib) in self.selector.libraries.iter().enumerate() {
+            let spec = lib.op.spec();
+            let horizons = self.cfg.horizons_for(spec);
+            for (ki, k) in lib.kernels.iter().enumerate() {
+                report.kernels_checked += 1;
+                for d in audit_write_sets(spec, k.l1, &horizons, &mut report.segments_checked)
+                {
+                    report.diagnostics.push(d.with_op(lib.op).with_kernel(li, ki));
+                }
+                for d in audit_capacity(&self.selector.hw, spec, lib.dtype.bytes(), k.l0, k.l1)
+                {
+                    report.diagnostics.push(d.with_op(lib.op).with_kernel(li, ki));
+                }
+            }
+        }
+        report
+    }
+
+    /// Pass 4: alias fixpoints, dtype agreement, artifact resolution,
+    /// embedded payload fingerprints.
+    fn audit_aliases(&self, report: &mut AuditReport) {
+        for op in OpKind::ALL {
+            let spec = op.spec();
+            if spec.chain_kernels() == 0 {
+                report.diagnostics.push(
+                    Diagnostic::error("alias.bad_chain", "chain_kernels() must be >= 1")
+                        .with_op(op),
+                );
+            }
+            // The alias chain must reach a fixpoint within |ALL| hops
+            // with the iteration-space rank preserved at every hop
+            // (aliased measurements re-use the op's own tiles).
+            let mut cur = op;
+            for hop in 0.. {
+                let next = cur.spec().measurement_op();
+                if next == cur {
+                    break;
+                }
+                if next.spec().rank() != cur.spec().rank() {
+                    report.diagnostics.push(
+                        Diagnostic::error(
+                            "alias.rank_mismatch",
+                            format!(
+                                "measurement alias {cur} -> {next} changes rank \
+                                 {} -> {}",
+                                cur.spec().rank(),
+                                next.spec().rank()
+                            ),
+                        )
+                        .with_op(op),
+                    );
+                    break;
+                }
+                if hop + 1 >= OpKind::ALL.len() {
+                    report.diagnostics.push(
+                        Diagnostic::error(
+                            "alias.no_fixpoint",
+                            format!(
+                                "measurement alias chain from {op} has no fixpoint \
+                                 within {} hops",
+                                OpKind::ALL.len()
+                            ),
+                        )
+                        .with_op(op),
+                    );
+                    break;
+                }
+                cur = next;
+            }
+        }
+        let hw = &self.selector.hw;
+        for (li, lib) in self.selector.libraries.iter().enumerate() {
+            let spec = lib.op.spec();
+            for (ki, k) in lib.kernels.iter().enumerate() {
+                if k.backend >= hw.backends.len() {
+                    report.diagnostics.push(
+                        Diagnostic::error(
+                            "artifact.bad_backend",
+                            format!("backend index {} out of range", k.backend),
+                        )
+                        .with_op(lib.op)
+                        .with_kernel(li, ki),
+                    );
+                    continue;
+                }
+                if hw.backends[k.backend].dtype_bytes != lib.dtype.bytes() {
+                    report.diagnostics.push(
+                        Diagnostic::error(
+                            "artifact.dtype_mismatch",
+                            format!(
+                                "library dtype {} ({}B) vs backend {} ({}B)",
+                                lib.dtype,
+                                lib.dtype.bytes(),
+                                hw.backends[k.backend].name,
+                                hw.backends[k.backend].dtype_bytes
+                            ),
+                        )
+                        .with_op(lib.op)
+                        .with_kernel(li, ki),
+                    );
+                }
+                if let Some(m) = self.manifest {
+                    let name = spec.artifact_name(k.l1, lib.dtype);
+                    match m.find(&name) {
+                        None => report.diagnostics.push(
+                            Diagnostic::error(
+                                "artifact.unresolved",
+                                format!("artifact {name:?} not in manifest"),
+                            )
+                            .with_op(lib.op)
+                            .with_kernel(li, ki)
+                            .with_entry(name),
+                        ),
+                        Some(e) if e.in_dtype() != lib.dtype => report.diagnostics.push(
+                            Diagnostic::error(
+                                "artifact.dtype_mismatch",
+                                format!(
+                                    "artifact {name:?} is {} but the library is {}",
+                                    e.in_dtype(),
+                                    lib.dtype
+                                ),
+                            )
+                            .with_op(lib.op)
+                            .with_kernel(li, ki)
+                            .with_entry(name),
+                        ),
+                        Some(_) => {}
+                    }
+                }
+            }
+            // Embedded schema-v3 payloads must adopt cleanly for this
+            // selector; a foreign fingerprint is only a warning (the
+            // payload would be refused at load, never mis-served).
+            if !lib.dispatch.is_empty() {
+                if let Err(d) = DispatchTable::from_data_checked(self.selector, &lib.dispatch)
+                {
+                    let d = if d.code == "load.fingerprint_mismatch" {
+                        Diagnostic {
+                            severity: Severity::Warning,
+                            message: format!(
+                                "{} (payload built for a different selector — \
+                                 adoption would refuse it)",
+                                d.message
+                            ),
+                            ..d
+                        }
+                    } else {
+                        d
+                    };
+                    report.diagnostics.push(d.with_entry(format!("library #{li}")));
+                }
+            }
+        }
+    }
+}
+
+/// Convenience wrapper over [`PlanAuditor`]: audit a selector's
+/// libraries (write-sets, capacities, aliases/artifacts).
+pub fn audit(selector: &Selector, cfg: &AuditConfig) -> AuditReport {
+    PlanAuditor::new(selector, cfg.clone()).audit()
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1: write-set disjointness + exact cover
+// ---------------------------------------------------------------------------
+
+/// Prove one kernel's launch-grid write partition over every output
+/// axis, symbolically up to the per-axis horizons. Public so seeded
+/// corruption tests can inject a mock [`OpSpec`] with an overlapping
+/// footprint and assert the exact diagnostic.
+pub fn audit_write_sets(
+    spec: &dyn OpSpec,
+    l1: Tile,
+    horizons: &[usize],
+    segments: &mut usize,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for (ax, tax) in spec.write_axes() {
+        if ax >= spec.rank() || tax >= l1.rank() {
+            diags.push(
+                Diagnostic::error(
+                    "writeset.bad_axis",
+                    format!("write_axes maps output axis {ax} to tile axis {tax}"),
+                )
+                .with_axis(ax),
+            );
+            continue;
+        }
+        let extent = l1[tax];
+        if extent == 0 {
+            diags.push(
+                Diagnostic::error("writeset.bad_axis", "zero L1 extent on an output axis")
+                    .with_axis(ax),
+            );
+            continue;
+        }
+        if let Some(d) = audit_write_axis(spec, extent, horizons[ax], segments) {
+            // Lift the per-axis refutation to a full problem shape:
+            // the L1 tile with the refuting extent on this axis.
+            let mut dims = l1;
+            if let Some(bad) = d.counterexample {
+                dims[ax] = bad[0];
+            }
+            diags.push(Diagnostic { counterexample: Some(dims), ..d }.with_axis(ax));
+        }
+    }
+    diags
+}
+
+/// Symbolic per-axis proof: split `[1, horizon]` at multiples of
+/// `extent`; within one segment the grid `g = ceil(d / extent)` is
+/// constant and every footprint is affine in `d`, so both endpoints +
+/// non-terminal stability prove the whole segment. Returns the first
+/// refutation (counterexample dim in `counterexample[0]`).
+fn audit_write_axis(
+    spec: &dyn OpSpec,
+    extent: usize,
+    horizon: usize,
+    segments: &mut usize,
+) -> Option<Diagnostic> {
+    let refute = |code: &'static str, d: usize, msg: String| {
+        Some(Diagnostic::error(code, msg).with_counterexample(Tile::new(&[d])))
+    };
+    let mut prev = 0usize;
+    let mut edge = 0usize;
+    while edge < horizon.max(1) {
+        edge = (edge + extent).min(horizon.max(1));
+        *segments += 1;
+        let (d_lo, d_hi) = (prev + 1, edge);
+        let g = ceil_div(d_hi, extent);
+        if ceil_div(d_lo, extent) != g {
+            // Unreachable for a multiples-of-extent split; kept so a
+            // broken lattice refutes loudly instead of proving nothing.
+            return refute(
+                "writeset.grid_unstable",
+                d_lo,
+                format!("grid changes inside segment ({prev}, {edge}]"),
+            );
+        }
+        for d in [d_lo, d_hi] {
+            // Partition check at one segment endpoint: intervals chain
+            // start-to-end from 0 to d with no gap, overlap, empty
+            // in-grid cell, or out-of-bounds write.
+            let mut end = 0usize;
+            for i in 0..g {
+                let (s, t) = spec.write_footprint(d, extent, i);
+                if t > d {
+                    return refute(
+                        "writeset.out_of_bounds",
+                        d,
+                        format!("cell {i} writes [{s}, {t}) past the output edge {d}"),
+                    );
+                }
+                if s < end {
+                    return refute(
+                        "writeset.overlap",
+                        d,
+                        format!("cell {i} writes [{s}, {t}) overlapping [0, {end})"),
+                    );
+                }
+                if s > end {
+                    return refute(
+                        "writeset.gap",
+                        d,
+                        format!("cell {i} writes [{s}, {t}) leaving [{end}, {s}) uncovered"),
+                    );
+                }
+                if t <= s {
+                    return refute(
+                        "writeset.gap",
+                        d,
+                        format!("in-grid cell {i} of {g} writes nothing"),
+                    );
+                }
+                end = t;
+            }
+            if end != d {
+                return refute(
+                    "writeset.gap",
+                    d,
+                    format!("grid covers [0, {end}) of [0, {d})"),
+                );
+            }
+            // Beyond-grid cells (the batched path's batch-edge break)
+            // must write nothing.
+            let (s, t) = spec.write_footprint(d, extent, g);
+            if t > s {
+                return refute(
+                    "writeset.overlap",
+                    d,
+                    format!("beyond-grid cell {g} writes [{s}, {t})"),
+                );
+            }
+        }
+        // Affine-segment stability: non-terminal footprints must not
+        // depend on d inside the segment (the terminal cell's end is
+        // pinned to d by the endpoint checks above).
+        for i in 0..g.saturating_sub(1) {
+            if spec.write_footprint(d_lo, extent, i) != spec.write_footprint(d_hi, extent, i) {
+                return refute(
+                    "writeset.grid_unstable",
+                    d_lo,
+                    format!("non-terminal cell {i} footprint varies inside ({prev}, {edge}]"),
+                );
+            }
+        }
+        prev = edge;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Pass 2: capacity bounds at closed-form extrema
+// ---------------------------------------------------------------------------
+
+/// Prove one kernel's working sets fit the L0/L1 capacities for every
+/// admissible shape: one `working_set` evaluation at the per-axis
+/// extrema corner per level (monotonicity makes the corner the
+/// supremum), plus the L0-per-L1 concurrency bound.
+pub fn audit_capacity(
+    hw: &HwSpec,
+    spec: &dyn OpSpec,
+    dtype_bytes: usize,
+    l0: Tile,
+    l1: Tile,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for (level, tile, code) in
+        [(0usize, l0, "capacity.l0_exceeded"), (1, l1, "capacity.l1_exceeded")]
+    {
+        let corner = spec.axis_extrema(tile);
+        let ws = spec.working_set(corner, dtype_bytes);
+        let cap = hw.level(level).capacity_bytes;
+        if ws > cap {
+            diags.push(
+                Diagnostic::error(
+                    code,
+                    format!(
+                        "working set {ws}B at the extrema corner exceeds L{level} \
+                         capacity {cap}B ({})",
+                        hw.level(level).name
+                    ),
+                )
+                .with_counterexample(corner),
+            );
+        }
+    }
+    let conc = spec.spatial_iters(l1, l0);
+    if conc > hw.max_l0_per_l1 as usize {
+        diags.push(
+            Diagnostic::error(
+                "capacity.concurrency",
+                format!(
+                    "{conc} parallel L0 tiles per L1 unit exceed the hardware \
+                     bound {}",
+                    hw.max_l0_per_l1
+                ),
+            )
+            .with_counterexample(l1),
+        );
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------------
+// Pass 3: dispatch-table region soundness
+// ---------------------------------------------------------------------------
+
+/// Cap on per-table findings so one systemic corruption doesn't flood
+/// the report with thousands of per-cell repeats.
+const MAX_TABLE_DIAGS: usize = 8;
+
+/// Prove every cell of every (op, mode) table serves the first strict
+/// argmin of the eligible fast-path scan — the machine-checked version
+/// of the dispatch layer's "provably identical to fresh selection"
+/// claim. See the module docs for why one representative per fine
+/// cell is a proof rather than a sample.
+pub fn audit_dispatch_table(selector: &Selector, table: &DispatchTable) -> AuditReport {
+    let mut report = AuditReport::default();
+    if !table.matches(selector) {
+        report.diagnostics.push(Diagnostic::error(
+            "dispatch.fingerprint_mismatch",
+            "table was built for a different selector (hardware spec or library set)",
+        ));
+        return report;
+    }
+    for t in &table.tables {
+        report.tables_checked += 1;
+        audit_op_table(selector, t, &mut report);
+    }
+    report
+}
+
+fn audit_op_table(selector: &Selector, t: &dispatch::OpTable, report: &mut AuditReport) {
+    let op = t.op;
+    let mode = t.mode;
+    let mode_name = dispatch::mode_name(mode);
+    let diag = |d: Diagnostic| d.with_op(op).with_mode(&mode_name);
+    let serving = selector.serving_op(op);
+    let chain = selector.chain_factor(op);
+    let eligible = selector.eligible_fast(serving, mode);
+    if eligible.is_empty() {
+        report.diagnostics.push(diag(Diagnostic::error(
+            "dispatch.no_kernels",
+            "table exists but no fast-path kernel serves this (op, mode)",
+        )));
+        return;
+    }
+    let rank = op.spec().rank();
+    if t.edges.len() != rank {
+        report.diagnostics.push(diag(Diagnostic::error(
+            "dispatch.bad_edges",
+            format!("{} edge axes for a rank-{rank} op", t.edges.len()),
+        )));
+        return;
+    }
+    // The fine lattice: every eligible L1-extent multiple up to the
+    // table's own effective horizon, per axis. Between consecutive
+    // fine edges no eligible kernel's launch grid can change, so the
+    // argmin is constant — one representative per fine cell is exact.
+    let mut fine: Vec<Vec<usize>> = Vec::with_capacity(rank);
+    let mut off_lattice = false;
+    for a in 0..rank {
+        let te = &t.edges[a];
+        if te.is_empty() || te.windows(2).any(|w| w[0] >= w[1]) {
+            report.diagnostics.push(
+                diag(Diagnostic::error(
+                    "dispatch.bad_edges",
+                    "empty or non-increasing edge vector",
+                ))
+                .with_axis(a),
+            );
+            return;
+        }
+        let horizon = *te.last().unwrap();
+        let mut extents: Vec<usize> = Vec::new();
+        for &fi in &eligible {
+            let e = selector.fast[fi].l1[a];
+            if !extents.contains(&e) {
+                extents.push(e);
+            }
+        }
+        let f = dispatch::axis_edges(&extents, horizon);
+        // Every stored (merged) edge must lie ON the fine lattice:
+        // region merging keeps a run's last fine edge, so an off-
+        // lattice edge can only come from tampering — and it would
+        // split a grid-constant segment, making lookups shape-
+        // dependent inside one cell.
+        for &edge in te {
+            if f.binary_search(&edge).is_err() {
+                off_lattice = true;
+                report.diagnostics.push(
+                    diag(Diagnostic::error(
+                        "dispatch.edge_off_lattice",
+                        format!(
+                            "stored edge {edge} is not an eligible L1-extent \
+                             multiple (or the horizon)"
+                        ),
+                    ))
+                    .with_axis(a),
+                );
+            }
+        }
+        fine.push(f);
+    }
+    if off_lattice {
+        return; // winner lookups inside a split segment are meaningless
+    }
+    // Exhaustive fine-cell pass: representative dims = per-axis upper
+    // edges; recompute the first strict argmin with the scan's exact
+    // arithmetic, order and tie-break; compare with the table lookup.
+    let n_cells: usize = fine.iter().map(Vec::len).product();
+    let mut digits = vec![0usize; rank];
+    let mut table_diags = 0usize;
+    for _ in 0..n_cells {
+        report.cells_checked += 1;
+        let mut rep = Tile::ones(rank);
+        for a in 0..rank {
+            rep[a] = fine[a][digits[a]];
+        }
+        let mut best = f64::INFINITY;
+        let mut best_fi = eligible[0];
+        for &fi in &eligible {
+            let secs = selector.fast[fi].estimate(rep).0 * chain;
+            if secs < best {
+                best = secs;
+                best_fi = fi;
+            }
+        }
+        // Table lookup at the representative (same binary search as
+        // `DispatchTable::select`).
+        let mut flat = 0usize;
+        let mut covered = true;
+        for a in 0..rank {
+            let idx = t.edges[a].partition_point(|&edge| edge < rep[a]);
+            if idx == t.edges[a].len() {
+                covered = false;
+                break;
+            }
+            flat = flat * t.edges[a].len() + idx;
+        }
+        if !covered {
+            report.diagnostics.push(
+                diag(Diagnostic::error(
+                    "dispatch.coverage_gap",
+                    "in-horizon representative not covered by the stored edges",
+                ))
+                .with_counterexample(rep),
+            );
+            return;
+        }
+        let stored = t.winners[flat] as usize;
+        if stored != best_fi && table_diags < MAX_TABLE_DIAGS {
+            let fk = selector.fast.get(stored);
+            let d = match fk {
+                None => diag(Diagnostic::error(
+                    "dispatch.winner_ineligible",
+                    format!("winner index {stored} out of fast-path range"),
+                )),
+                Some(fk) if !eligible.contains(&stored) => diag(Diagnostic::error(
+                    "dispatch.winner_ineligible",
+                    format!("winner (lib {}, kernel {}) cannot serve this (op, mode)", fk.lib, fk.kernel),
+                ))
+                .with_kernel(fk.lib, fk.kernel),
+                Some(fk) => {
+                    let secs = fk.estimate(rep).0 * chain;
+                    if secs > best {
+                        diag(Diagnostic::error(
+                            "dispatch.winner_dominated",
+                            format!(
+                                "stored winner estimates {secs:.3e}s but (lib {}, \
+                                 kernel {}) estimates {best:.3e}s across this cell",
+                                selector.fast[best_fi].lib, selector.fast[best_fi].kernel
+                            ),
+                        ))
+                        .with_kernel(fk.lib, fk.kernel)
+                    } else {
+                        diag(Diagnostic::error(
+                            "dispatch.tie_break",
+                            format!(
+                                "stored winner ties the argmin but is not the scan's \
+                                 FIRST argmin (lib {}, kernel {})",
+                                selector.fast[best_fi].lib, selector.fast[best_fi].kernel
+                            ),
+                        ))
+                        .with_kernel(fk.lib, fk.kernel)
+                    }
+                }
+            };
+            report.diagnostics.push(d.with_counterexample(rep));
+            table_diags += 1;
+        }
+        for a in (0..rank).rev() {
+            digits[a] += 1;
+            if digits[a] < fine[a].len() {
+                break;
+            }
+            digits[a] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

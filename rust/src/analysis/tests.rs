@@ -1,0 +1,328 @@
+use super::*;
+use crate::compiler::{compile, CompileOpts};
+use crate::coordinator::HwMode;
+use crate::cost::hybrid::AnalyzerConfig;
+use crate::dispatch::DispatchConfig;
+use crate::hw::presets;
+use crate::ir::{Axis, DType};
+use crate::profiler::SimProfiler;
+use crate::sim::Simulator;
+
+fn selector(seed: u64) -> Selector {
+    let hw = presets::a100();
+    let cfg = AnalyzerConfig::default_for(&hw);
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+    let libs = vec![
+        compile(&hw, OpKind::Gemm, DType::F32, &cfg, &mut prof, &CompileOpts::default())
+            .library,
+        compile(&hw, OpKind::Gemm, DType::F16, &cfg, &mut prof, &CompileOpts::default())
+            .library,
+        compile(&hw, OpKind::BatchedGemm, DType::F16, &cfg, &mut prof, &CompileOpts::default())
+            .library,
+    ];
+    Selector::new(hw, libs)
+}
+
+fn dispatch_config() -> DispatchConfig {
+    DispatchConfig {
+        horizon: 48,
+        batch_horizon: 6,
+        modes: vec![HwMode::Adaptive, HwMode::Only("cuda_core_f32")],
+        max_cells: 1 << 14,
+        ..DispatchConfig::default()
+    }
+}
+
+#[test]
+fn clean_selector_audits_clean() {
+    let s = selector(11);
+    let report = audit(&s, &AuditConfig::default());
+    assert!(
+        report.diagnostics.is_empty(),
+        "expected a clean audit, got: {:?}",
+        report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+    assert!(report.kernels_checked > 0);
+    assert!(report.segments_checked > 0);
+}
+
+#[test]
+fn clean_dispatch_table_audits_clean() {
+    let s = selector(11);
+    let table = DispatchTable::for_selector(&s, &dispatch_config());
+    let report = audit_dispatch_table(&s, &table);
+    assert!(
+        report.diagnostics.is_empty(),
+        "expected a clean table audit, got: {:?}",
+        report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+    assert_eq!(report.tables_checked, table.stats.tables);
+    assert!(report.cells_checked > 0);
+}
+
+#[test]
+fn foreign_table_is_fingerprint_mismatch() {
+    let s = selector(11);
+    // A selector over a strictly smaller library set: the fingerprint
+    // hashes every library's identity, so this is provably foreign.
+    let other = Selector::new(s.hw.clone(), s.libraries[..1].to_vec());
+    let table = DispatchTable::for_selector(&other, &dispatch_config());
+    let report = audit_dispatch_table(&s, &table);
+    assert_eq!(report.errors(), 1);
+    assert_eq!(report.diagnostics[0].code, "dispatch.fingerprint_mismatch");
+}
+
+/// Satellite: a tampered interval edge is named as exactly the
+/// off-lattice diagnostic (the tamper target is chosen off the same
+/// fine lattice the auditor derives, so the test is deterministic).
+#[test]
+fn tampered_edge_is_caught_off_lattice() {
+    let s = selector(11);
+    let mut table = DispatchTable::for_selector(&s, &dispatch_config());
+    let mut tampered = false;
+    'search: for t in &mut table.tables {
+        let eligible = s.eligible_fast(s.serving_op(t.op), t.mode);
+        for a in 0..t.edges.len() {
+            let horizon = *t.edges[a].last().unwrap();
+            let mut extents: Vec<usize> = Vec::new();
+            for &fi in &eligible {
+                let e = s.fast[fi].l1[a];
+                if !extents.contains(&e) {
+                    extents.push(e);
+                }
+            }
+            let fine = crate::dispatch::axis_edges(&extents, horizon);
+            // A non-terminal edge whose successor is off the lattice:
+            // bumping it by one cannot collide with the next stored
+            // edge (stored edges are a subset of the lattice).
+            for j in 0..t.edges[a].len().saturating_sub(1) {
+                let bumped = t.edges[a][j] + 1;
+                if fine.binary_search(&bumped).is_err() && bumped < t.edges[a][j + 1] {
+                    t.edges[a][j] = bumped;
+                    tampered = true;
+                    break 'search;
+                }
+            }
+        }
+    }
+    assert!(tampered, "no tamperable off-lattice edge found in any table");
+    let report = audit_dispatch_table(&s, &table);
+    assert!(report.errors() > 0);
+    assert!(
+        report.diagnostics.iter().any(|d| d.code == "dispatch.edge_off_lattice"),
+        "expected dispatch.edge_off_lattice, got: {:?}",
+        report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+}
+
+/// Satellite: a winner swapped inside a merged region is refuted with
+/// the dominated diagnostic and a counterexample shape.
+#[test]
+fn swapped_winner_is_caught_dominated() {
+    let s = selector(11);
+    let mut table = DispatchTable::for_selector(&s, &dispatch_config());
+    let mut tampered = false;
+    'search: for t in &mut table.tables {
+        let serving = s.serving_op(t.op);
+        let chain = s.chain_factor(t.op);
+        let eligible = s.eligible_fast(serving, t.mode);
+        if eligible.len() < 2 {
+            continue;
+        }
+        let rank = t.edges.len();
+        let n_cells: usize = t.edges.iter().map(Vec::len).product();
+        for flat in 0..n_cells {
+            // Representative of this merged cell: its per-axis upper
+            // edges (which are fine-lattice edges, so the auditor is
+            // guaranteed to evaluate there).
+            let mut rem = flat;
+            let mut rep = Tile::ones(rank);
+            for a in (0..rank).rev() {
+                rep[a] = t.edges[a][rem % t.edges[a].len()];
+                rem /= t.edges[a].len();
+            }
+            let best = eligible
+                .iter()
+                .map(|&fi| s.fast[fi].estimate(rep).0 * chain)
+                .fold(f64::INFINITY, f64::min);
+            // A strictly-dominated rival at this representative.
+            if let Some(&rival) = eligible
+                .iter()
+                .find(|&&fi| s.fast[fi].estimate(rep).0 * chain > best)
+            {
+                t.winners[flat] = rival as u32;
+                tampered = true;
+                break 'search;
+            }
+        }
+    }
+    assert!(tampered, "no cell with a strictly-dominated rival found");
+    let report = audit_dispatch_table(&s, &table);
+    assert!(report.errors() > 0);
+    let hit = report
+        .diagnostics
+        .iter()
+        .find(|d| d.code == "dispatch.winner_dominated")
+        .unwrap_or_else(|| {
+            panic!(
+                "expected dispatch.winner_dominated, got: {:?}",
+                report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+            )
+        });
+    assert!(hit.counterexample.is_some(), "refutation must carry a counterexample shape");
+}
+
+/// Satellite: an undersized capacity is named per level, with the
+/// extrema corner as the counterexample.
+#[test]
+fn undersized_capacity_is_caught() {
+    let mut s = selector(11);
+    s.hw.levels[1].capacity_bytes = 1;
+    let report = audit(&s, &AuditConfig::default());
+    assert!(report.errors() > 0);
+    assert!(
+        report.diagnostics.iter().any(|d| d.code == "capacity.l1_exceeded"),
+        "expected capacity.l1_exceeded, got: {:?}",
+        report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+    // Every capacity refutation names the (lib, kernel) coordinates.
+    assert!(report
+        .diagnostics
+        .iter()
+        .filter(|d| d.code == "capacity.l1_exceeded")
+        .all(|d| d.kernel.is_some() && d.counterexample.is_some()));
+}
+
+/// A mock op whose grid cells each write one element too far — the
+/// runtime scatter bug the write-set pass exists to refute.
+struct OverlappingWrites;
+
+impl OpSpec for OverlappingWrites {
+    fn name(&self) -> &'static str {
+        "mock_overlap"
+    }
+    fn kind(&self) -> OpKind {
+        OpKind::Gemm
+    }
+    fn axes(&self) -> &'static [Axis] {
+        OpKind::Gemm.spec().axes()
+    }
+    fn working_set(&self, tile: Tile, in_bytes: usize) -> u64 {
+        OpKind::Gemm.spec().working_set(tile, in_bytes)
+    }
+    fn min_bytes(&self, iter: Tile, dtype: DType) -> f64 {
+        OpKind::Gemm.spec().min_bytes(iter, dtype)
+    }
+    fn load_bytes_per_step(&self, parent: Tile, child: Tile, dtype: DType) -> f64 {
+        OpKind::Gemm.spec().load_bytes_per_step(parent, child, dtype)
+    }
+    fn store_bytes(&self, parent: Tile) -> f64 {
+        OpKind::Gemm.spec().store_bytes(parent)
+    }
+    fn artifact_name(&self, l1: Tile, dtype: DType) -> String {
+        OpKind::Gemm.spec().artifact_name(l1, dtype)
+    }
+    fn write_footprint(&self, d: usize, e: usize, i: usize) -> (usize, usize) {
+        // One element of overlap into the next cell's region.
+        ((i * e).min(d), ((i + 1) * e + 1).min(d))
+    }
+}
+
+/// A mock op whose terminal cell stops one element short of the edge.
+struct GappedWrites;
+
+impl OpSpec for GappedWrites {
+    fn name(&self) -> &'static str {
+        "mock_gap"
+    }
+    fn kind(&self) -> OpKind {
+        OpKind::Gemm
+    }
+    fn axes(&self) -> &'static [Axis] {
+        OpKind::Gemm.spec().axes()
+    }
+    fn working_set(&self, tile: Tile, in_bytes: usize) -> u64 {
+        OpKind::Gemm.spec().working_set(tile, in_bytes)
+    }
+    fn min_bytes(&self, iter: Tile, dtype: DType) -> f64 {
+        OpKind::Gemm.spec().min_bytes(iter, dtype)
+    }
+    fn load_bytes_per_step(&self, parent: Tile, child: Tile, dtype: DType) -> f64 {
+        OpKind::Gemm.spec().load_bytes_per_step(parent, child, dtype)
+    }
+    fn store_bytes(&self, parent: Tile) -> f64 {
+        OpKind::Gemm.spec().store_bytes(parent)
+    }
+    fn artifact_name(&self, l1: Tile, dtype: DType) -> String {
+        OpKind::Gemm.spec().artifact_name(l1, dtype)
+    }
+    fn write_footprint(&self, d: usize, e: usize, i: usize) -> (usize, usize) {
+        // Edge cropping off by one: the terminal cell misses the last
+        // output element whenever d is not a tile multiple.
+        ((i * e).min(d), ((i + 1) * e).min(d.saturating_sub(d % e)).max((i * e).min(d)))
+    }
+}
+
+/// Satellite: an overlapping write-set injected via a mock `OpSpec` is
+/// refuted with the exact overlap diagnostic (and the gap twin with
+/// the gap diagnostic) — the clean default passes untouched.
+#[test]
+fn mock_write_footprints_are_refuted() {
+    let l1 = Tile::new(&[8, 8, 16]);
+    let horizons = [48usize, 48, 48];
+    let mut segs = 0usize;
+
+    let clean = audit_write_sets(OpKind::Gemm.spec(), l1, &horizons, &mut segs);
+    assert!(clean.is_empty(), "default footprint must prove clean: {clean:?}");
+    assert!(segs > 0);
+
+    let overlap = audit_write_sets(&OverlappingWrites, l1, &horizons, &mut segs);
+    assert!(
+        overlap.iter().any(|d| d.code == "writeset.overlap"),
+        "expected writeset.overlap, got: {:?}",
+        overlap.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+    assert!(overlap.iter().all(|d| d.counterexample.is_some()));
+
+    let gap = audit_write_sets(&GappedWrites, l1, &horizons, &mut segs);
+    assert!(
+        gap.iter().any(|d| d.code == "writeset.gap"),
+        "expected writeset.gap, got: {:?}",
+        gap.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+}
+
+/// Satellite: strict-loader rejections carry the (op, mode, entry)
+/// context through the shared diagnostic struct.
+#[test]
+fn loader_diagnostics_name_the_offender() {
+    let s = selector(11);
+    let table = DispatchTable::for_selector(&s, &dispatch_config());
+    let mut data = table.to_data(&s);
+
+    // Tampered content → digest mismatch naming the table.
+    data[0].edges[0][0] += 1;
+    let err = DispatchTable::from_data_checked(&s, &data).unwrap_err();
+    assert_eq!(err.code, "load.digest_mismatch");
+    assert_eq!(err.op, Some(data[0].op));
+    assert!(err.entry.as_deref() == Some("table #0"));
+
+    // Foreign fingerprint → named as such (and `from_data` still
+    // answers None, the PR 5 contract).
+    let mut foreign = table.to_data(&s);
+    for d in &mut foreign {
+        d.fingerprint ^= 1;
+    }
+    let err = DispatchTable::from_data_checked(&s, &foreign).unwrap_err();
+    assert_eq!(err.code, "load.fingerprint_mismatch");
+    assert!(DispatchTable::from_data(&s, &foreign).is_none());
+}
+
+/// Aliases of the shipped ops reach their fixpoints; the audit's
+/// alias pass proves it for every op (not just the compiled ones).
+#[test]
+fn alias_pass_covers_every_op() {
+    let s = selector(11);
+    let report = audit(&s, &AuditConfig::default());
+    assert!(report.diagnostics.iter().all(|d| !d.code.starts_with("alias.")));
+}

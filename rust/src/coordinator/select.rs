@@ -250,6 +250,18 @@ impl Selector {
         }
     }
 
+    /// Fast-path indices eligible to serve `(serving op, mode)`, in
+    /// scan order — the ONE definition of eligibility shared by
+    /// [`Selector::select_plan`]'s scan, the offline dispatch-table
+    /// build ([`crate::dispatch`]) and the plan auditor
+    /// ([`crate::analysis`]), so a table or audit verdict quantifies
+    /// over exactly the kernels the online scan would consider.
+    pub(crate) fn eligible_fast(&self, serving: OpKind, mode: HwMode) -> Vec<usize> {
+        (0..self.fast.len())
+            .filter(|&i| self.fast[i].op == serving && self.mode_admits(&self.fast[i], mode))
+            .collect()
+    }
+
     /// Construct the full [`Selection`] of one fast-path entry at a
     /// runtime shape WITHOUT re-scanning the library: the padded
     /// problem, grid and estimate all fall out of `(kernel, grid)` via

@@ -49,6 +49,7 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use crate::analysis::Diagnostic;
 use crate::coordinator::select::{HwMode, Selection, Selector};
 use crate::ir::{ceil_div, AxisRole, IterSpace, OpKind, Tile};
 use crate::util::json::Json;
@@ -136,17 +137,20 @@ impl DispatchConfig {
 /// One (requested op, mode) table: per-axis interval upper edges and
 /// the row-major winner lattice (indices into the selector's fast
 /// path, so reconstruction shares the scan's exact arithmetic).
+/// `pub(crate)` so the plan auditor ([`crate::analysis`]) can re-prove
+/// every cell's argmin (and its seeded-corruption tests can tamper
+/// with edges and winners in place).
 #[derive(Debug, Clone)]
-struct OpTable {
-    op: OpKind,
-    mode: HwMode,
+pub(crate) struct OpTable {
+    pub(crate) op: OpKind,
+    pub(crate) mode: HwMode,
     /// Per-axis strictly-increasing interval upper edges (inclusive);
     /// `edges[a].last()` is the effective horizon of axis `a`.
-    edges: Vec<Vec<usize>>,
+    pub(crate) edges: Vec<Vec<usize>>,
     /// Row-major winners (axis 0 outermost): index into
     /// `Selector::fast`.
-    winners: Vec<u32>,
-    clamped: bool,
+    pub(crate) winners: Vec<u32>,
+    pub(crate) clamped: bool,
 }
 
 /// Offline build statistics.
@@ -172,7 +176,7 @@ pub struct BuildStats {
 /// built for a different one.
 #[derive(Debug, Clone)]
 pub struct DispatchTable {
-    tables: Vec<OpTable>,
+    pub(crate) tables: Vec<OpTable>,
     fingerprint: u64,
     pub stats: BuildStats,
 }
@@ -213,7 +217,7 @@ pub fn selector_fingerprint(selector: &Selector) -> u64 {
 /// L1 extent below the horizon, plus the horizon itself. Between two
 /// consecutive edges no kernel's `ceil(dim / extent)` can change, so
 /// the selection argmin is constant per interval (see module docs).
-fn axis_edges(extents: &[usize], horizon: usize) -> Vec<usize> {
+pub(crate) fn axis_edges(extents: &[usize], horizon: usize) -> Vec<usize> {
     let mut edges: Vec<usize> = Vec::new();
     for &e in extents {
         let mut m = e;
@@ -351,11 +355,7 @@ fn build_op_table(
 ) -> Option<(OpTable, usize)> {
     let serving = selector.serving_op(op);
     let chain = selector.chain_factor(op);
-    let eligible: Vec<usize> = (0..selector.fast.len())
-        .filter(|&i| {
-            selector.fast[i].op == serving && selector.mode_admits(&selector.fast[i], mode)
-        })
-        .collect();
+    let eligible = selector.eligible_fast(serving, mode);
     if eligible.is_empty() {
         return None;
     }
@@ -636,8 +636,21 @@ impl DispatchTable {
     /// fingerprint does not match the selector (tables built for a
     /// different hardware spec or library set), when a mode names an
     /// unknown backend, or when any lattice is malformed — never a
-    /// silently-wrong table.
+    /// silently-wrong table. Thin wrapper over
+    /// [`DispatchTable::from_data_checked`] for callers that only need
+    /// the yes/no answer.
     pub fn from_data(selector: &Selector, data: &[TableData]) -> Option<DispatchTable> {
+        DispatchTable::from_data_checked(selector, data).ok()
+    }
+
+    /// Strict adoption with a context-rich refusal: every rejection is
+    /// a structured [`Diagnostic`] naming the payload index and, once
+    /// parsed, the (op, mode) — the same diagnostic currency as the
+    /// plan auditor, so CLI and serving surfaces print one vocabulary.
+    pub fn from_data_checked(
+        selector: &Selector,
+        data: &[TableData],
+    ) -> Result<DispatchTable, Diagnostic> {
         let fingerprint = selector_fingerprint(selector);
         // (lib, kernel) → fast index.
         let by_pair: HashMap<(usize, usize), u32> = selector
@@ -648,34 +661,84 @@ impl DispatchTable {
             .collect();
         let mut tables = Vec::with_capacity(data.len());
         let mut stats = BuildStats::default();
-        for d in data {
+        for (di, d) in data.iter().enumerate() {
+            let reject = |code: &'static str, msg: String| {
+                Err(Diagnostic::error(code, msg)
+                    .with_op(d.op)
+                    .with_mode(&d.mode)
+                    .with_entry(format!("table #{di}")))
+            };
             if d.fingerprint != fingerprint {
-                return None;
+                return reject(
+                    "load.fingerprint_mismatch",
+                    format!(
+                        "payload fingerprint {:#018x} was built for a different \
+                         selector than {fingerprint:#018x}",
+                        d.fingerprint
+                    ),
+                );
             }
             // Content integrity: any corruption of edges / runs /
             // clamped since `to_data` is refused, never served.
             if d.digest != table_digest(d.op, &d.mode, &d.edges, &d.runs, d.clamped) {
-                return None;
+                return reject(
+                    "load.digest_mismatch",
+                    "content digest does not match the stored edges/runs".to_string(),
+                );
             }
-            let mode = parse_mode(&d.mode, selector)?;
+            let Some(mode) = parse_mode(&d.mode, selector) else {
+                return reject(
+                    "load.unknown_mode",
+                    format!("mode {:?} names no backend of this hardware spec", d.mode),
+                );
+            };
             if d.edges.len() != d.op.spec().rank() {
-                return None;
+                return reject(
+                    "load.rank_mismatch",
+                    format!(
+                        "{} edge axes for a rank-{} op",
+                        d.edges.len(),
+                        d.op.spec().rank()
+                    ),
+                );
             }
-            for e in &d.edges {
+            for (a, e) in d.edges.iter().enumerate() {
                 if e.is_empty() || e.windows(2).any(|w| w[0] >= w[1]) {
-                    return None;
+                    return Err(Diagnostic::error(
+                        "load.bad_edges",
+                        "empty or non-increasing edge vector".to_string(),
+                    )
+                    .with_op(d.op)
+                    .with_mode(&d.mode)
+                    .with_axis(a)
+                    .with_entry(format!("table #{di}")));
                 }
             }
             // Checked product: adversarial edge arrays must not
             // overflow (or allocate) their way past the strict loader.
-            let n_cells = d
+            let Some(n_cells) = d
                 .edges
                 .iter()
-                .try_fold(1usize, |acc, e| acc.checked_mul(e.len()))?;
+                .try_fold(1usize, |acc, e| acc.checked_mul(e.len()))
+            else {
+                return reject(
+                    "load.cell_overflow",
+                    "per-axis interval counts overflow the cell lattice".to_string(),
+                );
+            };
             let serving = selector.serving_op(d.op);
             let mut winners = Vec::with_capacity(n_cells);
-            for &(n, lib, kernel) in &d.runs {
-                let fi = *by_pair.get(&(lib, kernel))?;
+            for (ri, &(n, lib, kernel)) in d.runs.iter().enumerate() {
+                let Some(&fi) = by_pair.get(&(lib, kernel)) else {
+                    return Err(Diagnostic::error(
+                        "load.unknown_kernel",
+                        format!("run #{ri} names (lib {lib}, kernel {kernel}), not loaded"),
+                    )
+                    .with_op(d.op)
+                    .with_mode(&d.mode)
+                    .with_kernel(lib, kernel)
+                    .with_entry(format!("table #{di}")));
+                };
                 // Every winner must be a kernel the online scan could
                 // have picked for this (op, mode): right serving op
                 // (also pins the tile rank) and an admitted backend.
@@ -683,18 +746,38 @@ impl DispatchTable {
                 // payload — a tampered file is refused, never served.
                 let fk = &selector.fast[fi as usize];
                 if fk.op != serving || !selector.mode_admits(fk, mode) {
-                    return None;
+                    return Err(Diagnostic::error(
+                        "load.ineligible_winner",
+                        format!(
+                            "run #{ri} winner (lib {lib}, kernel {kernel}) cannot \
+                             serve {} in this mode",
+                            d.op
+                        ),
+                    )
+                    .with_op(d.op)
+                    .with_mode(&d.mode)
+                    .with_kernel(lib, kernel)
+                    .with_entry(format!("table #{di}")));
                 }
                 // Bound each run BEFORE materializing it: a corrupt
                 // run length must fail, not OOM (subtraction order
                 // keeps the check overflow-proof for huge `n`).
                 if n == 0 || n > n_cells - winners.len() {
-                    return None;
+                    return reject(
+                        "load.bad_run_length",
+                        format!(
+                            "run #{ri} length {n} with {} of {n_cells} cells filled",
+                            winners.len()
+                        ),
+                    );
                 }
                 winners.extend(std::iter::repeat_n(fi, n));
             }
             if winners.len() != n_cells {
-                return None;
+                return reject(
+                    "load.cell_count_mismatch",
+                    format!("runs fill {} of {n_cells} cells", winners.len()),
+                );
             }
             stats.tables += 1;
             stats.cells += n_cells;
@@ -707,11 +790,11 @@ impl DispatchTable {
                 clamped: d.clamped,
             });
         }
-        Some(DispatchTable { tables, fingerprint, stats })
+        Ok(DispatchTable { tables, fingerprint, stats })
     }
 }
 
-fn mode_name(mode: HwMode) -> String {
+pub(crate) fn mode_name(mode: HwMode) -> String {
     match mode {
         HwMode::Adaptive => "adaptive".to_string(),
         HwMode::Only(name) => format!("only:{name}"),
@@ -760,7 +843,9 @@ pub struct TableData {
 }
 
 /// Content digest of one serialized table (see [`TableData::digest`]).
-fn table_digest(
+/// `pub(crate)` so corruption tests can forge digest-consistent
+/// payloads that exercise the auditor rather than the loader.
+pub(crate) fn table_digest(
     op: OpKind,
     mode: &str,
     edges: &[Vec<usize>],

@@ -391,6 +391,55 @@ pub trait OpSpec: Sync {
         let _ = tile;
         None
     }
+
+    /// The parallel write model of the runtime's `run_cells` launch
+    /// grid: per OUTPUT axis, `(iteration-space axis, L1-tile axis
+    /// whose extent tiles it)`. The output index box is the product of
+    /// these axes' `[0, dims[axis])` ranges, and one grid cell's write
+    /// region is the box of per-axis [`OpSpec::write_footprint`]
+    /// intervals — per-axis separability is what lets the plan auditor
+    /// ([`crate::analysis`]) prove pairwise disjointness and exact
+    /// cover from the per-axis partitions alone.
+    ///
+    /// Default: every non-reduction axis is an output axis tiled by
+    /// its own L1 extent (GEMM writes (m, n), batched GEMM (b, m, n),
+    /// the conv family their delegated contraction view). Fused chains
+    /// whose output lives on other axes override this (attention's
+    /// context is (b, m, head_dim), with head_dim tiled by the L1
+    /// *n*-extent — the context contraction's output-column position).
+    fn write_axes(&self) -> Vec<(usize, usize)> {
+        self.axes()
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.role != AxisRole::Reduction)
+            .map(|(i, _)| (i, i))
+            .collect()
+    }
+
+    /// The half-open interval of output coordinates grid cell `i`
+    /// writes on one output axis of problem extent `d` tiled by L1
+    /// extent `e` — this must mirror the runtime scatter's edge
+    /// cropping exactly (`mrows = bm.min(m - m0)`), and cells at or
+    /// beyond the grid (`i >= ceil(d / e)`) must be empty (the batched
+    /// path's batch-edge `break`). The contract the auditor verifies
+    /// symbolically: within any two consecutive multiples of `e`, the
+    /// interval is an affine function of `d` (constant for non-terminal
+    /// cells, end = `d` for the terminal cell), so checking both
+    /// segment endpoints proves every in-segment shape.
+    fn write_footprint(&self, d: usize, e: usize, i: usize) -> (usize, usize) {
+        ((i * e).min(d), ((i + 1) * e).min(d))
+    }
+
+    /// Per-axis suprema of the admissible in-tile dim box of `tile` —
+    /// the closed-form corner where the (documented-monotone)
+    /// [`OpSpec::working_set`] formula attains its maximum over every
+    /// admissible runtime shape. Edge tiles are zero-padded to the full
+    /// tile, so the resident footprint never depends on the problem
+    /// dims and the supremum is the tile itself. The capacity audit
+    /// evaluates `working_set` once here instead of sampling shapes.
+    fn axis_extrema(&self, tile: Tile) -> Tile {
+        tile
+    }
 }
 
 /// C[M,N] = A[M,K] @ B[K,N] — the canonical contraction.
@@ -674,6 +723,14 @@ impl OpSpec for FusedAttention {
     fn softmax_tile(&self, tile: Tile) -> Option<(usize, usize)> {
         // One block's resident score tile: (b·m) rows of n columns.
         Some((tile[0] * tile[1], tile[2]))
+    }
+    fn write_axes(&self) -> Vec<(usize, usize)> {
+        // The chain's output is the context (b, m, head_dim) — seq_k
+        // (axis 2) is reduced away by softmax·context. head_dim (the
+        // space's k axis) sits in the context contraction's output-
+        // column position, so the runtime tiles it by the L1 tile's
+        // *n* extent (axis 2 of the tile), not its k extent.
+        vec![(0, 0), (1, 1), (3, 2)]
     }
 }
 

@@ -88,7 +88,21 @@
 //! lanes, the bucket-key derivation, the region-soundness argument and
 //! cache coherence with library reload; the `serve` bench and `vortex
 //! serve --mixed [--dispatch]` exercise it end to end.
+//!
+//! ## Static analysis
+//!
+//! The plan auditor ([`analysis`]) closes the loop on "sample-free":
+//! the invariants the runtime and serving layers depend on — disjoint
+//! parallel write-sets, working sets within `HwSpec` capacities,
+//! dispatch-table region soundness, measurement-alias fixpoints and
+//! artifact/dtype consistency — are *proved* symbolically over each
+//! axis interval (never at sampled shapes) by `vortex audit
+//! [--dispatch] [--deny warnings]`, which CI runs over every shipped
+//! preset × op × dtype. The "Static analysis layer" section of
+//! [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) gives the
+//! monotone-segment soundness argument.
 
+pub mod analysis;
 pub mod baselines;
 pub mod bench;
 pub mod candgen;

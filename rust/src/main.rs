@@ -47,6 +47,17 @@ USAGE:
                    demotes the cache to the beyond-horizon fallback.
                    `vortex --serve ...` is an alias for the
                    subcommand.)
+  vortex audit    [--testbed ...] [--op all|gemm|...] [--dtype f32|f16|bf16]
+                  [--lib dump.json] [--dispatch] [--horizon H]
+                  [--batch-horizon B] [--deny warnings] [--seed S]
+                  (symbolic plan auditor: proves parallel write-set
+                   disjointness, capacity bounds, measurement-alias
+                   fixpoints and artifact consistency over whole axis
+                   intervals — never at sampled shapes. --lib audits a
+                   dumped library including its embedded schema-v3
+                   tables; --dispatch builds dispatch tables in process
+                   and re-proves every cell's argmin. Exits 1 on any
+                   error, or on warnings too with --deny warnings.)
   vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|ops|serve|all>
                   [--out results/] [--seed S] [--full]
   vortex info
@@ -60,6 +71,7 @@ fn main() {
         "select" => cmd_select(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "audit" => cmd_audit(&args),
         "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         // `vortex --serve ...` flag form (serving-mode alias).
@@ -461,6 +473,99 @@ fn cmd_serve_mixed(
         );
     } else {
         println!("plan cache disabled (--no-cache): every batch ran fresh selection");
+    }
+}
+
+/// Symbolic plan auditor over a preset's full op × dtype grid (or a
+/// dumped library file): every diagnostic is printed, the exit code is
+/// the CI gate.
+fn cmd_audit(args: &Args) {
+    use vortex::analysis::{audit_dispatch_table, AuditConfig, PlanAuditor};
+    use vortex::compiler::MicroKernelLibrary;
+    use vortex::dispatch::{DispatchConfig, DispatchTable};
+    let hw = testbed_of(args);
+    let seed = args.get_u64("seed", 7);
+    let acfg = AuditConfig {
+        horizon: args.get_usize("horizon", 128),
+        batch_horizon: args.get_usize("batch-horizon", 8),
+    };
+    // The selector under audit: a dumped library file, or a fresh
+    // in-process compile of the preset's op × dtype grid (analytical
+    // analyzer unless overridden — the audit proves plan invariants,
+    // not cost-model accuracy, so the cheap analyzer is the default).
+    let libs: Vec<MicroKernelLibrary> = if let Some(path) = args.get("lib") {
+        let text = std::fs::read_to_string(path).expect("read --lib file");
+        let json = vortex::util::json::Json::parse(&text).expect("parse --lib JSON");
+        vec![MicroKernelLibrary::from_json(&json).expect("library schema")]
+    } else {
+        let cfg = if args.get("analyzer").is_some() {
+            analyzer_of(args, &hw)
+        } else {
+            AnalyzerConfig::analytical_only()
+        };
+        let ops: Vec<OpKind> = match args.get("op") {
+            None | Some("all") => OpKind::ALL.to_vec(),
+            Some(_) => vec![op_of(args)],
+        };
+        let dtypes: Vec<DType> = match args.get("dtype") {
+            Some(d) => vec![DType::parse(d).expect("bad --dtype")],
+            None => {
+                // One dtype per backend element width, read off the
+                // backend-name suffix (cuda_core_f32 → f32, mxu_bf16 →
+                // bf16) — the grid CI proves is the grid that serves.
+                let mut v: Vec<DType> = hw
+                    .backends
+                    .iter()
+                    .filter_map(|b| b.name.rsplit('_').next().and_then(DType::parse))
+                    .collect();
+                v.sort_by_key(|d| d.name());
+                v.dedup();
+                if v.is_empty() {
+                    v.push(DType::F32);
+                }
+                v
+            }
+        };
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
+        let mut libs = Vec::new();
+        for &dtype in &dtypes {
+            for &op in &ops {
+                libs.push(
+                    compile(&hw, op, dtype, &cfg, &mut prof, &CompileOpts::default())
+                        .library,
+                );
+            }
+        }
+        libs
+    };
+    let selector = Selector::new(hw.clone(), libs);
+    let manifest = if hw.is_real_testbed() {
+        vortex::runtime::Manifest::load(&artifacts_dir(args)).ok()
+    } else {
+        None
+    };
+    let mut auditor = PlanAuditor::new(&selector, acfg.clone());
+    if let Some(m) = &manifest {
+        auditor = auditor.with_manifest(m);
+    }
+    let mut report = auditor.audit();
+    if args.has_flag("dispatch") {
+        let dcfg = DispatchConfig {
+            horizon: acfg.horizon,
+            batch_horizon: acfg.batch_horizon,
+            max_cells: 1 << 17,
+            ..DispatchConfig::default()
+        };
+        let table = DispatchTable::for_selector(&selector, &dcfg);
+        report.merge(audit_dispatch_table(&selector, &table));
+    }
+    for d in &report.diagnostics {
+        println!("{d}");
+    }
+    println!("audit ({}): {}", hw.name, report.summary());
+    let deny = matches!(args.get("deny"), Some("warnings"));
+    if !report.is_clean(deny) {
+        std::process::exit(1);
     }
 }
 

@@ -20,6 +20,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::analysis::Diagnostic;
 use crate::ir::{ceil_div, DType};
 use crate::util::json::Json;
 
@@ -122,12 +123,17 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {:?} (run `make artifacts`)", path))?;
         let v = Json::parse(&text).map_err(|e| anyhow!("{}: {}", path.display(), e))?;
-        let entries = v
+        let arr = v
             .get("entries")
             .and_then(|e| e.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing entries"))?
-            .iter()
-            .map(|e| {
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        // Per-entry parse with a context-rich rejection: the error
+        // names the entry index and its name (when present) through
+        // the auditor's diagnostic struct, so a 50-entry manifest
+        // pinpoints the one bad entry instead of a bare "malformed".
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let parse = || -> Option<ArtifactEntry> {
                 Some(ArtifactEntry {
                     name: e.get("name")?.as_str()?.to_string(),
                     kind: e.get("kind")?.as_str()?.to_string(),
@@ -136,15 +142,29 @@ impl Manifest {
                     inputs: parse_io(e.get("inputs")?)?,
                     outputs: parse_io(e.get("outputs")?)?,
                 })
-            })
-            .collect::<Option<Vec<_>>>()
-            .ok_or_else(|| anyhow!("malformed manifest entry"))?;
+            };
+            let entry = parse().ok_or_else(|| {
+                let name = e.get("name").and_then(|n| n.as_str()).unwrap_or("<unnamed>");
+                let d = Diagnostic::error(
+                    "manifest.malformed_entry",
+                    "missing/invalid name, kind, file, params, inputs or outputs",
+                )
+                .with_entry(format!("entry #{i} ({name})"));
+                anyhow!("{}: {d}", path.display())
+            })?;
+            entries.push(entry);
+        }
         // Duplicate artifact names would make `find` silently return
         // whichever entry comes first — reject the manifest instead.
         let mut seen = std::collections::HashSet::new();
         for e in &entries {
             if !seen.insert(e.name.as_str()) {
-                bail!("{}: duplicate artifact name {:?}", path.display(), e.name);
+                let d = Diagnostic::error(
+                    "manifest.duplicate_name",
+                    format!("duplicate artifact name {:?}", e.name),
+                )
+                .with_entry(e.name.clone());
+                bail!("{}: {d}", path.display());
             }
         }
         Ok(Manifest { dir: dir.to_path_buf(), entries })
@@ -2214,5 +2234,75 @@ mod tests {
         // gemm_acc listing is unaffected by the batched entries.
         assert_eq!(m.gemm_acc_blocks(DType::F32).len(), 1);
         assert!(m.bgemm_acc_blocks(DType::Bf16).is_empty());
+    }
+
+    /// Miri UB gate over the threaded / unsafe-adjacent runtime paths
+    /// introduced with parallel execution: everything in here is
+    /// device-free, filesystem-free and xla-shim-free, so CI runs
+    /// exactly `cargo +nightly miri test --lib -- miri_gate
+    /// tile_algebra` (libtest filters OR together) and nothing else.
+    /// Keep these tests tiny — Miri is ~100× slower than native.
+    mod miri_gate {
+        use super::*;
+
+        #[test]
+        fn run_cells_matches_sequential_across_thread_counts() {
+            let seq = run_cells(9, 1, |i| Ok(i * i)).unwrap();
+            for threads in [2, 3, 8] {
+                assert_eq!(seq, run_cells(9, threads, |i| Ok(i * i)).unwrap());
+            }
+        }
+
+        #[test]
+        fn run_cells_propagates_worker_errors() {
+            let r = run_cells(6, 3, |i| if i == 4 { Err(anyhow!("boom")) } else { Ok(i) });
+            assert!(r.is_err(), "worker error must surface");
+        }
+
+        #[test]
+        fn gather_block_zero_fills_past_the_dense_edge() {
+            let data: Vec<f32> = (0..6).map(|x| x as f32).collect();
+            let src = OperandSource::dense(&data, 2, 3);
+            let mut dst = vec![7.0f32; 4 * 4];
+            src.gather_block(&mut dst, 1, 2, 4, 4);
+            // Only (row 1, col 2) = 5.0 is in range; the rest of the
+            // block is the zero padding the edge-tile contract needs.
+            assert_eq!(dst[0], 5.0);
+            assert!(dst[1..].iter().all(|&x| x == 0.0));
+        }
+
+        #[test]
+        fn transpose_view_window_matches_manual_transpose() {
+            // Backing is (cols x rows) = 2x3 row-major; the view is its
+            // 3x2 transpose: view(r, c) = data[c * rows + r].
+            let data: Vec<f32> = (0..6).map(|x| x as f32).collect();
+            let src = OperandSource::transpose(&data, 3, 2);
+            assert_eq!(src.materialize(), vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+            // Edge window: one valid element, zero-filled remainder.
+            let mut dst = vec![7.0f32; 4];
+            src.gather_block(&mut dst, 2, 1, 2, 2);
+            assert_eq!(dst, vec![5.0, 0.0, 0.0, 0.0]);
+        }
+
+        #[test]
+        fn im2col_view_keeps_halo_taps_zero() {
+            // 1x2x2x1 NHWC input, 3x3 filter, stride 1, pad 1 →
+            // 2x2 output, patch row = 9 taps with a padding halo.
+            let x = [1.0f32, 2.0, 3.0, 4.0];
+            let src = OperandSource::im2col(&x, (1, 2, 2, 1), (3, 3), (1, 1), (0, 1));
+            assert_eq!((src.rows(), src.cols()), (4, 9));
+            let full = src.materialize();
+            // Output (0, 0): taps above/left of the image are halo.
+            assert_eq!(&full[0..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+            // A mid-row window exercises the tap-intersection path.
+            let mut dst = vec![7.0f32; 4];
+            src.gather_block(&mut dst, 0, 3, 1, 4);
+            assert_eq!(dst, vec![0.0, 1.0, 2.0, 0.0]);
+        }
+
+        #[test]
+        fn tile_scratch_is_exactly_three_blocks() {
+            assert_eq!(tile_scratch_elems([2, 3, 4]), 2 * 4 + 4 * 3 + 2 * 3);
+        }
     }
 }

@@ -40,9 +40,10 @@ pub mod scenario;
 
 pub use cache::{CacheStats, PlanCache};
 
+use crate::analysis::Diagnostic;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::select::{HwMode, Selection, Selector};
-use crate::dispatch::{DispatchConfig, DispatchTable};
+use crate::dispatch::{DispatchConfig, DispatchTable, TableData};
 use crate::ir::{IterSpace, TensorProgram};
 use crate::sim::Simulator;
 
@@ -157,6 +158,26 @@ impl Default for LaneConfig {
     }
 }
 
+/// What serving does with an ADOPTED schema-v3 table payload
+/// ([`ServeConfig::adopt`]) before trusting it with every plan
+/// decision. In-process builds ([`ServeConfig::dispatch`]) are exempt:
+/// they are constructed by the same arithmetic the auditor re-proves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TablePolicy {
+    /// Run the plan auditor over the payload and REFUSE it (falling
+    /// back to an in-process build, or no table) unless the audit is
+    /// clean — the production default: a shipped file is input, not
+    /// truth.
+    #[default]
+    RefuseUnaudited,
+    /// Audit, record the findings in [`MixedStats::table_diags`], but
+    /// serve from the payload anyway (staging/debug).
+    WarnUnaudited,
+    /// Adopt without auditing (the pre-audit behavior; the strict
+    /// loader's fingerprint/digest checks still apply).
+    Trust,
+}
+
 /// Full serving configuration: one [`LaneConfig`] per lane class plus
 /// the plan-cache capacity (`None` disables caching — every batch
 /// runs fresh selection, the baseline the `serve` bench compares
@@ -170,6 +191,12 @@ pub struct ServeConfig {
     /// starts (the compile-time half) and consulted first for every
     /// batch; the plan cache only sees the beyond-horizon tail.
     pub dispatch: Option<DispatchConfig>,
+    /// A shipped schema-v3 table payload (the `"dispatch"` field of a
+    /// library dump) to adopt INSTEAD of building in process —
+    /// subject to [`ServeConfig::table_policy`].
+    pub adopt: Option<Vec<TableData>>,
+    /// Gate on adopted payloads (see [`TablePolicy`]).
+    pub table_policy: TablePolicy,
 }
 
 impl Default for ServeConfig {
@@ -178,6 +205,8 @@ impl Default for ServeConfig {
             lanes: [LaneConfig::default(); 4],
             plan_cache: Some(1024),
             dispatch: None,
+            adopt: None,
+            table_policy: TablePolicy::default(),
         }
     }
 }
@@ -200,6 +229,44 @@ impl ServeConfig {
     pub fn with_dispatch(&self, cfg: DispatchConfig) -> ServeConfig {
         ServeConfig { dispatch: Some(cfg), ..self.clone() }
     }
+
+    /// This config adopting a shipped table payload under `policy`.
+    pub fn adopting(&self, payload: Vec<TableData>, policy: TablePolicy) -> ServeConfig {
+        ServeConfig { adopt: Some(payload), table_policy: policy, ..self.clone() }
+    }
+}
+
+/// Resolve the serving-time dispatch table: adopted payload (gated by
+/// [`TablePolicy`]) first, then an in-process build. Every refusal or
+/// warning is returned as auditor diagnostics so telemetry shows WHY a
+/// payload was not (or reluctantly was) trusted.
+fn resolve_dispatch(
+    selector: &Selector,
+    cfg: &ServeConfig,
+) -> (Option<DispatchTable>, Vec<Diagnostic>) {
+    let mut diags = Vec::new();
+    if let Some(payload) = &cfg.adopt {
+        match DispatchTable::from_data_checked(selector, payload) {
+            Err(d) => diags.push(d),
+            Ok(table) => {
+                if cfg.table_policy == TablePolicy::Trust {
+                    return (Some(table), diags);
+                }
+                let report = crate::analysis::audit_dispatch_table(selector, &table);
+                if report.diagnostics.is_empty() {
+                    return (Some(table), diags);
+                }
+                diags.extend(report.diagnostics);
+                if cfg.table_policy == TablePolicy::WarnUnaudited {
+                    return (Some(table), diags);
+                }
+                // RefuseUnaudited: fall through to the in-process
+                // build (or no table at all).
+            }
+        }
+    }
+    let built = cfg.dispatch.as_ref().map(|d| DispatchTable::for_selector(selector, d));
+    (built, diags)
 }
 
 /// Two requests batch together iff their merge keys are equal: the key
@@ -336,6 +403,12 @@ pub struct MixedStats {
     /// Offline build statistics of the dispatch table, when one was
     /// enabled (cells, merge compression, whether horizons clamped).
     pub dispatch_build: Option<crate::dispatch::BuildStats>,
+    /// Auditor findings against an adopted table payload
+    /// ([`ServeConfig::adopt`]): why it was refused
+    /// ([`TablePolicy::RefuseUnaudited`]) or what it was adopted in
+    /// spite of ([`TablePolicy::WarnUnaudited`]). Empty when no payload
+    /// was adopted or the audit was clean.
+    pub table_diags: Vec<Diagnostic>,
     /// Max lane span (lanes run as concurrent executors).
     pub span_secs: f64,
 }
@@ -401,12 +474,14 @@ pub fn serve_mixed_trace(
 ) -> MixedStats {
     debug_assert!(requests.windows(2).all(|w| w[0].arrive <= w[1].arrive));
     // The compile-time half: the dispatch table is built (or shipped
-    // with the library) BEFORE any request arrives — its cost is
-    // offline, not serving wall-clock.
-    let dispatch = cfg.dispatch.as_ref().map(|d| DispatchTable::for_selector(selector, d));
+    // with the library — gated through the plan auditor per
+    // [`ServeConfig::table_policy`]) BEFORE any request arrives — its
+    // cost is offline, not serving wall-clock.
+    let (dispatch, table_diags) = resolve_dispatch(selector, cfg);
     let mut plan_cache = cfg.plan_cache.map(|cap| PlanCache::for_selector(selector, cap));
     let mut stats = MixedStats {
         dispatch_build: dispatch.as_ref().map(|t| t.stats.clone()),
+        table_diags,
         ..MixedStats::default()
     };
     for class in LaneClass::ALL {
@@ -694,7 +769,12 @@ mod tests {
         }
         // Plans are identical to a run with no table and no cache.
         let mut e2 = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
-        let plain = ServeConfig { plan_cache: None, dispatch: None, lanes: cfg.lanes };
+        let plain = ServeConfig {
+            plan_cache: None,
+            dispatch: None,
+            lanes: cfg.lanes,
+            ..ServeConfig::default()
+        };
         let fresh = serve_mixed_trace(&mut e2, &s, &plain, &requests);
         assert_eq!(fresh.dispatch.fresh, 12);
         for (a, b) in stats.outcomes.iter().zip(&fresh.outcomes) {
@@ -706,6 +786,117 @@ mod tests {
                 a.source
             );
         }
+    }
+
+    #[test]
+    fn adopted_payloads_are_gated_by_the_plan_auditor() {
+        use crate::dispatch::{table_digest, DispatchConfig};
+        use crate::ir::OpKind;
+        let s = selector();
+        let dcfg = DispatchConfig { ops: vec![OpKind::Gemm], ..DispatchConfig::default() }
+            .with_op_horizons(OpKind::Gemm, &[64, 768, 768]);
+        let payload = DispatchTable::for_selector(&s, &dcfg).to_data(&s);
+
+        let mut cfg = ServeConfig::default();
+        cfg.plan_cache = None;
+        for class in LaneClass::ALL {
+            cfg.lane_mut(class).max_batch = 1;
+        }
+        let requests: Vec<ServeRequest> = (0..6u64)
+            .map(|i| ServeRequest { id: i, program: gemm(16), arrive: 5e-3 * i as f64 })
+            .collect();
+        let run = |cfg: &ServeConfig| {
+            let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+            serve_mixed_trace(&mut engine, &s, cfg, &requests)
+        };
+
+        // A clean payload is audited and adopted under the default
+        // (refuse-unaudited) policy: every in-horizon request is a
+        // table hit and no findings are recorded.
+        let clean = run(&cfg.adopting(payload.clone(), TablePolicy::RefuseUnaudited));
+        assert_eq!(clean.dispatch.table, 6);
+        assert!(clean.table_diags.is_empty());
+
+        // Forge a digest-consistent payload the strict loader accepts
+        // but whose edge the auditor proves off the fine lattice.
+        let mut forged = payload.clone();
+        let table = DispatchTable::from_data_checked(&s, &payload).unwrap();
+        let mut tampered = false;
+        'search: for (ti, t) in table.tables.iter().enumerate() {
+            for a in 0..t.edges.len() {
+                let mut extents: Vec<usize> = s
+                    .eligible_fast(s.serving_op(t.op), t.mode)
+                    .iter()
+                    .map(|&fi| s.fast[fi].l1[a])
+                    .collect();
+                extents.sort_unstable();
+                extents.dedup();
+                let fine =
+                    crate::dispatch::axis_edges(&extents, *t.edges[a].last().unwrap());
+                for j in 0..t.edges[a].len().saturating_sub(1) {
+                    let bumped = t.edges[a][j] + 1;
+                    if bumped < t.edges[a][j + 1] && fine.binary_search(&bumped).is_err() {
+                        forged[ti].edges[a][j] = bumped;
+                        forged[ti].digest = table_digest(
+                            forged[ti].op,
+                            &forged[ti].mode,
+                            &forged[ti].edges,
+                            &forged[ti].runs,
+                            forged[ti].clamped,
+                        );
+                        tampered = true;
+                        break 'search;
+                    }
+                }
+            }
+        }
+        assert!(tampered, "no tamperable off-lattice edge found");
+
+        // RefuseUnaudited with no in-process build: the payload is
+        // refused, every request pays fresh selection, and the refusal
+        // reason is on record.
+        let refused = run(&cfg.adopting(forged.clone(), TablePolicy::RefuseUnaudited));
+        assert_eq!(refused.dispatch.table, 0);
+        assert_eq!(refused.dispatch.fresh, 6);
+        assert!(refused
+            .table_diags
+            .iter()
+            .any(|d| d.code == "dispatch.edge_off_lattice"));
+
+        // ... and WITH an in-process build configured, refusal falls
+        // back to it: table hits return, findings stay on record.
+        let fallback = run(&cfg
+            .with_dispatch(dcfg.clone())
+            .adopting(forged.clone(), TablePolicy::RefuseUnaudited));
+        assert_eq!(fallback.dispatch.table, 6);
+        assert!(fallback
+            .table_diags
+            .iter()
+            .any(|d| d.code == "dispatch.edge_off_lattice"));
+
+        // WarnUnaudited serves from the forged payload anyway but keeps
+        // the findings; Trust skips the audit entirely.
+        let warned = run(&cfg.adopting(forged.clone(), TablePolicy::WarnUnaudited));
+        assert!(warned.dispatch.table > 0);
+        assert!(warned
+            .table_diags
+            .iter()
+            .any(|d| d.code == "dispatch.edge_off_lattice"));
+        let trusted = run(&cfg.adopting(forged, TablePolicy::Trust));
+        assert!(trusted.dispatch.table > 0);
+        assert!(trusted.table_diags.is_empty());
+
+        // A loader-level refusal (foreign fingerprint) surfaces its own
+        // diagnostic code even under Trust — the strict loader is not
+        // subject to policy.
+        let mut foreign = payload;
+        foreign[0].fingerprint ^= 1;
+        let stats = run(&cfg.adopting(foreign, TablePolicy::Trust));
+        assert_eq!(stats.dispatch.table, 0);
+        assert!(stats
+            .table_diags
+            .iter()
+            .any(|d| d.code == "load.fingerprint_mismatch"));
     }
 
     #[test]

@@ -1,0 +1,119 @@
+//! Integration gate for the symbolic plan auditor: every shipped
+//! preset × op × dtype grid must audit clean — write-set disjointness,
+//! capacity bounds, alias fixpoints and (when built) dispatch-table
+//! region soundness are proved over whole axis intervals, so a clean
+//! report here is a proof over every in-horizon shape, not a sample.
+//!
+//! The seeded-corruption counterparts (tampered edges, swapped
+//! winners, undersized capacities, overlapping mock write-sets) live
+//! in `rust/src/analysis/tests.rs` where `pub(crate)` access allows
+//! in-place tampering.
+
+use vortex::analysis::{audit, audit_dispatch_table, AuditConfig};
+use vortex::compiler::{compile, CompileOpts, MicroKernelLibrary};
+use vortex::coordinator::Selector;
+use vortex::cost::hybrid::AnalyzerConfig;
+use vortex::dispatch::{DispatchConfig, DispatchTable};
+use vortex::hw::presets;
+use vortex::hw::HwSpec;
+use vortex::ir::{DType, OpKind};
+use vortex::profiler::SimProfiler;
+use vortex::sim::Simulator;
+
+/// The shipped grid: each preset with the dtypes its backends serve.
+fn grid() -> Vec<(HwSpec, Vec<DType>)> {
+    vec![
+        (presets::a100(), vec![DType::F32, DType::F16]),
+        (presets::xeon_8255c(), vec![DType::F32]),
+        (presets::cpu_pjrt(), vec![DType::F32, DType::Bf16]),
+    ]
+}
+
+/// Compile every op of `OpKind::ALL` for each dtype into one selector
+/// (analytical analyzer: the audit proves plan invariants, not cost
+/// accuracy, and CI runs this in debug mode).
+fn full_selector(hw: &HwSpec, dtypes: &[DType]) -> Selector {
+    let cfg = AnalyzerConfig::analytical_only();
+    let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 7));
+    let mut libs: Vec<MicroKernelLibrary> = Vec::new();
+    for &dtype in dtypes {
+        for op in OpKind::ALL {
+            libs.push(compile(hw, op, dtype, &cfg, &mut prof, &CompileOpts::default()).library);
+        }
+    }
+    Selector::new(hw.clone(), libs)
+}
+
+fn small_dispatch_config() -> DispatchConfig {
+    DispatchConfig {
+        horizon: 48,
+        batch_horizon: 6,
+        max_cells: 1 << 14,
+        ..DispatchConfig::default()
+    }
+}
+
+#[test]
+fn every_preset_op_dtype_grid_audits_clean() {
+    for (hw, dtypes) in grid() {
+        let selector = full_selector(&hw, &dtypes);
+        let report = audit(&selector, &AuditConfig::default());
+        assert!(
+            report.diagnostics.is_empty(),
+            "{}: expected a clean audit, got:\n{}",
+            hw.name,
+            report
+                .diagnostics
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        assert!(report.kernels_checked > 0, "{}: audit was vacuous", hw.name);
+        assert!(report.segments_checked > 0, "{}: no write-set segments", hw.name);
+    }
+}
+
+#[test]
+fn dispatch_tables_audit_clean_on_every_preset() {
+    let dcfg = small_dispatch_config();
+    for (hw, dtypes) in grid() {
+        let selector = full_selector(&hw, &dtypes);
+        let table = DispatchTable::for_selector(&selector, &dcfg);
+        let report = audit_dispatch_table(&selector, &table);
+        assert!(
+            report.diagnostics.is_empty(),
+            "{}: dispatch audit found:\n{}",
+            hw.name,
+            report
+                .diagnostics
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        assert_eq!(report.tables_checked, table.stats.tables, "{}", hw.name);
+        assert!(report.cells_checked > 0, "{}: no cells re-proved", hw.name);
+    }
+}
+
+#[test]
+fn serialized_tables_survive_the_strict_loader_and_re_audit_clean() {
+    let (hw, dtypes) = (presets::a100(), vec![DType::F32, DType::F16]);
+    let selector = full_selector(&hw, &dtypes);
+    let table = DispatchTable::for_selector(&selector, &small_dispatch_config());
+    let payload = table.to_data(&selector);
+    let adopted = DispatchTable::from_data_checked(&selector, &payload)
+        .expect("round-tripped payload must load");
+    let report = audit_dispatch_table(&selector, &adopted);
+    assert!(
+        report.diagnostics.is_empty(),
+        "round-tripped table audit found:\n{}",
+        report
+            .diagnostics
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
