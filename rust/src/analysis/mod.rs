@@ -868,5 +868,119 @@ fn audit_op_table(selector: &Selector, t: &dispatch::OpTable, report: &mut Audit
     }
 }
 
+// ---------------------------------------------------------------------------
+// SLO feasibility audit
+// ---------------------------------------------------------------------------
+
+/// Static SLO feasibility audit: check every lane deadline in a
+/// [`ServeConfig`](crate::serve::ServeConfig) against the modeled
+/// service FLOOR — the same closed-form estimates selection runs on,
+/// evaluated at the smallest possible problem (all-ones dims), so the
+/// verdict is sample-free like everything else in this layer. Codes:
+///
+/// * `slo.nonpositive_deadline` (error) — a deadline <= 0 can never be
+///   met by any request.
+/// * `slo.unservable_mode` (error) — the lane's mode (or its overload
+///   DOWNGRADE mode) admits no fast-path kernel for some op the lane
+///   serves: under overload, selection would have nothing to pick.
+/// * `slo.infeasible_deadline` (error) — the deadline is below
+///   `SCHED_OVERHEAD_SECS + min_kernel chain × estimate(ones)`: even
+///   the smallest conceivable request on the best eligible kernel
+///   cannot finish in time, so EVERY admission decision the policy
+///   makes is forced.
+/// * `slo.window_exceeds_deadline` (warning) — the configured static
+///   batch window alone is at least the whole deadline. Serving caps
+///   the effective window at the deadline budget
+///   ([`crate::serve::LaneSlo::window`]), so this is survivable — but
+///   the configuration is self-contradictory and worth flagging.
+///
+/// Lanes without a deadline are skipped: no SLO, no obligations.
+/// [`crate::serve::serve_fleet`] runs this before serving and reports
+/// the findings in `FleetStats::slo_diags` (advisory, not a refusal —
+/// the overload policy still does something well-defined).
+pub fn audit_slo(selector: &Selector, cfg: &crate::serve::ServeConfig) -> AuditReport {
+    use crate::serve::{LaneClass, OverloadPolicy, SCHED_OVERHEAD_SECS};
+    let mut report = AuditReport::default();
+    for class in LaneClass::ALL {
+        let lane = cfg.lane(class);
+        let Some(deadline) = lane.slo.deadline else { continue };
+        if deadline <= 0.0 {
+            report.diagnostics.push(Diagnostic::error(
+                "slo.nonpositive_deadline",
+                format!("{} lane: deadline {deadline:.3e}s is not positive", class.name()),
+            ));
+            continue;
+        }
+        if lane.batch_window >= deadline {
+            report.diagnostics.push(Diagnostic::warning(
+                "slo.window_exceeds_deadline",
+                format!(
+                    "{} lane: configured batch window {:.3e}s >= deadline {deadline:.3e}s \
+                     (the effective window is capped at the deadline budget)",
+                    class.name(),
+                    lane.batch_window,
+                ),
+            ));
+        }
+        // The lane must be servable — and its deadline meetable —
+        // under its configured mode AND under the overload downgrade
+        // mode, if one is set: the downgrade path only runs when the
+        // lane is already in trouble.
+        let mut modes = vec![lane.mode];
+        if let OverloadPolicy::Degrade(m) = lane.slo.policy {
+            if m != lane.mode {
+                modes.push(m);
+            }
+        }
+        for mode in modes {
+            let mode_name = dispatch::mode_name(mode);
+            for &op in class.ops() {
+                let serving = selector.serving_op(op);
+                let eligible = selector.eligible_fast(serving, mode);
+                if eligible.is_empty() {
+                    report.diagnostics.push(
+                        Diagnostic::error(
+                            "slo.unservable_mode",
+                            format!(
+                                "{} lane: no fast-path kernel serves {op:?} under this \
+                                 mode — selection would have nothing to pick",
+                                class.name(),
+                            ),
+                        )
+                        .with_op(op)
+                        .with_mode(&mode_name),
+                    );
+                    continue;
+                }
+                report.kernels_checked += eligible.len();
+                let chain = selector.chain_factor(op);
+                let ones = Tile::ones(serving.spec().rank());
+                let floor = SCHED_OVERHEAD_SECS
+                    + eligible
+                        .iter()
+                        .map(|&fi| chain * selector.fast[fi].estimate(ones).0)
+                        .fold(f64::INFINITY, f64::min);
+                if deadline < floor {
+                    report.diagnostics.push(
+                        Diagnostic::error(
+                            "slo.infeasible_deadline",
+                            format!(
+                                "{} lane: deadline {deadline:.3e}s is below the modeled \
+                                 service floor {floor:.3e}s for {op:?} (smallest problem, \
+                                 best eligible kernel) — no request can ever meet it",
+                                class.name(),
+                            ),
+                        )
+                        .with_op(op)
+                        .with_mode(&mode_name)
+                        .with_counterexample(ones),
+                    );
+                }
+            }
+        }
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests;

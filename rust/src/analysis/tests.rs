@@ -326,3 +326,92 @@ fn alias_pass_covers_every_op() {
     let report = audit(&s, &AuditConfig::default());
     assert!(report.diagnostics.iter().all(|d| !d.code.starts_with("alias.")));
 }
+
+// ---------------------------------------------------------------------------
+// SLO feasibility audit
+// ---------------------------------------------------------------------------
+
+mod slo_audit {
+    use super::*;
+    use crate::serve::{LaneClass, LaneSlo, OverloadPolicy, ServeConfig};
+
+    #[test]
+    fn no_deadlines_audit_vacuously_clean() {
+        let s = selector(11);
+        let report = audit_slo(&s, &ServeConfig::default());
+        assert!(report.diagnostics.is_empty());
+    }
+
+    #[test]
+    fn generous_deadline_is_feasible() {
+        let s = selector(11);
+        let mut cfg = ServeConfig::default();
+        cfg.lane_mut(LaneClass::Gemm).slo = LaneSlo::with_deadline(1.0);
+        let report = audit_slo(&s, &cfg);
+        assert!(
+            report.diagnostics.is_empty(),
+            "{:?}",
+            report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+        );
+        assert!(report.kernels_checked > 0);
+    }
+
+    #[test]
+    fn deadline_below_the_service_floor_is_an_error() {
+        let s = selector(11);
+        let mut cfg = ServeConfig::default();
+        // 1 ps: far below SCHED_OVERHEAD_SECS alone, let alone the
+        // smallest kernel estimate — provably unmeetable.
+        cfg.lane_mut(LaneClass::Gemm).slo = LaneSlo::with_deadline(1e-12);
+        let report = audit_slo(&s, &cfg);
+        assert!(report.errors() >= 1);
+        assert!(report
+            .diagnostics
+            .iter()
+            .any(|d| d.code == "slo.infeasible_deadline" && d.op == Some(OpKind::Gemm)));
+    }
+
+    #[test]
+    fn nonpositive_deadline_is_an_error() {
+        let s = selector(11);
+        let mut cfg = ServeConfig::default();
+        cfg.lane_mut(LaneClass::Gemm).slo = LaneSlo::with_deadline(0.0);
+        let report = audit_slo(&s, &cfg);
+        assert_eq!(report.errors(), 1);
+        assert_eq!(report.diagnostics[0].code, "slo.nonpositive_deadline");
+    }
+
+    #[test]
+    fn unservable_degrade_mode_is_an_error() {
+        let s = selector(11);
+        let mut cfg = ServeConfig::default();
+        // No backend named "nonexistent" exists on the A100 preset:
+        // the downgrade path would leave selection with nothing.
+        cfg.lane_mut(LaneClass::Gemm).slo = LaneSlo::with_deadline(1.0)
+            .with_policy(OverloadPolicy::Degrade(HwMode::Only("nonexistent")));
+        let report = audit_slo(&s, &cfg);
+        assert!(report
+            .diagnostics
+            .iter()
+            .any(|d| d.code == "slo.unservable_mode"));
+        // A real backend as the downgrade mode audits clean.
+        cfg.lane_mut(LaneClass::Gemm).slo = LaneSlo::with_deadline(1.0)
+            .with_policy(OverloadPolicy::Degrade(HwMode::Only("cuda_core_f32")));
+        assert!(audit_slo(&s, &cfg).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn window_at_or_past_the_deadline_warns() {
+        let s = selector(11);
+        let mut cfg = ServeConfig::default();
+        let lane = cfg.lane_mut(LaneClass::Gemm);
+        lane.slo = LaneSlo::with_deadline(1e-3);
+        lane.batch_window = 5e-3;
+        let report = audit_slo(&s, &cfg);
+        assert_eq!(report.errors(), 0);
+        assert!(report
+            .diagnostics
+            .iter()
+            .any(|d| d.code == "slo.window_exceeds_deadline"));
+    }
+}

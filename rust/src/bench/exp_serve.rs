@@ -15,12 +15,22 @@
 //! misses at all when the configured envelope covers the traffic
 //! (`dispatch.fresh == 0`), versus the cache's one fresh scan per
 //! bucket.
+//!
+//! Fleet rows ride along: the same trace sharded across 4 replicas
+//! under hash routing, with the worker-pool run re-checked
+//! bitwise-equivalent against the sequential replay on every bench run
+//! (`fleet.executor_equivalent` — the determinism-oracle contract of
+//! [`crate::serve::serve_fleet`]). CI schema-validates the emitted
+//! report against `results/BENCH_serve.json`.
 
 use std::path::Path;
 
 use crate::hw::presets;
 use crate::ir::DType;
-use crate::serve::{scenario, serve_mixed_trace, MixedStats, SimLaneEngine};
+use crate::serve::{
+    scenario, serve_fleet, serve_mixed_trace, FleetConfig, FleetStats, MixedStats,
+    RoutePolicy, SimLaneEngine,
+};
 use crate::sim::Simulator;
 use crate::util::json::Json;
 use crate::util::table::{fmt_secs, Table};
@@ -46,6 +56,32 @@ pub fn identical_selections(a: &MixedStats, b: &MixedStats) -> bool {
                 && x.lane == y.lane
                 && x.batch_size == y.batch_size
                 && x.selection.same_plan(&y.selection)
+        })
+}
+
+/// True when two FLEET runs are bitwise indistinguishable: same
+/// per-request plans, sources, replicas, launch/latency BITS and the
+/// same drop log. This is the determinism-oracle contract the bench
+/// re-checks on every run (worker pool vs sequential replay).
+pub fn equivalent_fleet_runs(a: &FleetStats, b: &FleetStats) -> bool {
+    a.outcomes.len() == b.outcomes.len()
+        && a.drops.len() == b.drops.len()
+        && a.outcomes.iter().zip(&b.outcomes).all(|(x, y)| {
+            x.id == y.id
+                && x.replica == y.replica
+                && x.lane == y.lane
+                && x.batch_size == y.batch_size
+                && x.source == y.source
+                && x.degraded == y.degraded
+                && x.latency.to_bits() == y.latency.to_bits()
+                && x.launch.to_bits() == y.launch.to_bits()
+                && x.selection.same_plan(&y.selection)
+        })
+        && a.drops.iter().zip(&b.drops).all(|(x, y)| {
+            x.id == y.id
+                && x.replica == y.replica
+                && x.decided_at.to_bits() == y.decided_at.to_bits()
+                && x.miss_by.to_bits() == y.miss_by.to_bits()
         })
 }
 
@@ -92,6 +128,21 @@ pub fn serve(out_dir: &Path, seed: u64, frac: usize) -> Vec<Table> {
     let warm_rate = warm_hit_rate(&cached);
     let table_warm = warm_hit_rate(&table);
 
+    // Fleet rows: the same trace sharded across 4 replicas (hash
+    // routing, dispatch tables cloned per replica), once on the
+    // sequential discrete-event replay and once on the worker pool —
+    // the two must be bitwise-equivalent (the determinism oracle).
+    let make_engine = || SimLaneEngine { sim: Simulator::new(hw.clone(), seed) };
+    let fleet_cfg = |workers: usize| FleetConfig {
+        replicas: 4,
+        workers,
+        routing: RoutePolicy::HashKey,
+        serve: serve_cfg.with_dispatch(scenario::dispatch_config()),
+    };
+    let fleet = serve_fleet(make_engine, &selector, &fleet_cfg(0), &trace);
+    let fleet_pool = serve_fleet(make_engine, &selector, &fleet_cfg(2), &trace);
+    let executor_equivalent = equivalent_fleet_runs(&fleet, &fleet_pool);
+
     let lanes = lanes_table("serving lanes (dispatch table ON, simulated A100)", &table);
 
     let mut cmp = Table::new(
@@ -112,6 +163,20 @@ pub fn serve(out_dir: &Path, seed: u64, frac: usize) -> Vec<Table> {
     row(&mut cmp, "table", &table);
     row(&mut cmp, "cached", &cached);
     row(&mut cmp, "fresh", &baseline);
+    {
+        let (_, _, f99) = fleet.latency_percentiles();
+        cmp.row(vec![
+            format!("fleet x4 ({})", RoutePolicy::HashKey.name()),
+            fmt_secs(fleet.span_secs),
+            fmt_secs(f99),
+            String::new(),
+            format!(
+                "{}/{}/{}",
+                fleet.dispatch.table, fleet.dispatch.cache, fleet.dispatch.fresh
+            ),
+            format!("executor ok: {executor_equivalent}"),
+        ]);
+    }
     cmp.row(vec![
         "identical selections".into(),
         identical.to_string(),
@@ -128,7 +193,9 @@ pub fn serve(out_dir: &Path, seed: u64, frac: usize) -> Vec<Table> {
     let (t50, _, t99) = table.latency_percentiles();
     let (_, _, b99) = baseline.latency_percentiles();
     let build = table.dispatch_build.clone().unwrap_or_default();
+    let (f50, _, f99) = fleet.latency_percentiles();
     let json = Json::obj(vec![
+        ("schema", Json::str("vortex-bench-serve-v1")),
         ("requests", Json::num(trace.len() as f64)),
         ("lanes", Json::num(table.lanes.len() as f64)),
         ("span_secs", Json::num(table.span_secs)),
@@ -181,6 +248,29 @@ pub fn serve(out_dir: &Path, seed: u64, frac: usize) -> Vec<Table> {
             ]),
         ),
         (
+            "fleet",
+            Json::obj(vec![
+                ("replicas", Json::num(4.0)),
+                ("workers", Json::num(2.0)),
+                ("routing", Json::str(RoutePolicy::HashKey.name())),
+                ("span_secs", Json::num(fleet.span_secs)),
+                ("p50_secs", Json::num(f50)),
+                ("p99_secs", Json::num(f99)),
+                ("offered", Json::num(fleet.offered() as f64)),
+                ("admitted", Json::num(fleet.admitted() as f64)),
+                ("degraded", Json::num(fleet.degraded() as f64)),
+                ("dropped", Json::num(fleet.drops.len() as f64)),
+                ("table_hits", Json::num(fleet.dispatch.table as f64)),
+                ("cache_hits", Json::num(fleet.dispatch.cache as f64)),
+                ("fresh", Json::num(fleet.dispatch.fresh as f64)),
+                (
+                    "span_speedup_vs_single",
+                    Json::num(table.span_secs / fleet.span_secs.max(1e-12)),
+                ),
+                ("executor_equivalent", Json::Bool(executor_equivalent)),
+            ]),
+        ),
+        (
             "sched_speedup",
             Json::num(baseline.total_sched_secs() / table.total_sched_secs().max(1e-12)),
         ),
@@ -203,8 +293,24 @@ mod tests {
         assert_eq!(tables.len(), 2);
         let text = std::fs::read_to_string(dir.join("BENCH_serve.json")).unwrap();
         let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("vortex-bench-serve-v1"));
         assert!(j.get("requests").unwrap().as_f64().unwrap() >= 200.0);
         assert_eq!(j.get("identical_selections").unwrap().as_bool(), Some(true));
+        // Fleet rows: every request accounted for, and the worker pool
+        // reproduced the sequential replay bitwise.
+        let f = j.get("fleet").unwrap();
+        assert_eq!(f.get("executor_equivalent").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            f.get("offered").unwrap().as_f64().unwrap(),
+            j.get("requests").unwrap().as_f64().unwrap()
+        );
+        assert_eq!(
+            f.get("admitted").unwrap().as_f64().unwrap()
+                + f.get("degraded").unwrap().as_f64().unwrap()
+                + f.get("dropped").unwrap().as_f64().unwrap(),
+            f.get("offered").unwrap().as_f64().unwrap()
+        );
+        assert_eq!(f.get("dropped").unwrap().as_f64().unwrap(), 0.0);
         let d = j.get("dispatch").unwrap();
         let requests = j.get("requests").unwrap().as_f64().unwrap();
         let table_hits = d.get("table_hits").unwrap().as_f64().unwrap();

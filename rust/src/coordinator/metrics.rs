@@ -15,6 +15,14 @@ pub struct Metrics {
     pub flops: f64,
     /// Wall-clock span of the run.
     pub span_secs: f64,
+    /// Requests shed by the SLO admission controller
+    /// ([`crate::serve::OverloadPolicy::Drop`]); shed requests never
+    /// execute, so they contribute no latency sample.
+    pub dropped: u64,
+    /// Requests served under a mode-downgrade
+    /// ([`crate::serve::OverloadPolicy::Degrade`]); these DO carry a
+    /// latency sample (they executed) and are counted here on top.
+    pub degraded: u64,
 }
 
 impl Metrics {

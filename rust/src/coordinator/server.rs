@@ -156,6 +156,7 @@ pub fn serve_trace(
         max_batch: cfg.max_batch,
         batch_window: cfg.batch_window,
         mode: cfg.mode,
+        ..LaneConfig::default()
     };
     let mixed = serve_mixed_trace(&mut Adapter { inner: engine }, selector, &serve_cfg, &reqs);
 

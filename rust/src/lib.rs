@@ -89,6 +89,23 @@
 //! cache coherence with library reload; the `serve` bench and `vortex
 //! serve --mixed [--dispatch]` exercise it end to end.
 //!
+//! At deployment scale the serving layer shards across a **fleet**
+//! ([`serve::serve_fleet`]): deterministic routing assigns every
+//! request to one of N replicas (each holding a clone of the dispatch
+//! table and its own cache shards) as a pure pre-pass, and the
+//! independent (replica, lane) units execute either sequentially or on
+//! a work-stealing thread pool with *bit-identical* results — the
+//! determinism oracle in `tests/fleet_oracle.rs` checks selections,
+//! latencies and drop decisions across worker counts. Per-lane latency
+//! SLOs ([`serve::LaneSlo`]) derive the batching window from the
+//! deadline budget and shed or mode-downgrade unmeetable requests
+//! under a chosen [`serve::OverloadPolicy`], with static feasibility
+//! checked by [`analysis::audit_slo`]. The "Latency SLOs" and "Fleet
+//! serving" sections of
+//! [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) give the
+//! budget-split semantics and the determinism-by-construction
+//! argument; `vortex serve --replicas N --workers K` is the CLI entry.
+//!
 //! ## Static analysis
 //!
 //! The plan auditor ([`analysis`]) closes the loop on "sample-free":

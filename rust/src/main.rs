@@ -40,13 +40,20 @@ USAGE:
   vortex run      --m M --n N --k K [--artifacts DIR] [--verify]
   vortex serve    [--requests N] [--mean-gap-us U] [--max-batch B]
                   [--mixed] [--no-cache] [--dispatch]
+                  [--replicas N] [--workers K] [--routing hash|load]
+                  [--slo-ms D] [--slo-policy serve|drop|degrade]
                   (--mixed: multi-op request lanes + bucketed plan cache
                    over a BERT-token + vision-burst trace; --no-cache
                    disables plan memoization; --dispatch answers
                    in-horizon shapes from the compile-time table and
                    demotes the cache to the beyond-horizon fallback.
-                   `vortex --serve ...` is an alias for the
-                   subcommand.)
+                   --replicas shards admission across a fleet (implies
+                   --mixed), --workers sizes the work-stealing pool
+                   (0/1 = sequential oracle, bit-identical results),
+                   --slo-ms sets a per-lane deadline whose overload
+                   policy sheds (drop) or mode-downgrades (degrade)
+                   unmeetable heads. `vortex --serve ...` is an alias
+                   for the subcommand.)
   vortex audit    [--testbed ...] [--op all|gemm|...] [--dtype f32|f16|bf16]
                   [--lib dump.json] [--dispatch] [--horizon H]
                   [--batch-horizon B] [--deny warnings] [--seed S]
@@ -373,7 +380,7 @@ fn cmd_serve(args: &Args) {
     let gap = args.get_f64("mean-gap-us", 500.0) * 1e-6;
     let max_batch = args.get_usize("max-batch", 8);
     let seed = args.get_u64("seed", 7);
-    if args.has_flag("mixed") {
+    if args.has_flag("mixed") || args.get("replicas").is_some() {
         // Only an EXPLICIT --max-batch overrides the scenario's
         // per-lane caps (the legacy default of 8 is not implied).
         let max_batch = args.get("max-batch").and_then(|v| v.parse().ok());
@@ -384,6 +391,7 @@ fn cmd_serve(args: &Args) {
             !args.has_flag("no-cache"),
             args.has_flag("dispatch"),
             max_batch,
+            args,
         );
     }
     let hw = presets::a100();
@@ -407,7 +415,11 @@ fn cmd_serve(args: &Args) {
 
 /// Multi-op serving: BERT token traffic + vision bursts through the
 /// request lanes, with the bucketed plan cache (unless disabled) and
-/// optionally the compile-time dispatch table in front of it.
+/// optionally the compile-time dispatch table in front of it. With
+/// `--replicas N` the trace shards across a fleet (`--workers K` for
+/// the work-stealing pool, `--routing hash|load`, `--slo-ms D` +
+/// `--slo-policy serve|drop|degrade` for per-lane deadlines).
+#[allow(clippy::too_many_arguments)]
 fn cmd_serve_mixed(
     n_req: usize,
     gap: f64,
@@ -415,8 +427,12 @@ fn cmd_serve_mixed(
     cache: bool,
     dispatch: bool,
     max_batch: Option<usize>,
+    args: &Args,
 ) {
-    use vortex::serve::{scenario, serve_mixed_trace, LaneClass, SimLaneEngine};
+    use vortex::serve::{
+        scenario, serve_fleet, serve_mixed_trace, FleetConfig, LaneClass, LaneSlo,
+        OverloadPolicy, RoutePolicy, SimLaneEngine,
+    };
     let hw = presets::a100();
     let selector = scenario::demo_selector(seed);
     let trace = scenario::mixed_trace(n_req, gap, seed, DType::F32);
@@ -432,6 +448,63 @@ fn cmd_serve_mixed(
         for class in LaneClass::ALL {
             serve_cfg.lane_mut(class).max_batch = mb;
         }
+    }
+    if let Some(ms) = args.get("slo-ms").and_then(|v| v.parse::<f64>().ok()) {
+        let policy = match args.get_or("slo-policy", "serve") {
+            "drop" => OverloadPolicy::Drop,
+            "degrade" => OverloadPolicy::Degrade(HwMode::Only("cuda_core_f32")),
+            _ => OverloadPolicy::ServeAnyway,
+        };
+        let slo = LaneSlo::with_deadline(ms * 1e-3).with_policy(policy);
+        for class in LaneClass::ALL {
+            serve_cfg.lane_mut(class).slo = slo;
+        }
+    }
+
+    let replicas = args.get_usize("replicas", 1);
+    let workers = args.get_usize("workers", 0);
+    if replicas > 1 || workers > 1 {
+        let routing = match args.get_or("routing", "hash") {
+            "load" => RoutePolicy::LeastLoaded,
+            _ => RoutePolicy::HashKey,
+        };
+        let cfg = FleetConfig { replicas, workers, routing, serve: serve_cfg };
+        let make_engine = || SimLaneEngine { sim: Simulator::new(hw.clone(), seed) };
+        let stats = serve_fleet(make_engine, &selector, &cfg, &trace);
+        for d in &stats.slo_diags {
+            eprintln!("slo audit: {d}");
+        }
+        let (p50, _, p99) = stats.latency_percentiles();
+        println!(
+            "fleet: {} replicas ({} routing), {} workers — served {} of {} offered \
+             ({} degraded, {} dropped): span {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
+            replicas,
+            routing.name(),
+            workers,
+            stats.count(),
+            stats.offered(),
+            stats.degraded(),
+            stats.drops.len(),
+            stats.span_secs * 1e3,
+            p50 * 1e3,
+            p99 * 1e3,
+        );
+        for (i, rep) in stats.replicas.iter().enumerate() {
+            let (rp50, _, rp99) = rep.latency_percentiles();
+            println!(
+                "  replica {i}: {} served / {} dropped, span {:.2} ms, \
+                 p50 {:.2} ms, p99 {:.2} ms, {}:{}:{} table:cache:fresh",
+                rep.count(),
+                rep.drops.len(),
+                rep.span_secs * 1e3,
+                rp50 * 1e3,
+                rp99 * 1e3,
+                rep.dispatch.table,
+                rep.dispatch.cache,
+                rep.dispatch.fresh,
+            );
+        }
+        return;
     }
     let mut engine = SimLaneEngine { sim: Simulator::new(hw, seed) };
     let stats = serve_mixed_trace(&mut engine, &selector, &serve_cfg, &trace);

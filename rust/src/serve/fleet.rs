@@ -1,0 +1,431 @@
+//! Fleet serving: shard admission across N replicas under
+//! deterministic routing and execute the independent (replica, lane)
+//! units on an optional worker pool — with the single-threaded
+//! discrete-event replay as the correctness oracle.
+//!
+//! The paper's online half is O(1) per request (dispatch-table lookup),
+//! so serving "millions of users" (ROADMAP) is an embarrassingly
+//! shardable problem: each replica owns a COPY of the compile-time
+//! [`DispatchTable`] and its own [`PlanCache`] shards, so replicas
+//! share no mutable state at all. That makes determinism a
+//! construction property rather than a locking discipline:
+//!
+//! 1. **Routing is a sequential pre-pass.** Before anything executes,
+//!    every request is assigned a replica by a pure function of the
+//!    trace prefix ([`RoutePolicy`]) — hash-affinity on the merge key
+//!    (cache-friendly: compatible requests land together) or
+//!    least-loaded on accumulated dynamic units (balance-friendly).
+//!    Worker scheduling can never perturb placement.
+//! 2. **The unit of work is one (replica, lane) pair.** Each unit gets
+//!    a FRESH engine from the caller's factory (engines derive their
+//!    noise streams from hardware + seed, so a fresh engine per unit is
+//!    bit-reproducible wherever it is constructed), a fresh per-lane
+//!    plan-cache shard, and runs the same [`serve_lane`] loop the
+//!    single-threaded path runs.
+//! 3. **The executor only chooses WHEN units run**
+//!    ([`super::execute_units`]): results are scattered into
+//!    unit-indexed slots and aggregated in a fixed (replica, lane)
+//!    order, so worker count and steal order are unobservable in the
+//!    output. `workers <= 1` IS the discrete-event simulation; the
+//!    oracle test (`tests/fleet_oracle.rs`) checks the pool against it
+//!    bitwise — selections, plan sources, latencies, drop decisions.
+//!
+//! Per-lane SLO priorities ([`LaneSlo::priority`]) seed the work
+//! queues highest-first — a latency hint for the pool, provably not an
+//! outcome change.
+
+use std::cmp::Reverse;
+
+use crate::analysis::Diagnostic;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::select::Selector;
+use crate::dispatch::DispatchTable;
+use crate::util::rng::fnv1a;
+
+use super::{
+    dynamic_units, execute_units, merge_key, resolve_dispatch, serve_lane, CacheStats,
+    DispatchStats, DropRecord, LaneClass, LaneEngine, MixedStats, PlanCache, PlanSource,
+    RequestOutcome, ServeConfig, ServeRequest,
+};
+
+/// How the admission pre-pass assigns requests to replicas. Both
+/// policies are pure functions of the trace prefix — routing is
+/// deterministic and independent of execution order by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Merge-key affinity: requests hash on their [`merge_key`], so
+    /// batch-compatible requests always land on the same replica —
+    /// maximizes merge opportunities and keeps each replica's plan
+    /// cache hot on its own shape families.
+    #[default]
+    HashKey,
+    /// Send each request to the replica with the least accumulated
+    /// dynamic-unit load so far (lowest index on ties) — trades cache
+    /// affinity for balance under skewed traffic.
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::HashKey => "hash-key",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Fleet deployment shape: replica count, worker-pool size and the
+/// per-replica serving configuration (every replica runs the same
+/// [`ServeConfig`]).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of replicas admission shards across (>= 1).
+    pub replicas: usize,
+    /// Worker threads executing (replica, lane) units. `0` or `1` runs
+    /// the sequential discrete-event loop on the calling thread — the
+    /// determinism oracle the pool is tested against.
+    pub workers: usize,
+    pub routing: RoutePolicy,
+    pub serve: ServeConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replicas: 1,
+            workers: 0,
+            routing: RoutePolicy::default(),
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+/// Fleet-wide serving result: per-replica [`MixedStats`] plus the
+/// fleet aggregates. `outcomes`/`drops` are fleet-wide and sorted by
+/// request id — the exact vectors the determinism oracle compares.
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    /// Per-replica results, indexed by replica (every replica present
+    /// even when routed zero requests).
+    pub replicas: Vec<MixedStats>,
+    /// All outcomes fleet-wide, sorted by request id.
+    pub outcomes: Vec<RequestOutcome>,
+    /// All shed requests fleet-wide, sorted by request id.
+    pub drops: Vec<DropRecord>,
+    /// Fleet-wide tri-state plan-source accounting.
+    pub dispatch: DispatchStats,
+    /// Summed plan-cache counters across every per-unit shard.
+    pub cache: CacheStats,
+    /// Offline build statistics of the shared dispatch table build
+    /// (built ONCE, cloned per replica), when dispatch is enabled.
+    pub dispatch_build: Option<crate::dispatch::BuildStats>,
+    /// Adopted-table audit findings (see [`ServeConfig::table_policy`]).
+    pub table_diags: Vec<Diagnostic>,
+    /// Static SLO feasibility findings ([`crate::analysis::audit_slo`]):
+    /// deadlines below the modeled service floor, unservable downgrade
+    /// modes, windows exceeding deadlines. Advisory — serving proceeds.
+    pub slo_diags: Vec<Diagnostic>,
+    /// Max replica span (replicas are concurrent by definition).
+    pub span_secs: f64,
+}
+
+impl FleetStats {
+    pub fn count(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// Requests offered to the fleet: served + shed.
+    pub fn offered(&self) -> usize {
+        self.outcomes.len() + self.drops.len()
+    }
+
+    /// Served requests that ran under a downgraded mode.
+    pub fn degraded(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.degraded).count()
+    }
+
+    /// Served at full fidelity. The accounting identity the overload
+    /// tests pin: `admitted() + degraded() + drops.len() == offered()`.
+    pub fn admitted(&self) -> usize {
+        self.outcomes.len() - self.degraded()
+    }
+
+    /// Aggregate (p50, p95, p99) request latency across the fleet —
+    /// same index formula as the per-lane [`Metrics`] percentiles.
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let mut lat: Vec<f64> = self.outcomes.iter().map(|o| o.latency).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            Metrics::pct(&lat, 0.5),
+            Metrics::pct(&lat, 0.95),
+            Metrics::pct(&lat, 0.99),
+        )
+    }
+}
+
+/// The routing pre-pass: replica index per request, as a pure function
+/// of the trace prefix. Exposed to the oracle tests so they can assert
+/// placement invariance directly.
+pub(crate) fn route(
+    policy: RoutePolicy,
+    replicas: usize,
+    requests: &[ServeRequest],
+) -> Vec<usize> {
+    match policy {
+        RoutePolicy::HashKey => requests
+            .iter()
+            .map(|r| (fnv1a(merge_key(&r.program).id().as_bytes()) % replicas as u64) as usize)
+            .collect(),
+        RoutePolicy::LeastLoaded => {
+            let mut loads = vec![0usize; replicas];
+            requests
+                .iter()
+                .map(|r| {
+                    let tgt = (0..replicas).min_by_key(|&i| loads[i]).unwrap();
+                    loads[tgt] += dynamic_units(&r.program);
+                    tgt
+                })
+                .collect()
+        }
+    }
+}
+
+/// One (replica, lane) unit's routed request list.
+struct Unit<'a> {
+    replica: usize,
+    class: LaneClass,
+    requests: Vec<&'a ServeRequest>,
+}
+
+/// What one executed unit hands back for aggregation.
+struct UnitResult {
+    run: super::LaneRun,
+    cache: CacheStats,
+}
+
+/// Serve a mixed trace on a replica fleet. `make_engine` is called
+/// once per (replica, lane) unit — IN the executing thread — and must
+/// produce engines that are bit-reproducible functions of their
+/// construction arguments (true of [`super::SimLaneEngine`]: service
+/// times derive from hardware + seed, not from wall clock or address).
+///
+/// The result is bit-identical for every `workers` value — the fleet
+/// determinism contract (see the module docs and
+/// `tests/fleet_oracle.rs`).
+pub fn serve_fleet<E: LaneEngine, F: Fn() -> E + Sync>(
+    make_engine: F,
+    selector: &Selector,
+    cfg: &FleetConfig,
+    requests: &[ServeRequest],
+) -> FleetStats {
+    assert!(cfg.replicas >= 1, "a fleet has at least one replica");
+    debug_assert!(requests.windows(2).all(|w| w[0].arrive <= w[1].arrive));
+
+    // Compile-time half, fleet edition: ONE table resolution (adopted
+    // payloads audited once), cloned per replica — per-replica table
+    // REUSE, not per-replica rebuild.
+    let (dispatch, table_diags) = resolve_dispatch(selector, &cfg.serve);
+    let dispatch_build = dispatch.as_ref().map(|t| t.stats.clone());
+    let tables: Vec<Option<DispatchTable>> =
+        (0..cfg.replicas).map(|_| dispatch.clone()).collect();
+    // Static SLO feasibility check: deadlines below the modeled
+    // service floor or unservable downgrade modes are reported before
+    // a single request is served.
+    let slo_diags = crate::analysis::audit_slo(selector, &cfg.serve).diagnostics;
+
+    // Sequential routing pre-pass: placement is fixed before any unit
+    // executes. Per-replica lists stay arrival-sorted because the
+    // input is.
+    let assignment = route(cfg.routing, cfg.replicas, requests);
+    let mut units: Vec<Unit> = Vec::new();
+    for replica in 0..cfg.replicas {
+        for class in LaneClass::ALL {
+            let routed: Vec<&ServeRequest> = requests
+                .iter()
+                .zip(&assignment)
+                .filter(|&(r, &a)| a == replica && LaneClass::of(&r.program) == class)
+                .map(|(r, _)| r)
+                .collect();
+            if !routed.is_empty() {
+                units.push(Unit { replica, class, requests: routed });
+            }
+        }
+    }
+
+    // Priority seeding: higher-priority lanes enter the work queues
+    // first. A latency hint only — unit results are scattered by unit
+    // index, so outcomes are invariant to this order (and the oracle
+    // test would catch it if they were not).
+    let mut seed_order: Vec<usize> = (0..units.len()).collect();
+    seed_order
+        .sort_by_key(|&u| (Reverse(cfg.serve.lane(units[u].class).slo.priority), u));
+
+    let results: Vec<UnitResult> = execute_units(cfg.workers, &seed_order, |u| {
+        let unit = &units[u];
+        let mut engine = make_engine();
+        let mut cache =
+            cfg.serve.plan_cache.map(|cap| PlanCache::for_selector(selector, cap));
+        let run = serve_lane(
+            &mut engine,
+            selector,
+            cfg.serve.lane(unit.class),
+            unit.class,
+            unit.replica,
+            &unit.requests,
+            tables[unit.replica].as_ref(),
+            cache.as_mut(),
+        );
+        UnitResult { run, cache: cache.map(|c| c.stats).unwrap_or_default() }
+    });
+
+    // Aggregation in fixed (replica, lane) order — `units` was built
+    // replica-major, lane-minor, and `results` is unit-indexed.
+    let mut stats = FleetStats {
+        replicas: (0..cfg.replicas)
+            .map(|_| MixedStats {
+                dispatch_build: dispatch_build.clone(),
+                ..MixedStats::default()
+            })
+            .collect(),
+        dispatch_build,
+        table_diags,
+        slo_diags,
+        ..FleetStats::default()
+    };
+    for (unit, result) in units.iter().zip(results) {
+        let rep = &mut stats.replicas[unit.replica];
+        rep.span_secs = rep.span_secs.max(result.run.stats.metrics.span_secs);
+        rep.outcomes.extend(result.run.outcomes);
+        rep.drops.extend(result.run.drops);
+        rep.lanes.push(result.run.stats);
+        rep.cache.hits += result.cache.hits;
+        rep.cache.misses += result.cache.misses;
+        rep.cache.evictions += result.cache.evictions;
+    }
+    for rep in &mut stats.replicas {
+        rep.outcomes.sort_by_key(|o| o.id);
+        rep.drops.sort_by_key(|d| d.id);
+        for o in &rep.outcomes {
+            match o.source {
+                PlanSource::Table => rep.dispatch.table += 1,
+                PlanSource::Cache => rep.dispatch.cache += 1,
+                PlanSource::Fresh => rep.dispatch.fresh += 1,
+            }
+        }
+        stats.span_secs = stats.span_secs.max(rep.span_secs);
+        stats.outcomes.extend(rep.outcomes.iter().cloned());
+        stats.drops.extend(rep.drops.iter().cloned());
+        stats.dispatch.table += rep.dispatch.table;
+        stats.dispatch.cache += rep.dispatch.cache;
+        stats.dispatch.fresh += rep.dispatch.fresh;
+        stats.cache.hits += rep.cache.hits;
+        stats.cache.misses += rep.cache.misses;
+        stats.cache.evictions += rep.cache.evictions;
+    }
+    stats.outcomes.sort_by_key(|o| o.id);
+    stats.drops.sort_by_key(|d| d.id);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scenario::{demo_selector, mixed_trace, serving_config};
+    use super::super::{serve_mixed_trace, SimLaneEngine};
+    use super::*;
+    use crate::hw::presets;
+    use crate::ir::DType;
+    use crate::sim::Simulator;
+
+    fn engine() -> SimLaneEngine {
+        SimLaneEngine { sim: Simulator::new(presets::a100(), 11) }
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let trace = mixed_trace(120, 4e-4, 3, DType::F32);
+        for policy in [RoutePolicy::HashKey, RoutePolicy::LeastLoaded] {
+            let a = route(policy, 4, &trace);
+            let b = route(policy, 4, &trace);
+            assert_eq!(a, b);
+            assert_eq!(a.len(), trace.len());
+            assert!(a.iter().all(|&r| r < 4));
+        }
+        // One replica: everything lands on it under either policy.
+        assert!(route(RoutePolicy::HashKey, 1, &trace).iter().all(|&r| r == 0));
+    }
+
+    #[test]
+    fn hash_routing_keeps_merge_families_together() {
+        let trace = mixed_trace(120, 4e-4, 3, DType::F32);
+        let assignment = route(RoutePolicy::HashKey, 4, &trace);
+        let mut family: std::collections::HashMap<String, usize> =
+            std::collections::HashMap::new();
+        for (r, &a) in trace.iter().zip(&assignment) {
+            let key = merge_key(&r.program).id();
+            let prev = family.entry(key).or_insert(a);
+            assert_eq!(*prev, a, "merge family split across replicas");
+        }
+    }
+
+    #[test]
+    fn least_loaded_touches_every_replica() {
+        let trace = mixed_trace(160, 4e-4, 5, DType::F32);
+        let assignment = route(RoutePolicy::LeastLoaded, 4, &trace);
+        let mut seen = vec![false; 4];
+        for &a in &assignment {
+            seen[a] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "idle replica under least-loaded");
+    }
+
+    #[test]
+    fn one_replica_fleet_matches_the_single_threaded_path() {
+        // A 1-replica, 0-worker fleet is the serve_mixed_trace loop
+        // with per-lane cache shards instead of one shared cache; at
+        // the default capacity nothing evicts and lane buckets are
+        // disjoint (the key includes the op), so every per-request
+        // number is bit-identical.
+        let selector = demo_selector(5);
+        let cfg = FleetConfig { serve: serving_config(), ..FleetConfig::default() };
+        let trace = mixed_trace(160, 4e-4, 7, DType::F32);
+        let fleet = serve_fleet(engine, &selector, &cfg, &trace);
+        let single = serve_mixed_trace(&mut engine(), &selector, &cfg.serve, &trace);
+        assert_eq!(fleet.count(), single.count());
+        for (f, s) in fleet.outcomes.iter().zip(&single.outcomes) {
+            assert_eq!(f.id, s.id);
+            assert_eq!(f.latency.to_bits(), s.latency.to_bits());
+            assert_eq!(f.batch_size, s.batch_size);
+            assert_eq!(f.source, s.source);
+            assert!(f.selection.same_plan(&s.selection));
+        }
+        assert_eq!(fleet.cache.hits, single.cache.hits);
+        assert_eq!(fleet.cache.misses, single.cache.misses);
+    }
+
+    #[test]
+    fn sharding_preserves_every_request_exactly_once() {
+        let selector = demo_selector(5);
+        let trace = mixed_trace(160, 4e-4, 9, DType::F32);
+        for replicas in [2usize, 4] {
+            let cfg = FleetConfig {
+                replicas,
+                routing: RoutePolicy::LeastLoaded,
+                serve: serving_config(),
+                ..FleetConfig::default()
+            };
+            let fleet = serve_fleet(engine, &selector, &cfg, &trace);
+            assert_eq!(fleet.offered(), trace.len());
+            let ids: Vec<u64> = fleet.outcomes.iter().map(|o| o.id).collect();
+            assert_eq!(ids, (0..trace.len() as u64).collect::<Vec<_>>());
+            assert_eq!(fleet.replicas.len(), replicas);
+            // Per-replica stats partition the fleet totals.
+            let sum: usize = fleet.replicas.iter().map(|r| r.count()).sum();
+            assert_eq!(sum, fleet.count());
+            // Outcomes carry the replica the routing pre-pass chose.
+            let assignment = route(cfg.routing, replicas, &trace);
+            for o in &fleet.outcomes {
+                assert_eq!(o.replica, assignment[o.id as usize]);
+            }
+        }
+    }
+}

@@ -34,11 +34,26 @@
 //!
 //! The old GEMM-only API (`coordinator::server::serve_trace`)
 //! delegates to a one-lane instance of [`serve_mixed_trace`].
+//!
+//! At fleet scale ([`fleet`]), admission shards across N replicas —
+//! each owning its own dispatch-table copy and plan-cache shards —
+//! under deterministic routing, per-lane latency SLOs ([`slo`]) drive
+//! deadline-aware batching and overload shedding/degradation, and an
+//! optional `std::thread` worker pool with work-stealing executes the
+//! independent (replica, lane) units — proven bit-identical to the
+//! single-threaded discrete-event replay (the determinism oracle; see
+//! the "Fleet serving" section of `docs/ARCHITECTURE.md`).
 
 pub mod cache;
+pub mod fleet;
 pub mod scenario;
+pub mod slo;
 
 pub use cache::{CacheStats, PlanCache};
+pub use fleet::{serve_fleet, FleetConfig, FleetStats, RoutePolicy};
+pub use slo::{
+    DropRecord, LaneSlo, OverloadPolicy, BATCH_BUDGET_FRACTION, LAUNCH_BUDGET_FRACTION,
+};
 
 use crate::analysis::Diagnostic;
 use crate::coordinator::metrics::Metrics;
@@ -140,6 +155,20 @@ impl LaneClass {
             LaneClass::Attention => 3,
         }
     }
+
+    /// The op kinds admitted to this lane — the inverse of
+    /// [`LaneClass::of`], used by the SLO feasibility audit
+    /// ([`crate::analysis::audit_slo`]) to bound every op a lane's
+    /// deadline must cover.
+    pub fn ops(self) -> &'static [crate::ir::OpKind] {
+        use crate::ir::OpKind;
+        match self {
+            LaneClass::Gemm => &[OpKind::Gemm],
+            LaneClass::BatchedGemm => &[OpKind::BatchedGemm],
+            LaneClass::Conv => &[OpKind::Conv2d, OpKind::GroupedConv2d],
+            LaneClass::Attention => &[OpKind::FusedAttention],
+        }
+    }
 }
 
 /// Batching policy of one lane (the per-lane half of the old
@@ -147,14 +176,25 @@ impl LaneClass {
 #[derive(Debug, Clone, Copy)]
 pub struct LaneConfig {
     pub max_batch: usize,
-    /// Max time the batcher waits after the first queued request.
+    /// Max time the batcher waits after the first queued request —
+    /// capped by the lane's deadline budget when an SLO is set
+    /// ([`LaneSlo::window`]), so a tight-SLO lane never batches its
+    /// deadline away.
     pub batch_window: f64,
     pub mode: HwMode,
+    /// Latency objective + overload policy (default: no SLO — the
+    /// batching behavior is bit-identical to the pre-SLO loop).
+    pub slo: LaneSlo,
 }
 
 impl Default for LaneConfig {
     fn default() -> Self {
-        LaneConfig { max_batch: 8, batch_window: 2e-3, mode: HwMode::Adaptive }
+        LaneConfig {
+            max_batch: 8,
+            batch_window: 2e-3,
+            mode: HwMode::Adaptive,
+            slo: LaneSlo::default(),
+        }
     }
 }
 
@@ -240,7 +280,7 @@ impl ServeConfig {
 /// [`TablePolicy`]) first, then an in-process build. Every refusal or
 /// warning is returned as auditor diagnostics so telemetry shows WHY a
 /// payload was not (or reluctantly was) trusted.
-fn resolve_dispatch(
+pub(crate) fn resolve_dispatch(
     selector: &Selector,
     cfg: &ServeConfig,
 ) -> (Option<DispatchTable>, Vec<Diagnostic>) {
@@ -317,8 +357,9 @@ fn merge_programs(programs: &[&TensorProgram]) -> TensorProgram {
 }
 
 /// The merged dynamic-axis extent (token rows / batch elements) a
-/// program contributes — the lane-throughput unit.
-fn dynamic_units(p: &TensorProgram) -> usize {
+/// program contributes — the lane-throughput unit, and the load
+/// measure the fleet's least-loaded routing pre-pass accumulates.
+pub(crate) fn dynamic_units(p: &TensorProgram) -> usize {
     match *p {
         TensorProgram::Gemm { m, .. } => m,
         TensorProgram::BatchedGemm { b, .. } => b,
@@ -363,12 +404,21 @@ impl LaneEngine for SimLaneEngine {
 pub struct RequestOutcome {
     pub id: u64,
     pub lane: LaneClass,
+    /// Replica that served the request (0 outside the fleet).
+    pub replica: usize,
     /// Event-clock latency (queueing + modeled scheduling + service) —
     /// deterministic under replay; see [`SCHED_OVERHEAD_SECS`].
     pub latency: f64,
+    /// Event-clock instant the request's batch launched — the number
+    /// the SLO regression tests pin (a tight-SLO lane never launches
+    /// past its deadline budget).
+    pub launch: f64,
     pub batch_size: usize,
     /// Where the batch's plan came from (table / cache / fresh).
     pub source: PlanSource,
+    /// True when the batch was served under the overload policy's
+    /// downgraded backend mode ([`OverloadPolicy::Degrade`]).
+    pub degraded: bool,
     /// The constructed plan the request's batch executed.
     pub selection: Selection,
 }
@@ -409,6 +459,10 @@ pub struct MixedStats {
     /// spite of ([`TablePolicy::WarnUnaudited`]). Empty when no payload
     /// was adopted or the audit was clean.
     pub table_diags: Vec<Diagnostic>,
+    /// Requests shed by the admission controller
+    /// ([`OverloadPolicy::Drop`]), sorted by request id. Empty without
+    /// SLOs — and `count() + drops.len()` is always the offered load.
+    pub drops: Vec<DropRecord>,
     /// Max lane span (lanes run as concurrent executors).
     pub span_secs: f64,
 }
@@ -416,6 +470,23 @@ pub struct MixedStats {
 impl MixedStats {
     pub fn count(&self) -> usize {
         self.outcomes.len()
+    }
+
+    /// Requests offered to the server: served + shed.
+    pub fn offered(&self) -> usize {
+        self.outcomes.len() + self.drops.len()
+    }
+
+    /// Served requests that ran under the overload policy's
+    /// downgraded mode.
+    pub fn degraded(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.degraded).count()
+    }
+
+    /// Served requests at full fidelity (neither shed nor degraded) —
+    /// `admitted() + degraded() + drops.len() == offered()` exactly.
+    pub fn admitted(&self) -> usize {
+        self.outcomes.len() - self.degraded()
     }
 
     pub fn total_sched_secs(&self) -> f64 {
@@ -492,20 +563,23 @@ pub fn serve_mixed_trace(
         if lane_reqs.is_empty() {
             continue;
         }
-        let lane = serve_lane(
+        let run = serve_lane(
             engine,
             selector,
             cfg.lane(class),
             class,
+            0,
             &lane_reqs,
             dispatch.as_ref(),
             plan_cache.as_mut(),
-            &mut stats.outcomes,
         );
-        stats.span_secs = stats.span_secs.max(lane.metrics.span_secs);
-        stats.lanes.push(lane);
+        stats.span_secs = stats.span_secs.max(run.stats.metrics.span_secs);
+        stats.outcomes.extend(run.outcomes);
+        stats.drops.extend(run.drops);
+        stats.lanes.push(run.stats);
     }
     stats.outcomes.sort_by_key(|o| o.id);
+    stats.drops.sort_by_key(|d| d.id);
     stats.cache = plan_cache.map(|c| c.stats).unwrap_or_default();
     for o in &stats.outcomes {
         match o.source {
@@ -517,35 +591,109 @@ pub fn serve_mixed_trace(
     stats
 }
 
+/// One lane's full discrete-event result: the unit of parallel work in
+/// the fleet executor — a pure function of (engine seed, selector,
+/// lane config, request list, table), so any execution order produces
+/// bit-identical runs.
+#[derive(Debug)]
+pub(crate) struct LaneRun {
+    pub(crate) stats: LaneStats,
+    pub(crate) outcomes: Vec<RequestOutcome>,
+    pub(crate) drops: Vec<DropRecord>,
+}
+
 /// One lane's discrete-event loop: the old `serve_trace` core,
-/// generalized to merge-key batching. Incompatible requests never
-/// merge — they stay queued and the next batch forms from the earliest
-/// pending request.
+/// generalized to merge-key batching and (when the lane carries an
+/// SLO) deadline-aware batching + admission control. Incompatible
+/// requests never merge — they stay queued and the next batch forms
+/// from the earliest pending request.
+///
+/// SLO semantics (all functions of the event clock — replay stays
+/// bit-identical): the batching window is capped at the deadline
+/// budget ([`LaneSlo::window`]), the window close is capped at the
+/// head's launch cutoff ([`LaneSlo::launch_cutoff`]), and a head whose
+/// deadline already passed when the server freed up is shed
+/// ([`OverloadPolicy::Drop`] — control-plane, no clock charge) or
+/// served immediately under the downgrade mode
+/// ([`OverloadPolicy::Degrade`]). With the default no-op SLO every
+/// branch reduces to the legacy rule exactly.
 #[allow(clippy::too_many_arguments)]
-fn serve_lane(
+pub(crate) fn serve_lane(
     engine: &mut dyn LaneEngine,
     selector: &Selector,
     cfg: &LaneConfig,
     class: LaneClass,
+    replica: usize,
     requests: &[&ServeRequest],
     dispatch: Option<&DispatchTable>,
     mut plan_cache: Option<&mut PlanCache>,
-    outcomes: &mut Vec<RequestOutcome>,
-) -> LaneStats {
+) -> LaneRun {
     let mut metrics = Metrics::default();
+    let mut outcomes = Vec::new();
+    let mut drops = Vec::new();
     let mut batches = 0usize;
     let mut total_units = 0usize;
     let mut clock = 0.0f64;
     let mut served = vec![false; requests.len()];
     let mut pending = requests.len();
     let mut next = 0usize;
-    while next < requests.len() {
+    loop {
+        while next < requests.len() && served[next] {
+            next += 1;
+        }
+        if next >= requests.len() {
+            break;
+        }
         // Server becomes free at `clock`; the next batch forms from the
         // earliest pending request and its merge-key-compatible peers.
         let first = requests[next];
         let key = merge_key(&first.program);
         let open = clock.max(first.arrive);
-        let close = open + cfg.batch_window;
+
+        // Admission control: a head whose deadline already passed when
+        // the server freed up triggers the overload policy.
+        let mut mode = cfg.mode;
+        let mut degraded = false;
+        if let Some(d) = cfg.slo.deadline {
+            if open > first.arrive + d {
+                match cfg.slo.policy {
+                    OverloadPolicy::ServeAnyway => {}
+                    OverloadPolicy::Drop => {
+                        // Shed ONE head at a time: the decision charges
+                        // nothing to the clock, and the freed capacity
+                        // goes to the next pending request.
+                        drops.push(DropRecord {
+                            id: first.id,
+                            lane: class,
+                            replica,
+                            decided_at: open,
+                            miss_by: open - (first.arrive + d),
+                        });
+                        metrics.dropped += 1;
+                        served[next] = true;
+                        pending -= 1;
+                        continue;
+                    }
+                    OverloadPolicy::Degrade(m) => {
+                        mode = m;
+                        degraded = true;
+                    }
+                }
+            }
+        }
+
+        // The window close: the (deadline-capped) batching window,
+        // never past the head's launch cutoff. A degraded batch closes
+        // immediately — only already-arrived peers merge.
+        let close = if degraded {
+            open
+        } else {
+            let close = open + cfg.slo.window(cfg.batch_window);
+            match cfg.slo.launch_cutoff(first.arrive) {
+                Some(cutoff) => close.min(cutoff.max(open)),
+                None => close,
+            }
+        };
         let mut batch = vec![next];
         for (j, r) in requests.iter().enumerate().skip(next + 1) {
             if batch.len() >= cfg.max_batch || r.arrive > close {
@@ -562,7 +710,9 @@ fn serve_lane(
         // Unserved requests outside this batch (every unserved index is
         // >= next, so the counter is exact) — O(1), not a trace rescan.
         let more_pending = pending > batch.len();
-        let launch = if batch.len() == cfg.max_batch || !more_pending {
+        let launch = if degraded {
+            open
+        } else if batch.len() == cfg.max_batch || !more_pending {
             last_arrive.max(open)
         } else {
             close
@@ -574,14 +724,17 @@ fn serve_lane(
         let space = merged.space();
         // Tri-state resolution: compile-time table first, then the
         // plan cache (beyond-horizon fallback), then a fresh scan.
-        let table_sel = dispatch.and_then(|t| t.select(selector, space, cfg.mode));
+        // `mode` is the lane's configured mode, or the overload
+        // downgrade — the cache key and any (op, mode) table both
+        // include the mode, so the tri-state stack stays sound.
+        let table_sel = dispatch.and_then(|t| t.select(selector, space, mode));
         let (sel, source) = match table_sel {
             Some(sel) => (sel, PlanSource::Table),
             None => match plan_cache.as_deref_mut() {
                 Some(c) => {
                     let hits0 = c.stats.hits;
                     let sel = c
-                        .select(selector, space, cfg.mode)
+                        .select(selector, space, mode)
                         .expect("selector must handle any shape (sample-free)");
                     let source = if c.stats.hits > hits0 {
                         PlanSource::Cache
@@ -592,7 +745,7 @@ fn serve_lane(
                 }
                 None => (
                     selector
-                        .select(space, cfg.mode)
+                        .select(space, mode)
                         .expect("selector must handle any shape (sample-free)"),
                     PlanSource::Fresh,
                 ),
@@ -613,12 +766,18 @@ fn serve_lane(
                 service / bsz as f64,
                 merged_flops * own[bi] / own_sum,
             );
+            if degraded {
+                metrics.degraded += 1;
+            }
             outcomes.push(RequestOutcome {
                 id: r.id,
                 lane: class,
+                replica,
                 latency,
+                launch,
                 batch_size: bsz,
                 source,
+                degraded,
                 selection: sel.clone(),
             });
             served[j] = true;
@@ -627,12 +786,84 @@ fn serve_lane(
         total_units += dynamic_units(&merged);
         pending -= bsz;
         clock = done;
-        while next < requests.len() && served[next] {
-            next += 1;
-        }
     }
     metrics.span_secs = clock;
-    LaneStats { class, metrics, batches, total_units }
+    LaneRun { stats: LaneStats { class, metrics, batches, total_units }, outcomes, drops }
+}
+
+/// Deterministic parallel executor over independent work units: run
+/// `job(u)` for every `u` in `0..seed_order.len()` and return the
+/// results in UNIT-INDEX order regardless of worker count.
+///
+/// `workers <= 1` is the sequential discrete-event oracle (units run
+/// in index order on the calling thread). With more workers, a
+/// `std::thread` pool is seeded round-robin from `seed_order` (the
+/// caller's priority order — a scheduling hint) and idle workers
+/// STEAL from the back of other workers' queues. Determinism is by
+/// construction, not by locking discipline: each unit is an
+/// independent pure job writing only its own indexed result slot, so
+/// scheduling affects wall-clock and nothing else — the property the
+/// fleet oracle test (`tests/fleet_oracle.rs`) checks bitwise across
+/// worker counts.
+pub(crate) fn execute_units<R: Send>(
+    workers: usize,
+    seed_order: &[usize],
+    job: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    use std::collections::VecDeque;
+    use std::sync::Mutex;
+    let n = seed_order.len();
+    debug_assert!({
+        let mut s: Vec<usize> = seed_order.to_vec();
+        s.sort_unstable();
+        s == (0..n).collect::<Vec<_>>()
+    });
+    if workers <= 1 {
+        return (0..n).map(job).collect();
+    }
+    let queues: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (i, &u) in seed_order.iter().enumerate() {
+        queues[i % workers].lock().unwrap().push_back(u);
+    }
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let queues = &queues;
+                let job = &job;
+                s.spawn(move || {
+                    let mut done: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        // Own queue front first, then steal from the
+                        // BACK of the others (classic stealing keeps
+                        // contention off the owners' hot ends). No unit
+                        // ever re-enqueues work, so all-empty means
+                        // drained for good.
+                        let u = queues[w].lock().unwrap().pop_front().or_else(|| {
+                            (0..queues.len())
+                                .filter(|&o| o != w)
+                                .find_map(|o| queues[o].lock().unwrap().pop_back())
+                        });
+                        match u {
+                            Some(u) => done.push((u, job(u))),
+                            None => break,
+                        }
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (u, r) in h.join().expect("fleet worker panicked") {
+                slots[u] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every unit executes exactly once"))
+        .collect()
 }
 
 #[cfg(test)]

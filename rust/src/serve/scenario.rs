@@ -158,6 +158,53 @@ pub fn dispatch_config() -> DispatchConfig {
         .with_op_horizons(OpKind::GroupedConv2d, &[32, 100_352, 1, 9])
 }
 
+/// Overload scenario: `n_requests` land in one burst across EVERY lane
+/// class (token GEMMs, raw batched GEMMs, attention chains, strided +
+/// depthwise convs), with microsecond-scale interarrivals — far faster
+/// than any lane can drain, so every lane's queue grows without bound
+/// for the duration of the burst. This is the trace the overload tests
+/// drive: under tight deadlines an admission controller MUST shed or
+/// degrade, and adding replicas must monotonically relieve the tail.
+/// Deterministic from the seed; sorted by arrival, ids in arrival
+/// order; every template is servable by [`demo_selector`].
+pub fn burst_trace(n_requests: usize, seed: u64, dtype: DType) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(seed);
+    let lm = models::request_ops(Model::Bert, 128, dtype);
+    let resnet = models::request_ops(Model::ResNet50, 2, dtype);
+    let mobile = models::request_ops(Model::MobileNet, 2, dtype);
+    let templates: Vec<TensorProgram> = vec![
+        lm[0].clone(),                                                   // token GEMM
+        lm[1].clone(),                                                   // attention chain
+        TensorProgram::BatchedGemm { b: 12, m: 64, n: 64, k: 64, dtype }, // raw batched GEMM
+        resnet[0].clone(),                                               // strided conv
+        mobile[1].clone(),                                               // depthwise conv
+    ];
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        // ~1 µs mean gap: the whole burst lands within ~n µs while
+        // per-batch service is tens of µs — saturation by construction.
+        t += rng.exp(1e-6);
+        out.push(ServeRequest {
+            id: i as u64,
+            program: templates[i % templates.len()].clone(),
+            arrive: t,
+        });
+    }
+    out
+}
+
+/// [`serving_config`] with the given SLO applied to every lane, and
+/// staggered priorities (attention highest — the interactive lane) so
+/// the fleet executor's priority seeding has something to order.
+pub fn slo_serving_config(slo: crate::serve::LaneSlo) -> ServeConfig {
+    let mut cfg = serving_config();
+    for (i, class) in LaneClass::ALL.iter().enumerate() {
+        cfg.lane_mut(*class).slo = slo.with_priority(i as u8 + 1);
+    }
+    cfg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,6 +271,34 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn burst_trace_saturates_every_lane() {
+        let trace = burst_trace(100, 3, DType::F32);
+        assert_eq!(trace.len(), 100);
+        assert!(trace.windows(2).all(|w| w[0].arrive <= w[1].arrive));
+        let mut lanes: HashSet<LaneClass> = HashSet::new();
+        for r in &trace {
+            assert!(r.program.validate().is_ok(), "{}", r.program.id());
+            lanes.insert(LaneClass::of(&r.program));
+        }
+        assert_eq!(lanes.len(), LaneClass::ALL.len(), "lane not saturated");
+        // The whole burst lands within a few hundred µs.
+        assert!(trace.last().unwrap().arrive < 1e-3);
+    }
+
+    #[test]
+    fn slo_config_staggers_priorities() {
+        let slo = crate::serve::LaneSlo::with_deadline(1e-3);
+        let cfg = slo_serving_config(slo);
+        for class in LaneClass::ALL {
+            assert_eq!(cfg.lane(class).slo.deadline, Some(1e-3));
+        }
+        assert!(
+            cfg.lane(LaneClass::Attention).slo.priority
+                > cfg.lane(LaneClass::Gemm).slo.priority
+        );
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Per-lane latency SLOs: deadline-derived batching windows, launch
+//! cutoffs and the overload policy (shed vs. mode-downgrade).
+//!
+//! A serving deployment does not batch for throughput alone — every
+//! lane carries a latency objective, and the batcher must spend the
+//! deadline budget deliberately. The split here is fixed fractions of
+//! the deadline (capacity planning, not feedback control — the same
+//! sample-free posture as the dispatch tables):
+//!
+//! * at most [`BATCH_BUDGET_FRACTION`] of the deadline is spent
+//!   *waiting* for peers to merge (the effective batching window is
+//!   `batch_window.min(deadline × BATCH_BUDGET_FRACTION)` — the fix
+//!   for the old hardcoded 2 ms window that ignored SLOs entirely);
+//! * the batch *launches* no later than
+//!   `arrive + deadline × LAUNCH_BUDGET_FRACTION`, reserving the rest
+//!   of the budget for the modeled scheduling overhead + service time;
+//! * a head request whose deadline is already unmeetable when the
+//!   server frees up (`open > arrive + deadline`) triggers the
+//!   [`OverloadPolicy`]: keep serving (the default — the legacy
+//!   behavior, bit-for-bit), shed it (a [`DropRecord`], no clock
+//!   charge — shedding is control-plane), or serve it immediately in a
+//!   degraded backend mode (mode-downgrade: the batch closes at once
+//!   and selection runs under the downgrade [`HwMode`]).
+//!
+//! Every decision is a function of the event clock and the
+//! configuration only, so SLO-aware serving replays bit-identically —
+//! the fleet executor's determinism oracle ([`crate::serve::fleet`])
+//! covers drop and degrade decisions too. Feasibility of a deadline
+//! against the modeled service floor is checked statically by
+//! [`crate::analysis::audit_slo`].
+
+use crate::coordinator::select::HwMode;
+
+use super::LaneClass;
+
+/// Fraction of the deadline the batcher may spend WAITING for
+/// merge-compatible peers after the head request arrives.
+pub const BATCH_BUDGET_FRACTION: f64 = 0.25;
+
+/// Fraction of the deadline by which the batch must have LAUNCHED,
+/// reserving the remainder for scheduling overhead + service.
+pub const LAUNCH_BUDGET_FRACTION: f64 = 0.5;
+
+/// What a lane does with a head request whose deadline is already
+/// unmeetable when the server frees up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverloadPolicy {
+    /// Serve regardless (the legacy behavior, and the default): the
+    /// SLO is observational only.
+    #[default]
+    ServeAnyway,
+    /// Shed the head request: it is recorded as a [`DropRecord`] and
+    /// never executes. Shedding charges nothing to the event clock —
+    /// the decision is control-plane, and the freed capacity goes to
+    /// the next pending request.
+    Drop,
+    /// Serve immediately under a downgraded backend mode: the batch
+    /// closes at once (no further waiting) and selection runs with
+    /// this [`HwMode`] instead of the lane's configured one. Outcomes
+    /// are flagged `degraded`.
+    Degrade(HwMode),
+}
+
+/// Per-lane latency objective: an optional completion deadline
+/// (seconds from request arrival), a scheduling priority (higher
+/// priorities seed the fleet executor's work queues first — a
+/// scheduling hint only, never an outcome change), and the overload
+/// policy. The default is a no-op SLO: no deadline, priority 0,
+/// serve-anyway — byte-identical serving to the pre-SLO loop.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LaneSlo {
+    /// Completion deadline in seconds from arrival (`None` = no SLO).
+    pub deadline: Option<f64>,
+    /// Work-queue seeding priority (higher first). Scheduling only:
+    /// per-request outcomes are invariant to it by construction.
+    pub priority: u8,
+    pub policy: OverloadPolicy,
+}
+
+impl LaneSlo {
+    /// An SLO with the given deadline and default policy/priority.
+    pub fn with_deadline(deadline: f64) -> LaneSlo {
+        LaneSlo { deadline: Some(deadline), ..LaneSlo::default() }
+    }
+
+    pub fn with_policy(mut self, policy: OverloadPolicy) -> LaneSlo {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> LaneSlo {
+        self.priority = priority;
+        self
+    }
+
+    /// The effective batching window under this SLO: the configured
+    /// static window, capped at [`BATCH_BUDGET_FRACTION`] of the
+    /// deadline — a tight-SLO lane never waits its deadline away.
+    pub fn window(&self, batch_window: f64) -> f64 {
+        match self.deadline {
+            None => batch_window,
+            Some(d) => batch_window.min(d * BATCH_BUDGET_FRACTION),
+        }
+    }
+
+    /// Latest event-clock instant a batch headed by a request arriving
+    /// at `arrive` may still launch (`None` when no deadline is set).
+    pub fn launch_cutoff(&self, arrive: f64) -> Option<f64> {
+        self.deadline.map(|d| arrive + d * LAUNCH_BUDGET_FRACTION)
+    }
+}
+
+/// One shed request: the admission controller's drop decision, fully
+/// determined by the event clock (replayed bit-identically by the
+/// fleet determinism oracle).
+#[derive(Debug, Clone)]
+pub struct DropRecord {
+    pub id: u64,
+    pub lane: LaneClass,
+    /// Replica whose admission controller shed the request.
+    pub replica: usize,
+    /// Event-clock instant the decision was taken (the head's
+    /// batch-open time).
+    pub decided_at: f64,
+    /// How far past its deadline the head already was at decision
+    /// time (> 0 by construction).
+    pub miss_by: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_slo_is_a_no_op() {
+        let slo = LaneSlo::default();
+        assert_eq!(slo.deadline, None);
+        assert_eq!(slo.policy, OverloadPolicy::ServeAnyway);
+        assert_eq!(slo.window(2e-3), 2e-3);
+        assert_eq!(slo.launch_cutoff(1.0), None);
+    }
+
+    #[test]
+    fn window_derives_from_the_deadline_budget() {
+        // A tight deadline shrinks the effective window below the
+        // static configuration; a loose one leaves it alone.
+        let tight = LaneSlo::with_deadline(400e-6);
+        assert!((tight.window(2e-3) - 100e-6).abs() < 1e-18);
+        let loose = LaneSlo::with_deadline(1.0);
+        assert_eq!(loose.window(2e-3), 2e-3);
+    }
+
+    #[test]
+    fn launch_cutoff_reserves_half_the_budget() {
+        let slo = LaneSlo::with_deadline(1e-3);
+        let cutoff = slo.launch_cutoff(2.0).unwrap();
+        assert!((cutoff - (2.0 + 0.5e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let slo = LaneSlo::with_deadline(1e-3)
+            .with_policy(OverloadPolicy::Drop)
+            .with_priority(3);
+        assert_eq!(slo.deadline, Some(1e-3));
+        assert_eq!(slo.policy, OverloadPolicy::Drop);
+        assert_eq!(slo.priority, 3);
+    }
+}
