@@ -61,6 +61,11 @@ use crate::dispatch::{self, DispatchTable};
 use crate::hw::HwSpec;
 use crate::ir::{ceil_div, OpKind, OpSpec, Tile};
 use crate::runtime::Manifest;
+use crate::util::json::Json;
+
+pub mod trace;
+
+pub use trace::audit_trace;
 
 // ---------------------------------------------------------------------------
 // Diagnostics
@@ -155,6 +160,34 @@ impl Diagnostic {
         self.entry = Some(entry.into());
         self
     }
+
+    /// Structured form of the finding for `vortex audit --json`: every
+    /// field of the struct under a stable key, `null` when absent, so
+    /// downstream tooling can rely on the shape without probing.
+    pub fn to_json(&self) -> Json {
+        let opt_str = |s: Option<String>| s.map_or(Json::Null, Json::str);
+        Json::obj(vec![
+            ("severity", Json::str(self.severity.to_string())),
+            ("code", Json::str(self.code)),
+            ("op", opt_str(self.op.map(|o| o.to_string()))),
+            ("mode", opt_str(self.mode.clone())),
+            (
+                "kernel",
+                self.kernel.map_or(Json::Null, |(l, k)| {
+                    Json::arr(vec![Json::num(l as f64), Json::num(k as f64)])
+                }),
+            ),
+            ("axis", self.axis.map_or(Json::Null, |a| Json::num(a as f64))),
+            (
+                "counterexample",
+                self.counterexample.map_or(Json::Null, |dims| {
+                    Json::arr(dims.dims().iter().map(|&d| Json::num(d as f64)).collect())
+                }),
+            ),
+            ("entry", opt_str(self.entry.clone())),
+            ("message", Json::str(self.message.clone())),
+        ])
+    }
 }
 
 impl fmt::Display for Diagnostic {
@@ -202,6 +235,8 @@ pub struct AuditReport {
     pub cells_checked: usize,
     /// (op, mode) dispatch tables audited.
     pub tables_checked: usize,
+    /// Trace spans checked in the schema pass ([`audit_trace`]).
+    pub spans_checked: usize,
 }
 
 impl AuditReport {
@@ -226,6 +261,26 @@ impl AuditReport {
         self.segments_checked += other.segments_checked;
         self.cells_checked += other.cells_checked;
         self.tables_checked += other.tables_checked;
+        self.spans_checked += other.spans_checked;
+    }
+
+    /// Structured form for `vortex audit --json`: the diagnostics (as
+    /// [`Diagnostic::to_json`]) plus the proof-obligation counters and
+    /// severity totals, so a pipeline can gate without re-counting.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "diagnostics",
+                Json::arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+            ("errors", Json::num(self.errors() as f64)),
+            ("warnings", Json::num(self.warnings() as f64)),
+            ("kernels_checked", Json::num(self.kernels_checked as f64)),
+            ("segments_checked", Json::num(self.segments_checked as f64)),
+            ("cells_checked", Json::num(self.cells_checked as f64)),
+            ("tables_checked", Json::num(self.tables_checked as f64)),
+            ("spans_checked", Json::num(self.spans_checked as f64)),
+        ])
     }
 
     /// One-line human summary of the discharged obligations.

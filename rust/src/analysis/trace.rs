@@ -1,0 +1,264 @@
+//! Trace-schema sanity checks: the static auditor for the
+//! observability layer ([`crate::obs`]).
+//!
+//! A trace is a claim about what the system did, and a malformed trace
+//! is worse than none — a viewer renders it wrong, or a summary
+//! silently mis-attributes time. The checks here are the finitely
+//! checkable invariants every well-formed Vortex trace satisfies:
+//!
+//! * **Finite, ordered time** — every timestamp and duration is a
+//!   finite number and no duration is negative
+//!   (`trace.nonfinite_time`, `trace.negative_duration`).
+//! * **Clock discipline** — serving spans (cat `"serve"`) are stamped
+//!   from the deterministic event clock ONLY. A wall-clock span in a
+//!   serving cat would mean recording perturbed the run — the exact
+//!   thing the zero-perturbation contract forbids
+//!   (`trace.wall_in_serving`).
+//! * **Track exclusivity** — complete spans on one (pid, tid) track
+//!   never overlap (beyond [`OVERLAP_EPS_US`] of float rounding): a
+//!   lane serves one batch at a time, and the compile pipeline's
+//!   phases are contiguous by construction (`trace.overlap`).
+//! * **Plan-source vocabulary** — every `"plan"` instant carries a
+//!   `source` arg from the closed `table`/`cache`/`fresh` set the
+//!   metrics layer counts (`trace.bad_plan_source`).
+//! * **Labeled tracks** — every (pid, tid) a span lands on has
+//!   process/thread metadata, so viewers show lane names instead of
+//!   bare ids (`trace.unlabeled_track`, warning).
+//!
+//! Wired into `vortex trace summarize` and the CI trace-schema step;
+//! the fleet-oracle tracing leg asserts a clean report on every
+//! generated trace.
+
+use std::collections::BTreeMap;
+
+use crate::obs::{Span, SpanClock, Trace};
+
+use super::{AuditReport, Diagnostic};
+
+/// Tolerated overlap between adjacent complete spans on one track, in
+/// µs (1 ns): adjacent span boundaries are converted seconds → µs
+/// independently, so exact contiguity can round to a hair of overlap.
+pub const OVERLAP_EPS_US: f64 = 1e-3;
+
+/// Plan-resolution sources the metrics layer counts; a `"plan"` span
+/// arg outside this set would silently vanish from every breakdown.
+const PLAN_SOURCES: [&str; 3] = ["table", "cache", "fresh"];
+
+fn span_entry(i: usize, s: &Span) -> String {
+    format!("span #{i} '{}' @({},{})", s.name, s.pid, s.tid)
+}
+
+/// Audit one [`Trace`] against the schema invariants in the module
+/// docs. Every span contributes to `spans_checked`, so a clean report
+/// on a non-empty trace is a discharged proof, not a vacuous pass.
+pub fn audit_trace(trace: &Trace) -> AuditReport {
+    let mut report = AuditReport::default();
+    let pids: Vec<u64> = trace.processes.iter().map(|(p, _)| *p).collect();
+    let tids: Vec<(u64, u64)> = trace.threads.iter().map(|(p, t, _)| (*p, *t)).collect();
+    // Per-track complete-span intervals for the exclusivity pass:
+    // (start, end, span index), skipping spans already flagged
+    // non-finite so the sort below stays total.
+    let mut tracks: BTreeMap<(u64, u64), Vec<(f64, f64, usize)>> = BTreeMap::new();
+    for (i, s) in trace.spans.iter().enumerate() {
+        report.spans_checked += 1;
+        let dur = s.dur_us.unwrap_or(0.0);
+        if !s.ts_us.is_finite() || !dur.is_finite() {
+            report.diagnostics.push(
+                Diagnostic::error(
+                    "trace.nonfinite_time",
+                    format!("ts={} dur={:?} µs", s.ts_us, s.dur_us),
+                )
+                .with_entry(span_entry(i, s)),
+            );
+            continue;
+        }
+        if dur < 0.0 {
+            report.diagnostics.push(
+                Diagnostic::error(
+                    "trace.negative_duration",
+                    format!("duration {dur} µs is negative"),
+                )
+                .with_entry(span_entry(i, s)),
+            );
+            continue;
+        }
+        if s.clock == SpanClock::Wall && s.cat == "serve" {
+            report.diagnostics.push(
+                Diagnostic::error(
+                    "trace.wall_in_serving",
+                    "wall-clock span in a serving cat — serving spans must be \
+                     stamped from the deterministic event clock",
+                )
+                .with_entry(span_entry(i, s)),
+            );
+        }
+        if !pids.contains(&s.pid) || !tids.contains(&(s.pid, s.tid)) {
+            report.diagnostics.push(
+                Diagnostic::warning(
+                    "trace.unlabeled_track",
+                    "span lands on a (pid, tid) track with no process/thread \
+                     metadata — viewers will show bare ids",
+                )
+                .with_entry(span_entry(i, s)),
+            );
+        }
+        if s.name == "plan" {
+            let source = s
+                .args
+                .iter()
+                .find(|(k, _)| k == "source")
+                .and_then(|(_, v)| v.as_str());
+            match source {
+                Some(src) if PLAN_SOURCES.contains(&src) => {}
+                Some(src) => report.diagnostics.push(
+                    Diagnostic::error(
+                        "trace.bad_plan_source",
+                        format!("plan source {src:?} is not one of {PLAN_SOURCES:?}"),
+                    )
+                    .with_entry(span_entry(i, s)),
+                ),
+                None => report.diagnostics.push(
+                    Diagnostic::error(
+                        "trace.bad_plan_source",
+                        "plan span carries no 'source' arg",
+                    )
+                    .with_entry(span_entry(i, s)),
+                ),
+            }
+        }
+        if s.dur_us.is_some() {
+            tracks
+                .entry((s.pid, s.tid))
+                .or_default()
+                .push((s.ts_us, s.ts_us + dur, i));
+        }
+    }
+    for spans in tracks.values_mut() {
+        spans.sort_by(|a, b| a.partial_cmp(b).expect("finite by the pass above"));
+        for w in spans.windows(2) {
+            let ((_, prev_end, pi), (start, _, si)) = (w[0], w[1]);
+            if start < prev_end - OVERLAP_EPS_US {
+                report.diagnostics.push(
+                    Diagnostic::error(
+                        "trace.overlap",
+                        format!(
+                            "overlaps '{}' (span #{pi}) by {:.3} µs on the same track",
+                            trace.spans[pi].name,
+                            prev_end - start
+                        ),
+                    )
+                    .with_entry(span_entry(si, &trace.spans[si])),
+                );
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn labeled(mut t: Trace) -> Trace {
+        t.processes = vec![(0, "p".to_string())];
+        t.threads = vec![(0, 0, "t".to_string())];
+        t
+    }
+
+    fn codes(r: &AuditReport) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_trace_audits_clean_and_non_vacuously() {
+        let t = labeled(Trace {
+            spans: vec![
+                Span::complete("form", "serve", 0, 0, 0.0, 1e-3),
+                Span::complete("exec", "serve", 0, 0, 1e-3, 2e-3),
+                Span::instant("plan", "serve", 0, 0, 1e-3)
+                    .arg("source", Json::str("table")),
+                Span::complete("candgen", "compile", 0, 0, 5e-3, 1e-3).wall(),
+            ],
+            ..Trace::default()
+        });
+        let r = audit_trace(&t);
+        assert!(r.is_clean(true), "{:?}", r.diagnostics);
+        assert_eq!(r.spans_checked, 4);
+    }
+
+    #[test]
+    fn wall_clock_in_a_serving_cat_is_refused() {
+        let t = labeled(Trace {
+            spans: vec![Span::complete("exec", "serve", 0, 0, 0.0, 1e-3).wall()],
+            ..Trace::default()
+        });
+        assert_eq!(codes(&audit_trace(&t)), vec!["trace.wall_in_serving"]);
+    }
+
+    #[test]
+    fn time_pathologies_are_refused() {
+        let t = labeled(Trace {
+            spans: vec![
+                Span::complete("a", "serve", 0, 0, f64::NAN, 1.0),
+                Span::complete("b", "serve", 0, 0, 0.0, -1.0),
+            ],
+            ..Trace::default()
+        });
+        assert_eq!(
+            codes(&audit_trace(&t)),
+            vec!["trace.nonfinite_time", "trace.negative_duration"]
+        );
+    }
+
+    #[test]
+    fn overlapping_spans_on_one_track_are_refused_but_cross_track_is_fine() {
+        let mut t = labeled(Trace {
+            spans: vec![
+                Span::complete("a", "serve", 0, 0, 0.0, 2e-3),
+                Span::complete("b", "serve", 0, 0, 1e-3, 2e-3),
+            ],
+            ..Trace::default()
+        });
+        assert_eq!(codes(&audit_trace(&t)), vec!["trace.overlap"]);
+        // Same intervals on different tracks: concurrent lanes are fine.
+        t.spans[1].tid = 1;
+        t.threads.push((0, 1, "t2".to_string()));
+        assert!(audit_trace(&t).is_clean(true));
+        // Exact contiguity with µs-conversion rounding is not overlap.
+        let c = labeled(Trace {
+            spans: vec![
+                Span::complete("a", "serve", 0, 0, 0.3, 0.1),
+                Span::complete("b", "serve", 0, 0, 0.4, 0.1),
+            ],
+            ..Trace::default()
+        });
+        assert!(audit_trace(&c).is_clean(true), "{:?}", audit_trace(&c).diagnostics);
+    }
+
+    #[test]
+    fn plan_spans_must_name_a_known_source() {
+        let bad = labeled(Trace {
+            spans: vec![
+                Span::instant("plan", "serve", 0, 0, 0.0).arg("source", Json::str("psychic")),
+                Span::instant("plan", "serve", 0, 0, 1.0),
+            ],
+            ..Trace::default()
+        });
+        assert_eq!(
+            codes(&audit_trace(&bad)),
+            vec!["trace.bad_plan_source", "trace.bad_plan_source"]
+        );
+    }
+
+    #[test]
+    fn unlabeled_tracks_warn_but_do_not_error() {
+        let t = Trace {
+            spans: vec![Span::complete("a", "serve", 7, 7, 0.0, 1.0)],
+            ..Trace::default()
+        };
+        let r = audit_trace(&t);
+        assert_eq!(codes(&r), vec!["trace.unlabeled_track"]);
+        assert!(r.is_clean(false) && !r.is_clean(true));
+    }
+}

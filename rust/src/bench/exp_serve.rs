@@ -120,7 +120,10 @@ pub fn serve(out_dir: &Path, seed: u64, frac: usize) -> Vec<Table> {
         let mut engine = SimLaneEngine { sim: Simulator::new(hw.clone(), seed) };
         serve_mixed_trace(&mut engine, &selector, cfg, &trace)
     };
-    let table = run(&serve_cfg.with_dispatch(scenario::dispatch_config()));
+    // The headline run records a span trace — zero-perturbation by
+    // contract (the fleet oracle proves it), so the traced run IS the
+    // benchmark run and the shipped trace matches the shipped numbers.
+    let table = run(&serve_cfg.with_dispatch(scenario::dispatch_config()).traced());
     let cached = run(&serve_cfg);
     let baseline = run(&serve_cfg.without_cache());
     let identical = identical_selections(&cached, &baseline)
@@ -277,6 +280,9 @@ pub fn serve(out_dir: &Path, seed: u64, frac: usize) -> Vec<Table> {
         ("identical_selections", Json::Bool(identical)),
     ]);
     let _ = std::fs::write(out_dir.join("BENCH_serve.json"), json.dump());
+    if let Some(t) = &table.trace {
+        let _ = std::fs::write(out_dir.join("serve_trace.json"), t.to_chrome_json());
+    }
     let _ = lanes.write_csv(&out_dir.join("serve.csv"));
     vec![lanes, cmp]
 }
@@ -334,5 +340,18 @@ mod tests {
         assert!(
             j.get("plan_cache").unwrap().get("hits").unwrap().as_f64().unwrap() > 0.0
         );
+        // The headline run also ships its Chrome trace: it parses back,
+        // audits clean, and re-emits byte-identically (the round-trip
+        // contract CI's trace-schema step leans on).
+        let trace_text = std::fs::read_to_string(dir.join("serve_trace.json")).unwrap();
+        let t = crate::obs::Trace::from_chrome_json(&trace_text).unwrap();
+        assert!(!t.is_empty(), "benchmark trace recorded no spans");
+        let report = crate::analysis::audit_trace(&t);
+        assert!(
+            report.is_clean(true),
+            "trace-schema audit: {:?}",
+            report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+        );
+        assert_eq!(t.to_chrome_json(), trace_text, "re-emission is not byte-identical");
     }
 }

@@ -33,6 +33,7 @@ use crate::cost::hybrid::{hybrid_cost, AnalyzerConfig};
 use crate::cost::{self, Strategy};
 use crate::hw::HwSpec;
 use crate::ir::{DType, OpKind, Tile, MAX_AXES};
+use crate::obs::Span;
 use crate::profiler::Profiler;
 use crate::util::json::Json;
 
@@ -114,6 +115,14 @@ pub struct CompileReport {
     pub analysis_cpu_secs: f64,
     /// Worker threads used by the ranking phase.
     pub analysis_threads: usize,
+    /// Per-phase spans of this compile run (candgen, L0
+    /// micro-measurement, parallel ranking, winner profiling,
+    /// pruning), offsets from the call's start. Offline time is
+    /// genuinely wall-clock, so every span is explicitly
+    /// [`crate::obs::SpanClock::Wall`]-marked; profiler-touching
+    /// phases carry their query/tuning deltas as span args. Exported
+    /// by `vortex compile --trace` via [`crate::obs::compile_trace`].
+    pub phases: Vec<crate::obs::Span>,
 }
 
 impl CompileReport {
@@ -255,27 +264,59 @@ pub fn compile(
     if let Some(dir) = opts.cache_dir.as_deref() {
         if opts.cacheable() {
             if let Some(library) = load_cached(dir, hw, op, dtype, cfg, fp) {
+                let wall_secs = wall0.elapsed().as_secs_f64();
                 return CompileReport {
                     library,
                     candidates_total: 0,
                     chains_analyzed: 0,
                     profile_queries: 0,
                     offline_secs: 0.0,
-                    wall_secs: wall0.elapsed().as_secs_f64(),
+                    wall_secs,
                     from_cache: true,
                     analysis_wall_secs: 0.0,
                     analysis_cpu_secs: 0.0,
                     analysis_threads: 0,
+                    phases: vec![Span::complete(
+                        "cache_load",
+                        "compile",
+                        0,
+                        0,
+                        0.0,
+                        wall_secs,
+                    )
+                    .wall()],
                 };
             }
         }
     }
     let queries0 = profiler.queries();
     let tuning0 = profiler.tuning_secs();
+    // Per-phase spans, offsets from `wall0`. Offline time is real
+    // wall-clock by nature, so every span is explicitly Wall-marked —
+    // the trace schema (and `analysis::audit_trace`) keeps measured
+    // time distinguishable from the serving layer's event-clock spans.
+    let mut phases: Vec<Span> = Vec::new();
+    let phase = |name: &str, cat: &str, start: f64, end: f64, args: Vec<(&str, Json)>| {
+        let mut s = Span::complete(name, cat, 0, 0, start, end - start).wall();
+        for (k, v) in args {
+            s = s.arg(k, v);
+        }
+        s
+    };
 
     // 1. Algorithm 2 over the op's axes.
+    let mut t_phase = wall0.elapsed().as_secs_f64();
     let set = candgen::generate(hw, op, dtype);
     let candidates_total = set.total();
+    let t_end = wall0.elapsed().as_secs_f64();
+    phases.push(phase(
+        "candgen",
+        "compile",
+        t_phase,
+        t_end,
+        vec![("candidates", Json::num(candidates_total as f64))],
+    ));
+    t_phase = t_end;
 
     // 2. Strategy analysis: best child per L1 candidate. Children are
     // RANKED with at most L0-empirical splicing (distinct L0 tiles are
@@ -301,6 +342,7 @@ pub fn compile(
     if opts.profile_all_pairs {
         // Table 7 "Changed": measure the full pair, sequentially, so the
         // profiler's query/tuning accounting stays exact.
+        let prof0 = profiler.snapshot();
         for (slot, &i) in winners.iter_mut().zip(&l1_list) {
             let l1 = set.levels[1][i];
             for &ci in &set.children[1][i] {
@@ -314,11 +356,25 @@ pub fn compile(
                 }
             }
         }
+        let t_end = wall0.elapsed().as_secs_f64();
+        let d = profiler.snapshot().since(prof0);
+        phases.push(phase(
+            "profile_pairs",
+            "profiler",
+            t_phase,
+            t_end,
+            vec![
+                ("queries", Json::num(d.queries as f64)),
+                ("tuning_secs", Json::num(d.tuning_secs)),
+            ],
+        ));
+        t_phase = t_end;
     } else {
         // Phase A (sequential, profiler): measure each distinct L0
         // subchain once — exactly the measurement set the ranking needs.
         let mut l0_cost: HashMap<(Tile, usize), f64> = HashMap::new();
         if rank_empirical {
+            let prof0 = profiler.snapshot();
             for &i in &l1_list {
                 for &ci in &set.children[1][i] {
                     let child = set.levels[0][ci];
@@ -329,6 +385,20 @@ pub fn compile(
                     });
                 }
             }
+            let t_end = wall0.elapsed().as_secs_f64();
+            let d = profiler.snapshot().since(prof0);
+            phases.push(phase(
+                "measure_l0",
+                "profiler",
+                t_phase,
+                t_end,
+                vec![
+                    ("queries", Json::num(d.queries as f64)),
+                    ("tuning_secs", Json::num(d.tuning_secs)),
+                    ("distinct_l0", Json::num(l0_cost.len() as f64)),
+                ],
+            ));
+            t_phase = t_end;
         }
         // Phase B (parallel, pure arithmetic): rank every child of every
         // L1 candidate with Eq. 2–4 over the cached L0 measurements.
@@ -385,10 +455,24 @@ pub fn compile(
         // than the planned thread count).
         analysis_threads = cpu_secs.len().max(1);
         chains = pair_counts.iter().sum();
+        let t_end = wall0.elapsed().as_secs_f64();
+        phases.push(phase(
+            "rank",
+            "compile",
+            t_phase,
+            t_end,
+            vec![
+                ("chains", Json::num(chains as f64)),
+                ("threads", Json::num(analysis_threads as f64)),
+                ("cpu_secs", Json::num(analysis_cpu_secs)),
+            ],
+        ));
+        t_phase = t_end;
     }
 
     // Phase C (sequential, profiler): record each winner's chain cost at
     // the configured fidelity.
+    let prof0 = profiler.snapshot();
     let mut kernels: Vec<MicroKernel> = Vec::new();
     for (slot, &i) in winners.iter().zip(&l1_list) {
         if let Some((_, ci)) = *slot {
@@ -403,6 +487,22 @@ pub fn compile(
                 base_cost,
             });
         }
+    }
+    {
+        let t_end = wall0.elapsed().as_secs_f64();
+        let d = profiler.snapshot().since(prof0);
+        phases.push(phase(
+            "profile_winners",
+            "profiler",
+            t_phase,
+            t_end,
+            vec![
+                ("queries", Json::num(d.queries as f64)),
+                ("tuning_secs", Json::num(d.tuning_secs)),
+                ("winners", Json::num(kernels.len() as f64)),
+            ],
+        ));
+        t_phase = t_end;
     }
 
     // 3. Pruning: best survivor per log-shape bucket.
@@ -420,6 +520,14 @@ pub fn compile(
         }
         kernels = buckets.into_values().collect();
         kernels.sort_by(|a, b| (a.l1, a.l0).cmp(&(b.l1, b.l0)));
+        let t_end = wall0.elapsed().as_secs_f64();
+        phases.push(phase(
+            "prune",
+            "compile",
+            t_phase,
+            t_end,
+            vec![("kept", Json::num(kernels.len() as f64))],
+        ));
     }
 
     let wall_secs = wall0.elapsed().as_secs_f64();
@@ -442,6 +550,7 @@ pub fn compile(
         analysis_wall_secs,
         analysis_cpu_secs,
         analysis_threads,
+        phases,
     };
     if let Some(dir) = opts.cache_dir.as_deref() {
         if opts.cacheable() {

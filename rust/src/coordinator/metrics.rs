@@ -139,9 +139,16 @@ mod tests {
 
     #[test]
     fn empty_metrics_do_not_panic() {
+        // Zero admitted requests: every rate and percentile is a
+        // well-defined 0.0, never NaN (the empty-trace guard the
+        // metrics exports rely on).
         let m = Metrics::default();
         assert_eq!(m.mean_latency(), 0.0);
         assert_eq!(m.throughput_rps(), 0.0);
-        let _ = m.summary();
+        assert_eq!(m.latency_percentiles(), (0.0, 0.0, 0.0));
+        assert_eq!(m.sched_fraction(), 0.0);
+        assert_eq!(m.gflops_per_sec(), 0.0);
+        assert_eq!(Metrics::pct(&[], 0.99), 0.0);
+        assert!(!m.summary().contains("NaN"));
     }
 }

@@ -166,6 +166,23 @@ pub struct BuildStats {
     pub build_secs: f64,
     /// True when any table's horizons were halved to fit `max_cells`.
     pub clamped: bool,
+    /// Per-(op, mode) build telemetry, in build order (the
+    /// "dispatch_table" spans of [`crate::obs::compile_trace`]).
+    pub per_table: Vec<TableBuildStat>,
+}
+
+/// Build telemetry for ONE (op, mode) table: how many lattice cells
+/// were enumerated, how many survived region merging, and the
+/// wall-clock of that table's build.
+#[derive(Debug, Clone)]
+pub struct TableBuildStat {
+    pub op: OpKind,
+    /// Mode label ("adaptive" or the pinned backend's name).
+    pub mode: String,
+    pub cells_enumerated: usize,
+    /// Cells merged away (`cells_enumerated - cells_stored`).
+    pub cells_merged: usize,
+    pub build_secs: f64,
 }
 
 /// The compile-time dispatch table: one [`OpTable`] per (requested op,
@@ -523,11 +540,19 @@ impl DispatchTable {
         };
         for op in ops {
             for &mode in &cfg.modes {
+                let t_op = Instant::now();
                 if let Some((t, enumerated)) = build_op_table(selector, op, mode, cfg) {
                     stats.tables += 1;
                     stats.cells_enumerated += enumerated;
                     stats.cells += t.winners.len();
                     stats.clamped |= t.clamped;
+                    stats.per_table.push(TableBuildStat {
+                        op,
+                        mode: mode_name(mode),
+                        cells_enumerated: enumerated,
+                        cells_merged: enumerated - t.winners.len(),
+                        build_secs: t_op.elapsed().as_secs_f64(),
+                    });
                     tables.push(t);
                 }
             }

@@ -118,6 +118,23 @@
 //! preset × op × dtype. The "Static analysis layer" section of
 //! [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) gives the
 //! monotone-segment soundness argument.
+//!
+//! ## Observability
+//!
+//! The tracing + metrics layer ([`obs`]) is the runtime half of that
+//! loop: structured spans over compile phases and every serving
+//! decision (admission, batch formation, tri-state plan resolution,
+//! launch, drop/degrade), stamped from the **deterministic
+//! discrete-event clock** so a traced run is bit-identical to an
+//! untraced one (the fleet oracle proves it), exported as Chrome
+//! trace-event JSON (`vortex serve --trace`, `vortex trace
+//! summarize`), Prometheus text, and exact-percentile latency
+//! histograms per replica × lane. Wall-clock time appears only in
+//! explicitly-marked offline spans, and [`analysis::audit_trace`]
+//! checks that rule (plus timestamp sanity) on any trace file. The
+//! "Layer 9 — observability" section of
+//! [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) gives the
+//! span taxonomy and the zero-perturbation argument.
 
 pub mod analysis;
 pub mod baselines;
@@ -130,6 +147,7 @@ pub mod dispatch;
 pub mod hw;
 pub mod ir;
 pub mod models;
+pub mod obs;
 pub mod profiler;
 pub mod runtime;
 pub mod serve;

@@ -5,6 +5,8 @@
 //!   select    Select a micro-kernel for one shape and explain it.
 //!   run       Execute a dynamic-shape GEMM on the REAL PJRT engine.
 //!   serve     Dynamic-batch serving loop over a synthetic trace.
+//!   audit     Symbolic plan auditor; exit code is the CI gate.
+//!   trace     Summarize a Chrome trace-event file the other commands wrote.
 //!   bench     Regenerate a paper table/figure ("all" for everything).
 //!   info      Print hardware presets + rKernel mapping (Table 1).
 
@@ -32,9 +34,13 @@ USAGE:
                   [--analyzer default|analytical|e0|e1] [--cache-dir DIR]
                   [--dispatch] [--horizon H] [--batch-horizon B]
                   [--dump-library PATH] [--emit-manifest PATH]
+                  [--trace [PATH]]
                   (--dispatch: enumerate the shape-space dispatch table
                    offline and embed it in the dumped library — schema
-                   v3 — so serving starts with zero warm-up.)
+                   v3 — so serving starts with zero warm-up. --trace
+                   writes per-phase compile spans — candgen, profiling,
+                   ranking, per-(op,mode) table builds — as Chrome
+                   trace-event JSON, default compile_trace.json.)
   vortex select   --m M --n N --k K [--b B(atch/groups/head-groups)] [--op ...]
                   [--testbed ...] [--dtype ...] [--mode adaptive|cuda|tensor]
   vortex run      --m M --n N --k K [--artifacts DIR] [--verify]
@@ -42,6 +48,7 @@ USAGE:
                   [--mixed] [--no-cache] [--dispatch]
                   [--replicas N] [--workers K] [--routing hash|load]
                   [--slo-ms D] [--slo-policy serve|drop|degrade]
+                  [--trace [PATH]] [--metrics] [--metrics-json]
                   (--mixed: multi-op request lanes + bucketed plan cache
                    over a BERT-token + vision-burst trace; --no-cache
                    disables plan memoization; --dispatch answers
@@ -53,10 +60,15 @@ USAGE:
                    --slo-ms sets a per-lane deadline whose overload
                    policy sheds (drop) or mode-downgrades (degrade)
                    unmeetable heads. `vortex --serve ...` is an alias
-                   for the subcommand.)
+                   for the subcommand. --trace records event-clock
+                   spans — zero-perturbation: outcomes are bit-identical
+                   to an untraced run — as Chrome trace-event JSON,
+                   default serve_trace.json (implies --mixed);
+                   --metrics / --metrics-json print Prometheus-style
+                   counters + exact latency percentiles.)
   vortex audit    [--testbed ...] [--op all|gemm|...] [--dtype f32|f16|bf16]
                   [--lib dump.json] [--dispatch] [--horizon H]
-                  [--batch-horizon B] [--deny warnings] [--seed S]
+                  [--batch-horizon B] [--deny warnings] [--seed S] [--json]
                   (symbolic plan auditor: proves parallel write-set
                    disjointness, capacity bounds, measurement-alias
                    fixpoints and artifact consistency over whole axis
@@ -64,7 +76,14 @@ USAGE:
                    dumped library including its embedded schema-v3
                    tables; --dispatch builds dispatch tables in process
                    and re-proves every cell's argmin. Exits 1 on any
-                   error, or on warnings too with --deny warnings.)
+                   error, or on warnings too with --deny warnings.
+                   --json emits the structured diagnostic list instead
+                   of the human report; the exit code is unchanged.)
+  vortex trace    summarize <trace.json>
+                  (parse a Chrome trace-event file written by compile,
+                   serve or bench, run the trace-schema audit, and
+                   print a per-track/per-span-name time breakdown.
+                   Exits 1 on parse or schema errors.)
   vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|ops|serve|all>
                   [--out results/] [--seed S] [--full]
   vortex info
@@ -79,6 +98,7 @@ fn main() {
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
         "audit" => cmd_audit(&args),
+        "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         // `vortex --serve ...` flag form (serving-mode alias).
@@ -114,6 +134,15 @@ fn op_of(args: &Args) -> OpKind {
         eprintln!("unknown --op {name}; using gemm");
         OpKind::Gemm
     })
+}
+
+/// `--trace [PATH]` destination: the parser treats `--trace out.json`
+/// as an option and a bare `--trace` (followed by another `--` arg or
+/// nothing) as a flag, so accept both and fall back to `default`.
+fn trace_path(args: &Args, default: &str) -> Option<PathBuf> {
+    args.get("trace")
+        .map(PathBuf::from)
+        .or_else(|| args.has_flag("trace").then(|| PathBuf::from(default)))
 }
 
 fn analyzer_of(args: &Args, hw: &vortex::hw::HwSpec) -> AnalyzerConfig {
@@ -200,6 +229,14 @@ fn cmd_compile(args: &Args) {
         ]);
     }
     t.print();
+    if let Some(path) = trace_path(args, "compile_trace.json") {
+        let trace = vortex::obs::compile_trace(&r, dispatch_stats.as_ref());
+        std::fs::write(&path, trace.to_chrome_json()).expect("write trace");
+        println!(
+            "compile trace written to {} (load in chrome://tracing or Perfetto)",
+            path.display()
+        );
+    }
     if let Some(path) = args.get("dump-library") {
         std::fs::write(path, r.library.to_json().dump()).expect("write library");
         println!("library written to {path}");
@@ -380,7 +417,12 @@ fn cmd_serve(args: &Args) {
     let gap = args.get_f64("mean-gap-us", 500.0) * 1e-6;
     let max_batch = args.get_usize("max-batch", 8);
     let seed = args.get_u64("seed", 7);
-    if args.has_flag("mixed") || args.get("replicas").is_some() {
+    // Tracing and metrics live in the mixed/fleet serving loop, so
+    // either implies the --mixed scenario.
+    let observed = trace_path(args, "serve_trace.json").is_some()
+        || args.has_flag("metrics")
+        || args.has_flag("metrics-json");
+    if args.has_flag("mixed") || args.get("replicas").is_some() || observed {
         // Only an EXPLICIT --max-batch overrides the scenario's
         // per-lane caps (the legacy default of 8 is not implied).
         let max_batch = args.get("max-batch").and_then(|v| v.parse().ok());
@@ -436,11 +478,13 @@ fn cmd_serve_mixed(
     let hw = presets::a100();
     let selector = scenario::demo_selector(seed);
     let trace = scenario::mixed_trace(n_req, gap, seed, DType::F32);
+    let trace_out = trace_path(args, "serve_trace.json");
     let mut serve_cfg = if cache {
         scenario::serving_config()
     } else {
         scenario::serving_config().without_cache()
     };
+    serve_cfg.trace = trace_out.is_some();
     if dispatch {
         serve_cfg = serve_cfg.with_dispatch(scenario::dispatch_config());
     }
@@ -474,6 +518,9 @@ fn cmd_serve_mixed(
         for d in &stats.slo_diags {
             eprintln!("slo audit: {d}");
         }
+        for d in &stats.table_diags {
+            eprintln!("table adoption: {d}");
+        }
         let (p50, _, p99) = stats.latency_percentiles();
         println!(
             "fleet: {} replicas ({} routing), {} workers — served {} of {} offered \
@@ -504,10 +551,25 @@ fn cmd_serve_mixed(
                 rep.dispatch.fresh,
             );
         }
+        if let Some(path) = &trace_out {
+            write_trace(path, stats.trace.as_ref());
+        }
+        if args.has_flag("metrics") || args.has_flag("metrics-json") {
+            let snap = vortex::obs::snapshot_fleet(&stats);
+            if args.has_flag("metrics") {
+                print!("{}", snap.to_prometheus());
+            }
+            if args.has_flag("metrics-json") {
+                println!("{}", snap.to_json().dump());
+            }
+        }
         return;
     }
     let mut engine = SimLaneEngine { sim: Simulator::new(hw, seed) };
     let stats = serve_mixed_trace(&mut engine, &selector, &serve_cfg, &trace);
+    for d in &stats.table_diags {
+        eprintln!("table adoption: {d}");
+    }
     bench::exp_serve::lanes_table("multi-op serving lanes", &stats).print();
     let (p50, _, p99) = stats.latency_percentiles();
     println!(
@@ -546,6 +608,31 @@ fn cmd_serve_mixed(
         );
     } else {
         println!("plan cache disabled (--no-cache): every batch ran fresh selection");
+    }
+    if let Some(path) = &trace_out {
+        write_trace(path, stats.trace.as_ref());
+    }
+    if args.has_flag("metrics") || args.has_flag("metrics-json") {
+        let snap = vortex::obs::snapshot_mixed(&stats);
+        if args.has_flag("metrics") {
+            print!("{}", snap.to_prometheus());
+        }
+        if args.has_flag("metrics-json") {
+            println!("{}", snap.to_json().dump());
+        }
+    }
+}
+
+fn write_trace(path: &Path, trace: Option<&vortex::obs::Trace>) {
+    match trace {
+        Some(t) => {
+            std::fs::write(path, t.to_chrome_json()).expect("write trace");
+            println!(
+                "serve trace written to {} (load in chrome://tracing or Perfetto)",
+                path.display()
+            );
+        }
+        None => eprintln!("no trace recorded (tracing was not enabled for this run)"),
     }
 }
 
@@ -632,12 +719,58 @@ fn cmd_audit(args: &Args) {
         let table = DispatchTable::for_selector(&selector, &dcfg);
         report.merge(audit_dispatch_table(&selector, &table));
     }
+    if args.has_flag("json") {
+        // The same findings as the human report, machine-shaped:
+        // stable family.code strings plus op/mode/kernel/axis context.
+        println!("{}", report.to_json().dump());
+    } else {
+        for d in &report.diagnostics {
+            println!("{d}");
+        }
+        println!("audit ({}): {}", hw.name, report.summary());
+    }
+    let deny = matches!(args.get("deny"), Some("warnings"));
+    if !report.is_clean(deny) {
+        std::process::exit(1);
+    }
+}
+
+/// `vortex trace summarize <file.json>`: parse a Chrome trace-event
+/// file back into a [`vortex::obs::Trace`], audit it against the
+/// schema invariants ([`vortex::analysis::audit_trace`]), and print
+/// the per-track/per-span-name breakdown. Exit 1 on parse or schema
+/// errors — the CI trace-schema gate in executable form.
+fn cmd_trace(args: &Args) {
+    use vortex::analysis::audit_trace;
+    use vortex::obs::Trace;
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let path = args.positional.get(2);
+    let (Some(path), "summarize") = (path, sub) else {
+        eprintln!("usage: vortex trace summarize <trace.json>");
+        std::process::exit(2);
+    };
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("read {path}: {e}");
+        std::process::exit(1);
+    });
+    let trace = Trace::from_chrome_json(&text).unwrap_or_else(|e| {
+        eprintln!("{path} is not a Vortex Chrome trace: {e}");
+        std::process::exit(1);
+    });
+    let report = audit_trace(&trace);
     for d in &report.diagnostics {
         println!("{d}");
     }
-    println!("audit ({}): {}", hw.name, report.summary());
-    let deny = matches!(args.get("deny"), Some("warnings"));
-    if !report.is_clean(deny) {
+    trace.summary_table().print();
+    println!(
+        "{} spans across {} processes / {} thread tracks: {} errors, {} warnings",
+        report.spans_checked,
+        trace.processes.len(),
+        trace.threads.len(),
+        report.errors(),
+        report.warnings()
+    );
+    if !report.is_clean(false) {
         std::process::exit(1);
     }
 }

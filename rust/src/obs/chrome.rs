@@ -1,0 +1,257 @@
+//! Chrome trace-event JSON export / import for [`Trace`].
+//!
+//! Emits the object-form trace-event format — `{"displayTimeUnit",
+//! "otherData", "traceEvents"}` — loadable directly in
+//! `chrome://tracing` and Perfetto:
+//!
+//! * `"M"` metadata events label processes (replicas) and threads
+//!   (lanes): `process_name` / `thread_name`;
+//! * `"X"` complete events carry `ts` + `dur` in microseconds;
+//! * `"i"` instant events (`"s":"t"`, thread-scoped) mark admissions,
+//!   plan resolutions, drops and degrades.
+//!
+//! Spans store microseconds natively, and the crate's JSON layer is
+//! deterministic (sorted object keys, shortest-round-trip `f64`
+//! printing, correctly-rounded parsing), so
+//! `emit -> parse -> re-emit` is **byte-identical** — the round-trip
+//! property `tests` below and the schema gate in CI rely on.
+//!
+//! Extension field: events stamped from a wall clock (offline compile
+//! / profiler spans) carry `"clock":"wall"`; viewers ignore the
+//! unknown key, while [`crate::analysis::audit_trace`] uses it to
+//! reject wall-clock timestamps inside serving categories.
+
+use std::collections::BTreeMap;
+
+use super::{Span, SpanClock, Trace};
+use crate::util::json::Json;
+
+impl Trace {
+    /// Serialize to Chrome trace-event JSON (compact, deterministic).
+    pub fn to_chrome_json(&self) -> String {
+        let mut events: Vec<Json> = Vec::new();
+        for (pid, label) in &self.processes {
+            events.push(Json::obj(vec![
+                ("args", Json::obj(vec![("name", Json::str(label.clone()))])),
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(*pid as f64)),
+            ]));
+        }
+        for (pid, tid, label) in &self.threads {
+            events.push(Json::obj(vec![
+                ("args", Json::obj(vec![("name", Json::str(label.clone()))])),
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(*pid as f64)),
+                ("tid", Json::num(*tid as f64)),
+            ]));
+        }
+        for s in &self.spans {
+            let mut pairs: Vec<(&str, Json)> = vec![
+                ("cat", Json::str(s.cat.clone())),
+                ("name", Json::str(s.name.clone())),
+                ("pid", Json::num(s.pid as f64)),
+                ("tid", Json::num(s.tid as f64)),
+                ("ts", Json::num(s.ts_us)),
+            ];
+            match s.dur_us {
+                Some(d) => {
+                    pairs.push(("ph", Json::str("X")));
+                    pairs.push(("dur", Json::num(d)));
+                }
+                None => {
+                    pairs.push(("ph", Json::str("i")));
+                    pairs.push(("s", Json::str("t")));
+                }
+            }
+            if s.clock == SpanClock::Wall {
+                pairs.push(("clock", Json::str("wall")));
+            }
+            if !s.args.is_empty() {
+                let map: BTreeMap<String, Json> = s.args.iter().cloned().collect();
+                pairs.push(("args", Json::Obj(map)));
+            }
+            events.push(Json::obj(pairs));
+        }
+        let other: BTreeMap<String, Json> = self.meta.iter().cloned().collect();
+        Json::obj(vec![
+            ("displayTimeUnit", Json::str("ms")),
+            ("otherData", Json::Obj(other)),
+            ("traceEvents", Json::arr(events)),
+        ])
+        .dump()
+    }
+
+    /// Parse Chrome trace-event JSON produced by [`Trace::to_chrome_json`]
+    /// (or hand-written in the same dialect). Validates the event schema:
+    /// unknown phase types, missing fields, or non-numeric stamps are
+    /// errors, not skips.
+    pub fn from_chrome_json(text: &str) -> Result<Trace, String> {
+        let root = Json::parse(text).map_err(|e| e.to_string())?;
+        let mut trace = Trace::default();
+        if let Some(other) = root.get("otherData").and_then(Json::as_obj) {
+            trace.meta = other.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        }
+        let events = root
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or("missing traceEvents array")?;
+        for (i, ev) in events.iter().enumerate() {
+            let at = |what: &str| format!("traceEvents[{i}]: {what}");
+            let ph = ev.get("ph").and_then(Json::as_str).ok_or_else(|| at("missing ph"))?;
+            let pid = ev
+                .get("pid")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| at("missing pid"))? as u64;
+            match ph {
+                "M" => {
+                    let name = ev
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| at("metadata event without name"))?;
+                    let label = ev
+                        .get("args")
+                        .and_then(|a| a.get("name"))
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| at("metadata event without args.name"))?
+                        .to_string();
+                    match name {
+                        "process_name" => trace.processes.push((pid, label)),
+                        "thread_name" => {
+                            let tid = ev
+                                .get("tid")
+                                .and_then(Json::as_usize)
+                                .ok_or_else(|| at("thread_name without tid"))?;
+                            trace.threads.push((pid, tid as u64, label));
+                        }
+                        other => return Err(at(&format!("unknown metadata '{other}'"))),
+                    }
+                }
+                "X" | "i" => {
+                    let name = ev
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| at("missing name"))?
+                        .to_string();
+                    let cat = ev
+                        .get("cat")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| at("missing cat"))?
+                        .to_string();
+                    let tid = ev
+                        .get("tid")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| at("missing tid"))? as u64;
+                    let ts_us = ev
+                        .get("ts")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| at("missing ts"))?;
+                    let dur_us = if ph == "X" {
+                        Some(
+                            ev.get("dur")
+                                .and_then(Json::as_f64)
+                                .ok_or_else(|| at("complete event without dur"))?,
+                        )
+                    } else {
+                        if ev.get("s").and_then(Json::as_str) != Some("t") {
+                            return Err(at("instant event without thread scope"));
+                        }
+                        None
+                    };
+                    let clock = match ev.get("clock").and_then(Json::as_str) {
+                        Some("wall") => SpanClock::Wall,
+                        Some(other) => {
+                            return Err(at(&format!("unknown clock '{other}'")))
+                        }
+                        None => SpanClock::Event,
+                    };
+                    let args = ev
+                        .get("args")
+                        .and_then(Json::as_obj)
+                        .map(|o| {
+                            o.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+                        })
+                        .unwrap_or_default();
+                    trace.spans.push(Span {
+                        name,
+                        cat,
+                        pid,
+                        tid,
+                        ts_us,
+                        dur_us,
+                        clock,
+                        args,
+                    });
+                }
+                other => return Err(at(&format!("unsupported phase '{other}'"))),
+            }
+        }
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            spans: vec![
+                Span::complete("form", "serve", 0, 1, 1.25e-3, 7.5e-4)
+                    .arg("batch", Json::num(3.0)),
+                Span::instant("plan", "serve", 0, 1, 2e-3)
+                    .arg("source", Json::str("table")),
+                Span::complete("candgen", "compile", 0, 0, 0.0, 0.125).wall(),
+            ],
+            processes: vec![(0, "replica 0".into())],
+            threads: vec![(0, 1, "gemm".into())],
+            meta: vec![("seed".into(), Json::num(7.0))],
+        }
+    }
+
+    #[test]
+    fn emit_parse_reemit_is_byte_identical() {
+        let first = sample().to_chrome_json();
+        let parsed = Trace::from_chrome_json(&first).unwrap();
+        assert_eq!(parsed, sample());
+        assert_eq!(parsed.to_chrome_json(), first);
+    }
+
+    #[test]
+    fn awkward_float_timestamps_survive_the_round_trip() {
+        // Values with no finite decimal representation: the emitter's
+        // shortest-round-trip printing + the parser's correctly-rounded
+        // reading must reproduce the exact bits.
+        let mut t = Trace::default();
+        for (i, ts) in [0.1, 1.0 / 3.0, 2.5e-7, 123456.789012345].iter().enumerate() {
+            t.spans.push(Span::complete("exec", "serve", 0, 0, *ts, *ts / 7.0));
+            t.spans[i].ts_us = *ts; // raw µs, bypass the secs conversion
+        }
+        let one = t.to_chrome_json();
+        let back = Trace::from_chrome_json(&one).unwrap();
+        for (a, b) in t.spans.iter().zip(&back.spans) {
+            assert_eq!(a.ts_us.to_bits(), b.ts_us.to_bits());
+        }
+        assert_eq!(back.to_chrome_json(), one);
+    }
+
+    #[test]
+    fn schema_violations_are_errors() {
+        assert!(Trace::from_chrome_json("{}").is_err());
+        let no_dur = r#"{"traceEvents":[{"cat":"serve","name":"x","ph":"X","pid":0,"tid":0,"ts":1}]}"#;
+        assert!(Trace::from_chrome_json(no_dur).unwrap_err().contains("dur"));
+        let bad_ph = r#"{"traceEvents":[{"cat":"serve","name":"x","ph":"Q","pid":0,"tid":0,"ts":1}]}"#;
+        assert!(Trace::from_chrome_json(bad_ph).unwrap_err().contains("phase"));
+        let bad_clock = r#"{"traceEvents":[{"cat":"c","clock":"lunar","dur":1,"name":"x","ph":"X","pid":0,"tid":0,"ts":1}]}"#;
+        assert!(Trace::from_chrome_json(bad_clock).unwrap_err().contains("clock"));
+    }
+
+    #[test]
+    fn metadata_events_label_tracks() {
+        let json = sample().to_chrome_json();
+        let t = Trace::from_chrome_json(&json).unwrap();
+        assert_eq!(t.track_label(0, 1), "replica 0/gemm");
+        assert_eq!(t.track_label(3, 9), "pid 3/tid 9");
+    }
+}

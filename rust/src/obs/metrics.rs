@@ -1,0 +1,452 @@
+//! Counters + exact-percentile histograms over event-clock samples,
+//! with Prometheus-style text exposition and a JSON snapshot.
+//!
+//! A [`MetricsSnapshot`] is a pure projection of serving statistics
+//! ([`crate::serve::MixedStats`] / [`crate::serve::FleetStats`]) —
+//! it is computed AFTER the discrete-event run from data the run
+//! already produced, so like the span tracer it cannot perturb
+//! serving. Latency histograms are **exact**: every admitted
+//! request's event-clock latency is kept and percentiles are computed
+//! by quickselect over the full sample set (same index formula as the
+//! per-lane `Metrics` percentiles), not bucket interpolation — the
+//! unit tests pin this against a naive sort-based oracle.
+
+use std::collections::BTreeMap;
+
+use crate::serve::{
+    CacheStats, DispatchStats, DropRecord, FleetStats, LaneClass, MixedStats,
+    RequestOutcome, WorkerStats,
+};
+use crate::util::json::Json;
+
+/// Exact-percentile histogram: keeps every sample, answers percentile
+/// queries by quickselect (O(n) expected, deterministic
+/// median-of-three pivoting — no RNG, so snapshots are reproducible).
+/// Empty histograms answer 0.0 everywhere, never NaN.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Exact p-th percentile (`0.0 <= p <= 1.0`) using the shared
+    /// nearest-rank index formula `round((n - 1) * p)` — identical to
+    /// `Metrics::pct` over a sorted trace. 0.0 on an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let k = ((self.samples.len() - 1) as f64 * p).round() as usize;
+        let mut scratch = self.samples.clone();
+        quickselect(&mut scratch, k)
+    }
+
+    /// Largest sample; 0.0 on an empty histogram.
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Arithmetic mean; 0.0 on an empty histogram.
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+}
+
+/// In-place quickselect for the k-th smallest element (k < len).
+/// Median-of-three pivoting keeps the common sorted/reversed inputs
+/// O(n) and makes the recursion depth deterministic.
+fn quickselect(v: &mut [f64], k: usize) -> f64 {
+    debug_assert!(k < v.len());
+    let (mut lo, mut hi) = (0usize, v.len());
+    loop {
+        if hi - lo <= 1 {
+            return v[lo];
+        }
+        // Median-of-three pivot moved to the front.
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (v[lo], v[mid], v[hi - 1]);
+        let pivot_at = if (a <= b) == (b <= c) {
+            mid
+        } else if (b <= a) == (a <= c) {
+            lo
+        } else {
+            hi - 1
+        };
+        v.swap(lo, pivot_at);
+        let pivot = v[lo];
+        // Hoare-style partition of v[lo+1..hi] around the pivot.
+        let (mut i, mut j) = (lo + 1, hi - 1);
+        loop {
+            while i <= j && v[i] < pivot {
+                i += 1;
+            }
+            while i <= j && v[j] > pivot {
+                j -= 1;
+            }
+            if i >= j {
+                break;
+            }
+            v.swap(i, j);
+            i += 1;
+            j -= 1;
+        }
+        let p = i - 1;
+        v.swap(lo, p);
+        match k.cmp(&p) {
+            std::cmp::Ordering::Equal => return v[p],
+            std::cmp::Ordering::Less => hi = p,
+            std::cmp::Ordering::Greater => lo = p + 1,
+        }
+    }
+}
+
+/// One latency track: the event-clock latency distribution of a
+/// (replica, lane/op-class) pair.
+#[derive(Debug, Clone)]
+pub struct LatencyTrack {
+    pub replica: usize,
+    pub lane: LaneClass,
+    pub hist: Histogram,
+}
+
+/// Counter + histogram snapshot of one serving run.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Requests served (admitted + degraded).
+    pub served: u64,
+    pub dropped: u64,
+    pub degraded: u64,
+    /// Tri-state plan resolution counters (table / cache / fresh).
+    pub plan: DispatchStats,
+    /// Plan-cache hits / misses / evictions.
+    pub cache: CacheStats,
+    /// Per-worker executed-unit / steal counters from the
+    /// work-stealing executor (empty outside the fleet pool).
+    pub workers: Vec<WorkerStats>,
+    /// Exact latency distributions per (replica, lane), sorted by
+    /// (replica, lane index).
+    pub latency: Vec<LatencyTrack>,
+}
+
+impl MetricsSnapshot {
+    fn from_parts(
+        outcomes: &[RequestOutcome],
+        drops: &[DropRecord],
+        plan: DispatchStats,
+        cache: CacheStats,
+        workers: Vec<WorkerStats>,
+    ) -> MetricsSnapshot {
+        let mut tracks: BTreeMap<(usize, usize), Histogram> = BTreeMap::new();
+        let mut degraded = 0u64;
+        for o in outcomes {
+            tracks.entry((o.replica, o.lane.index())).or_default().record(o.latency);
+            degraded += u64::from(o.degraded);
+        }
+        MetricsSnapshot {
+            served: outcomes.len() as u64,
+            dropped: drops.len() as u64,
+            degraded,
+            plan,
+            cache,
+            workers,
+            latency: tracks
+                .into_iter()
+                .map(|((replica, lane), hist)| LatencyTrack {
+                    replica,
+                    lane: LaneClass::ALL[lane],
+                    hist,
+                })
+                .collect(),
+        }
+    }
+
+    /// Prometheus text exposition (version 0.0.4): counters as
+    /// `vortex_*_total`, latency quantiles as a summary-style family
+    /// labeled by replica × lane. Deterministic output order.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, rows: &[(String, u64)]| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for (labels, v) in rows {
+                let _ = writeln!(out, "{name}{labels} {v}");
+            }
+        };
+        counter(
+            "vortex_requests_served_total",
+            "Requests served (admitted + degraded).",
+            &[(String::new(), self.served)],
+        );
+        counter(
+            "vortex_requests_dropped_total",
+            "Requests shed by the admission controller.",
+            &[(String::new(), self.dropped)],
+        );
+        counter(
+            "vortex_requests_degraded_total",
+            "Requests served under a downgraded backend mode.",
+            &[(String::new(), self.degraded)],
+        );
+        counter(
+            "vortex_plan_resolutions_total",
+            "Plan resolutions by source (table / cache / fresh).",
+            &[
+                ("{source=\"table\"}".to_string(), self.plan.table),
+                ("{source=\"cache\"}".to_string(), self.plan.cache),
+                ("{source=\"fresh\"}".to_string(), self.plan.fresh),
+            ],
+        );
+        counter(
+            "vortex_plan_cache_events_total",
+            "Plan-cache lookups by result.",
+            &[
+                ("{event=\"hit\"}".to_string(), self.cache.hits),
+                ("{event=\"miss\"}".to_string(), self.cache.misses),
+                ("{event=\"eviction\"}".to_string(), self.cache.evictions),
+            ],
+        );
+        if !self.workers.is_empty() {
+            let exec: Vec<(String, u64)> = self
+                .workers
+                .iter()
+                .enumerate()
+                .map(|(w, s)| (format!("{{worker=\"{w}\"}}"), s.executed as u64))
+                .collect();
+            let steal: Vec<(String, u64)> = self
+                .workers
+                .iter()
+                .enumerate()
+                .map(|(w, s)| (format!("{{worker=\"{w}\"}}"), s.stolen as u64))
+                .collect();
+            counter(
+                "vortex_worker_units_total",
+                "(replica, lane) units executed per pool worker.",
+                &exec,
+            );
+            counter(
+                "vortex_worker_steals_total",
+                "Units stolen from another worker's queue.",
+                &steal,
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP vortex_request_latency_seconds Event-clock request latency per replica x lane."
+        );
+        let _ = writeln!(out, "# TYPE vortex_request_latency_seconds summary");
+        for t in &self.latency {
+            let base = format!("replica=\"{}\",lane=\"{}\"", t.replica, t.lane.name());
+            for (q, v) in [
+                ("0.5", t.hist.percentile(0.5)),
+                ("0.9", t.hist.percentile(0.9)),
+                ("0.99", t.hist.percentile(0.99)),
+            ] {
+                let _ = writeln!(
+                    out,
+                    "vortex_request_latency_seconds{{{base},quantile=\"{q}\"}} {v}"
+                );
+            }
+            let _ = writeln!(
+                out,
+                "vortex_request_latency_seconds_max{{{base}}} {}",
+                t.hist.max()
+            );
+            let _ = writeln!(
+                out,
+                "vortex_request_latency_seconds_count{{{base}}} {}",
+                t.hist.len()
+            );
+        }
+        out
+    }
+
+    /// JSON snapshot mirroring [`MetricsSnapshot::to_prometheus`]
+    /// (same counters and quantiles, machine-friendly shape).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("served", Json::num(self.served as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("degraded", Json::num(self.degraded as f64)),
+            (
+                "plan",
+                Json::obj(vec![
+                    ("table", Json::num(self.plan.table as f64)),
+                    ("cache", Json::num(self.plan.cache as f64)),
+                    ("fresh", Json::num(self.plan.fresh as f64)),
+                    ("warm_start_rate", Json::num(self.plan.warm_start_rate())),
+                ]),
+            ),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache.hits as f64)),
+                    ("misses", Json::num(self.cache.misses as f64)),
+                    ("evictions", Json::num(self.cache.evictions as f64)),
+                    ("hit_rate", Json::num(self.cache.hit_rate())),
+                ]),
+            ),
+            (
+                "workers",
+                Json::arr(
+                    self.workers
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("executed", Json::num(w.executed as f64)),
+                                ("stolen", Json::num(w.stolen as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "latency",
+                Json::arr(
+                    self.latency
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("replica", Json::num(t.replica as f64)),
+                                ("lane", Json::str(t.lane.name())),
+                                ("count", Json::num(t.hist.len() as f64)),
+                                ("p50", Json::num(t.hist.percentile(0.5))),
+                                ("p90", Json::num(t.hist.percentile(0.9))),
+                                ("p99", Json::num(t.hist.percentile(0.99))),
+                                ("max", Json::num(t.hist.max())),
+                                ("mean", Json::num(t.hist.mean())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Snapshot a single-host mixed run.
+pub fn snapshot_mixed(stats: &MixedStats) -> MetricsSnapshot {
+    MetricsSnapshot::from_parts(
+        &stats.outcomes,
+        &stats.drops,
+        stats.dispatch,
+        stats.cache.clone(),
+        Vec::new(),
+    )
+}
+
+/// Snapshot a fleet run (includes per-worker executor counters).
+pub fn snapshot_fleet(stats: &FleetStats) -> MetricsSnapshot {
+    MetricsSnapshot::from_parts(
+        &stats.outcomes,
+        &stats.drops,
+        stats.dispatch,
+        stats.cache.clone(),
+        stats.worker_stats.clone(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Naive oracle: full sort + the shared nearest-rank index.
+    fn sort_pct(samples: &[f64], p: f64) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[((s.len() - 1) as f64 * p).round() as usize]
+    }
+
+    #[test]
+    fn quickselect_matches_the_sort_oracle_on_random_samples() {
+        let mut rng = Rng::new(0x0b5e);
+        for trial in 0..50 {
+            let n = 1 + (trial * 37) % 400;
+            // Event-clock-like latencies: exponential with ties mixed in.
+            let samples: Vec<f64> = (0..n)
+                .map(|i| {
+                    if i % 7 == 0 {
+                        1e-3
+                    } else {
+                        rng.exp(2e-3)
+                    }
+                })
+                .collect();
+            let mut h = Histogram::default();
+            samples.iter().for_each(|&s| h.record(s));
+            for p in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let got = h.percentile(p);
+                let want = sort_pct(&samples, p);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "n={n} p={p}: quickselect {got} != sort oracle {want}"
+                );
+            }
+            assert_eq!(h.max(), sort_pct(&samples, 1.0).max(0.0));
+        }
+    }
+
+    #[test]
+    fn quickselect_handles_sorted_reversed_and_constant_inputs() {
+        for samples in [
+            (0..100).map(f64::from).collect::<Vec<_>>(),
+            (0..100).rev().map(f64::from).collect(),
+            vec![4.2; 64],
+            vec![1.0],
+        ] {
+            let mut h = Histogram::default();
+            samples.iter().for_each(|&s| h.record(s));
+            for p in [0.0, 0.5, 0.99, 1.0] {
+                assert_eq!(h.percentile(p), sort_pct(&samples, p));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_histogram_answers_zero_everywhere() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.percentile(0.99), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn empty_snapshot_exports_are_well_defined() {
+        // The empty-trace path: zero admitted requests must yield
+        // finite zeros in every exported number, not NaN.
+        let snap = snapshot_mixed(&MixedStats::default());
+        assert_eq!(snap.served, 0);
+        let json = snap.to_json().dump();
+        assert!(!json.contains("NaN") && !json.contains("null"), "{json}");
+        assert_eq!(
+            snap.to_json().get("plan").unwrap().get("warm_start_rate").unwrap().as_f64(),
+            Some(0.0)
+        );
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("vortex_requests_served_total 0"));
+        assert!(!prom.contains("NaN"));
+    }
+}

@@ -1,0 +1,321 @@
+//! Layer 9 — observability: zero-perturbation span tracing + metrics.
+//!
+//! Vortex's headline claims are rates and latencies — compile-time
+//! speedups, O(axes · log intervals) dispatch, SLO-bounded p99 under
+//! fleet load — and this module is the layer that turns every one of
+//! them into an inspectable artifact instead of a per-run aggregate.
+//! It threads through the whole stack:
+//!
+//! * **Serving spans** ([`crate::serve`]): admission, per-(replica,
+//!   lane) batch formation, plan resolution tagged table/cache/fresh,
+//!   the modeled scheduling charge, execution, and drop/degrade
+//!   decisions. Every serving span is stamped from the
+//!   **deterministic discrete-event clock** ([`SpanClock::Event`]) —
+//!   the same `f64` seconds the serving loop already computes — so
+//!   recording a span never reads a wall clock, never branches on
+//!   shared state, and never feeds a value back into the loop.
+//!   Tracing is therefore *zero-perturbation by construction*: a
+//!   traced run is bit-identical to an untraced one, a property the
+//!   fleet determinism oracle (`tests/fleet_oracle.rs`) proves at
+//!   every CI worker count.
+//! * **Compile spans** ([`crate::compiler::CompileReport::phases`]):
+//!   candgen, the sequential L0 micro-measurement phase, the parallel
+//!   per-L1 ranking, winner profiling and pruning — plus the
+//!   per-(op, mode) dispatch-table build
+//!   ([`crate::dispatch::BuildStats::per_table`]) with cell/merge
+//!   counts. Offline phases are genuinely wall-clock; their spans are
+//!   explicitly marked [`SpanClock::Wall`] so the trace schema itself
+//!   distinguishes measured time from modeled time — and the trace
+//!   auditor ([`crate::analysis::audit_trace`]) REJECTS a wall-marked
+//!   span in a serving category.
+//! * **Exports**: Chrome trace-event JSON ([`Trace::to_chrome_json`],
+//!   loadable in `chrome://tracing` / Perfetto; parsed back by
+//!   [`Trace::from_chrome_json`] with a byte-identical re-emit), a
+//!   Prometheus-style text exposition + JSON snapshot of counters and
+//!   exact-percentile latency histograms
+//!   ([`MetricsSnapshot`]), and the `vortex trace summarize` CLI that
+//!   prints a per-phase / per-track breakdown from a trace file.
+//!
+//! Timestamps are stored in **microseconds** (`ts_us` / `dur_us`) —
+//! the Chrome trace-event unit — converted from event-clock seconds
+//! exactly once at span construction, so emit → parse → re-emit never
+//! re-converts (the round-trip stays byte-identical).
+//!
+//! **Add-an-op note:** span names are lane-agnostic (`admit`, `form`,
+//! `plan`, `sched`, `exec`, `drop`, `degrade`); a new op only adds a
+//! thread-label via [`crate::serve::LaneClass::name`], so the span
+//! taxonomy — and every tool that consumes it — is untouched.
+//!
+//! See the "Layer 9 — observability" section of
+//! `docs/ARCHITECTURE.md` for the full span taxonomy and the
+//! determinism argument.
+
+pub mod chrome;
+pub mod metrics;
+
+pub use metrics::{snapshot_fleet, snapshot_mixed, Histogram, MetricsSnapshot};
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Which clock stamped a span. Serving spans are `Event` — simulated
+/// seconds from the deterministic discrete-event loop. `Wall` marks
+/// the explicitly-allowed exceptions: offline compile phases and
+/// profiler measurement, where the duration IS the measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpanClock {
+    #[default]
+    Event,
+    Wall,
+}
+
+/// One trace event: a complete span (`dur_us: Some`) or an instant
+/// (`dur_us: None`). `pid` is the replica (serving) or 0 (compile);
+/// `tid` is the lane index (serving) or 0 (compile pipeline track).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: String,
+    /// Category: `"serve"`, `"compile"`, `"profiler"`, `"dispatch"`.
+    pub cat: String,
+    pub pid: u64,
+    pub tid: u64,
+    /// Start timestamp, microseconds on this span's clock.
+    pub ts_us: f64,
+    /// Duration in microseconds; `None` renders as an instant event.
+    pub dur_us: Option<f64>,
+    pub clock: SpanClock,
+    /// Structured payload; rendered as the Chrome `args` object
+    /// (sorted keys, so emission is deterministic).
+    pub args: Vec<(String, Json)>,
+}
+
+impl Span {
+    /// A complete span from `[start, start + dur]` seconds.
+    pub fn complete(
+        name: &str,
+        cat: &str,
+        pid: u64,
+        tid: u64,
+        start_secs: f64,
+        dur_secs: f64,
+    ) -> Span {
+        Span {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            pid,
+            tid,
+            ts_us: start_secs * 1e6,
+            dur_us: Some(dur_secs * 1e6),
+            clock: SpanClock::Event,
+            args: Vec::new(),
+        }
+    }
+
+    /// An instant event at `at_secs`.
+    pub fn instant(name: &str, cat: &str, pid: u64, tid: u64, at_secs: f64) -> Span {
+        Span { dur_us: None, ..Span::complete(name, cat, pid, tid, at_secs, 0.0) }
+    }
+
+    /// Mark this span as wall-clock (offline compile / profiler time).
+    pub fn wall(mut self) -> Span {
+        self.clock = SpanClock::Wall;
+        self
+    }
+
+    pub fn arg(mut self, key: &str, value: Json) -> Span {
+        self.args.push((key.to_string(), value));
+        self
+    }
+}
+
+/// A full structured trace: the span list plus track labels and
+/// run-level metadata. Assembled by the serving layer
+/// ([`crate::serve::MixedStats::trace`],
+/// [`crate::serve::FleetStats::trace`]) and by [`compile_trace`];
+/// exported via [`Trace::to_chrome_json`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+    /// `(pid, label)` process labels, e.g. `(0, "replica 0")`.
+    pub processes: Vec<(u64, String)>,
+    /// `(pid, tid, label)` thread labels, e.g. `(0, 1, "gemm")`.
+    pub threads: Vec<(u64, u64, String)>,
+    /// Run-level metadata (routing policy, seed, ...), exported under
+    /// the Chrome `otherData` object.
+    pub meta: Vec<(String, Json)>,
+}
+
+impl Trace {
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Fold another trace's spans and track labels into this one
+    /// (deduplicating labels; metadata keeps the first value).
+    pub fn merge(&mut self, other: Trace) {
+        self.spans.extend(other.spans);
+        for p in other.processes {
+            if !self.processes.contains(&p) {
+                self.processes.push(p);
+            }
+        }
+        for t in other.threads {
+            if !self.threads.contains(&t) {
+                self.threads.push(t);
+            }
+        }
+        for (k, v) in other.meta {
+            if !self.meta.iter().any(|(mk, _)| *mk == k) {
+                self.meta.push((k, v));
+            }
+        }
+    }
+
+    /// The label of a `(pid, tid)` track: `"<process>/<thread>"` with
+    /// numeric fallbacks for unlabeled tracks.
+    pub fn track_label(&self, pid: u64, tid: u64) -> String {
+        let p = self
+            .processes
+            .iter()
+            .find(|(i, _)| *i == pid)
+            .map_or_else(|| format!("pid {pid}"), |(_, n)| n.clone());
+        let t = self
+            .threads
+            .iter()
+            .find(|(i, j, _)| *i == pid && *j == tid)
+            .map_or_else(|| format!("tid {tid}"), |(_, _, n)| n.clone());
+        format!("{p}/{t}")
+    }
+
+    /// Per-(track, span-name) breakdown table — the `vortex trace
+    /// summarize` report: counts, total/mean/max duration and the
+    /// share of the track's total span time.
+    pub fn summary_table(&self) -> Table {
+        use std::collections::BTreeMap;
+        // (pid, tid, name) -> (count, total_us, max_us)
+        let mut rows: BTreeMap<(u64, u64, String), (usize, f64, f64)> = BTreeMap::new();
+        let mut track_total: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+        for s in &self.spans {
+            let e = rows.entry((s.pid, s.tid, s.name.clone())).or_insert((0, 0.0, 0.0));
+            let d = s.dur_us.unwrap_or(0.0);
+            e.0 += 1;
+            e.1 += d;
+            e.2 = e.2.max(d);
+            if s.dur_us.is_some() {
+                *track_total.entry((s.pid, s.tid)).or_insert(0.0) += d;
+            }
+        }
+        let mut t = Table::new(
+            "trace summary (per track x span)",
+            &["track", "span", "count", "total", "mean", "max", "share %"],
+        );
+        for ((pid, tid, name), (count, total, max)) in rows {
+            let denom = track_total.get(&(pid, tid)).copied().unwrap_or(0.0);
+            let share = if denom > 0.0 { 100.0 * total / denom } else { 0.0 };
+            t.row(vec![
+                self.track_label(pid, tid),
+                name,
+                count.to_string(),
+                crate::util::table::fmt_secs(total * 1e-6),
+                crate::util::table::fmt_secs(total * 1e-6 / count.max(1) as f64),
+                crate::util::table::fmt_secs(max * 1e-6),
+                format!("{share:.1}"),
+            ]);
+        }
+        t
+    }
+}
+
+/// Assemble the offline-stage trace: the compile phases recorded in a
+/// [`crate::compiler::CompileReport`] plus, when a dispatch table was
+/// built, one `dispatch` span per (op, mode) table with its
+/// cell/merge counts. All spans are wall-marked — this is the offline
+/// half, where wall time is the measurement.
+pub fn compile_trace(
+    report: &crate::compiler::CompileReport,
+    build: Option<&crate::dispatch::BuildStats>,
+) -> Trace {
+    let mut trace = Trace {
+        processes: vec![(0, "compile".to_string())],
+        threads: vec![(0, 0, "pipeline".to_string()), (0, 1, "dispatch".to_string())],
+        meta: vec![
+            ("op".to_string(), Json::str(report.library.op.to_string())),
+            ("dtype".to_string(), Json::str(report.library.dtype.name())),
+            ("hw".to_string(), Json::str(report.library.hw_name.clone())),
+        ],
+        ..Trace::default()
+    };
+    trace.spans.extend(report.phases.iter().cloned());
+    if let Some(b) = build {
+        // Per-table build spans laid end to end on the dispatch track
+        // (the build itself is sequential over (op, mode) pairs).
+        let mut at = 0.0f64;
+        for t in &b.per_table {
+            trace.spans.push(
+                Span::complete("dispatch_table", "dispatch", 0, 1, at, t.build_secs)
+                    .wall()
+                    .arg("op", Json::str(t.op.to_string()))
+                    .arg("mode", Json::str(t.mode.clone()))
+                    .arg("cells_enumerated", Json::num(t.cells_enumerated as f64))
+                    .arg("cells_merged", Json::num(t.cells_merged as f64)),
+            );
+            at += t.build_secs;
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_builders_stamp_microseconds_once() {
+        let s = Span::complete("exec", "serve", 2, 1, 1.5e-3, 2e-6)
+            .arg("batch", Json::num(4.0));
+        assert_eq!(s.ts_us, 1.5e-3 * 1e6);
+        assert_eq!(s.dur_us, Some(2e-6 * 1e6));
+        assert_eq!(s.clock, SpanClock::Event);
+        let i = Span::instant("drop", "serve", 0, 0, 0.25).wall();
+        assert_eq!(i.dur_us, None);
+        assert_eq!(i.clock, SpanClock::Wall);
+    }
+
+    #[test]
+    fn merge_dedups_track_labels_and_keeps_first_meta() {
+        let mut a = Trace {
+            processes: vec![(0, "replica 0".into())],
+            meta: vec![("routing".into(), Json::str("hash-key"))],
+            ..Trace::default()
+        };
+        let b = Trace {
+            spans: vec![Span::instant("admit", "serve", 0, 0, 0.0)],
+            processes: vec![(0, "replica 0".into()), (1, "replica 1".into())],
+            meta: vec![("routing".into(), Json::str("least-loaded"))],
+            ..Trace::default()
+        };
+        a.merge(b);
+        assert_eq!(a.spans.len(), 1);
+        assert_eq!(a.processes.len(), 2);
+        assert_eq!(a.meta.len(), 1);
+        assert_eq!(a.meta[0].1.as_str(), Some("hash-key"));
+    }
+
+    #[test]
+    fn summary_table_groups_by_track_and_name() {
+        let trace = Trace {
+            spans: vec![
+                Span::complete("exec", "serve", 0, 0, 0.0, 1e-3),
+                Span::complete("exec", "serve", 0, 0, 2e-3, 3e-3),
+                Span::instant("admit", "serve", 0, 0, 0.0),
+            ],
+            processes: vec![(0, "replica 0".into())],
+            threads: vec![(0, 0, "gemm".into())],
+            ..Trace::default()
+        };
+        let t = trace.summary_table();
+        // Two grouped rows: admit (instants) and exec (2 spans).
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[1][2], "2");
+    }
+}

@@ -14,6 +14,26 @@ use crate::cost::Strategy;
 use crate::ir::{DType, OpKind, Tile};
 use crate::sim::Simulator;
 
+/// A point-in-time reading of a profiler's accumulated counters —
+/// subtract two snapshots to attribute queries/tuning time to one
+/// compile phase (the per-phase spans of
+/// [`crate::compiler::CompileReport::phases`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ProfSnapshot {
+    pub queries: usize,
+    pub tuning_secs: f64,
+}
+
+impl ProfSnapshot {
+    /// Counter deltas since `earlier` (`self` is the later reading).
+    pub fn since(self, earlier: ProfSnapshot) -> ProfSnapshot {
+        ProfSnapshot {
+            queries: self.queries - earlier.queries,
+            tuning_secs: self.tuning_secs - earlier.tuning_secs,
+        }
+    }
+}
+
 /// Source of empirical measurements for the hybrid analyzer.
 pub trait Profiler {
     /// True cost of the subchain `strat.tiles[..=level]` (one unit's
@@ -41,6 +61,12 @@ pub trait Profiler {
 
     /// Number of profiling queries issued.
     fn queries(&self) -> usize;
+
+    /// Current counter reading ([`ProfSnapshot::since`] attributes
+    /// queries/tuning time to a compile phase).
+    fn snapshot(&self) -> ProfSnapshot {
+        ProfSnapshot { queries: self.queries(), tuning_secs: self.tuning_secs() }
+    }
 
     /// Identity of the measurement source — the simulator seed PLUS
     /// the definition of every micro-measurement (currently the

@@ -64,6 +64,14 @@ impl CacheStats {
             self.hits as f64 / self.lookups() as f64
         }
     }
+
+    /// Fold another shard's counters into this one (fleet aggregation
+    /// over per-unit cache shards).
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+    }
 }
 
 /// One padded-tile bucket: everything selection can observe about a

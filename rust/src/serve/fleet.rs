@@ -42,10 +42,13 @@ use crate::coordinator::select::Selector;
 use crate::dispatch::DispatchTable;
 use crate::util::rng::fnv1a;
 
+use crate::obs::Trace;
+use crate::util::json::Json;
+
 use super::{
     dynamic_units, execute_units, merge_key, resolve_dispatch, serve_lane, CacheStats,
     DispatchStats, DropRecord, LaneClass, LaneEngine, MixedStats, PlanCache, PlanSource,
-    RequestOutcome, ServeConfig, ServeRequest,
+    RequestOutcome, ServeConfig, ServeRequest, WorkerStats,
 };
 
 /// How the admission pre-pass assigns requests to replicas. Both
@@ -127,6 +130,14 @@ pub struct FleetStats {
     pub slo_diags: Vec<Diagnostic>,
     /// Max replica span (replicas are concurrent by definition).
     pub span_secs: f64,
+    /// Per-worker executor telemetry (units executed / stolen).
+    /// Timing-dependent with a real pool — excluded from the
+    /// determinism oracle's fingerprint by design.
+    pub worker_stats: Vec<WorkerStats>,
+    /// Fleet-wide span trace when [`ServeConfig::trace`] was set:
+    /// every replica a process, every (replica, lane) a thread track,
+    /// spans aggregated in fixed unit order (see [`crate::obs`]).
+    pub trace: Option<Trace>,
 }
 
 impl FleetStats {
@@ -260,23 +271,25 @@ pub fn serve_fleet<E: LaneEngine, F: Fn() -> E + Sync>(
     seed_order
         .sort_by_key(|&u| (Reverse(cfg.serve.lane(units[u].class).slo.priority), u));
 
-    let results: Vec<UnitResult> = execute_units(cfg.workers, &seed_order, |u| {
-        let unit = &units[u];
-        let mut engine = make_engine();
-        let mut cache =
-            cfg.serve.plan_cache.map(|cap| PlanCache::for_selector(selector, cap));
-        let run = serve_lane(
-            &mut engine,
-            selector,
-            cfg.serve.lane(unit.class),
-            unit.class,
-            unit.replica,
-            &unit.requests,
-            tables[unit.replica].as_ref(),
-            cache.as_mut(),
-        );
-        UnitResult { run, cache: cache.map(|c| c.stats).unwrap_or_default() }
-    });
+    let (results, worker_stats): (Vec<UnitResult>, Vec<WorkerStats>) =
+        execute_units(cfg.workers, &seed_order, |u| {
+            let unit = &units[u];
+            let mut engine = make_engine();
+            let mut cache =
+                cfg.serve.plan_cache.map(|cap| PlanCache::for_selector(selector, cap));
+            let run = serve_lane(
+                &mut engine,
+                selector,
+                cfg.serve.lane(unit.class),
+                unit.class,
+                unit.replica,
+                &unit.requests,
+                tables[unit.replica].as_ref(),
+                cache.as_mut(),
+                cfg.serve.trace,
+            );
+            UnitResult { run, cache: cache.map(|c| c.stats).unwrap_or_default() }
+        });
 
     // Aggregation in fixed (replica, lane) order — `units` was built
     // replica-major, lane-minor, and `results` is unit-indexed.
@@ -290,17 +303,37 @@ pub fn serve_fleet<E: LaneEngine, F: Fn() -> E + Sync>(
         dispatch_build,
         table_diags,
         slo_diags,
+        worker_stats,
         ..FleetStats::default()
     };
+    // Trace assembly follows the same fixed unit order as every other
+    // aggregate, so the trace is identical across worker counts too
+    // (modulo the measured `select_wall_us` args it carries as data).
+    let mut trace = cfg.serve.trace.then(|| Trace {
+        processes: (0..cfg.replicas)
+            .map(|r| (r as u64, format!("replica {r}")))
+            .collect(),
+        meta: vec![
+            ("routing".to_string(), Json::str(cfg.routing.name())),
+            ("replicas".to_string(), Json::num(cfg.replicas as f64)),
+        ],
+        ..Trace::default()
+    });
     for (unit, result) in units.iter().zip(results) {
         let rep = &mut stats.replicas[unit.replica];
         rep.span_secs = rep.span_secs.max(result.run.stats.metrics.span_secs);
         rep.outcomes.extend(result.run.outcomes);
         rep.drops.extend(result.run.drops);
         rep.lanes.push(result.run.stats);
-        rep.cache.hits += result.cache.hits;
-        rep.cache.misses += result.cache.misses;
-        rep.cache.evictions += result.cache.evictions;
+        rep.cache.absorb(&result.cache);
+        if let Some(t) = trace.as_mut() {
+            t.threads.push((
+                unit.replica as u64,
+                unit.class.index() as u64,
+                unit.class.name().to_string(),
+            ));
+            t.spans.extend(result.run.trace);
+        }
     }
     for rep in &mut stats.replicas {
         rep.outcomes.sort_by_key(|o| o.id);
@@ -318,10 +351,9 @@ pub fn serve_fleet<E: LaneEngine, F: Fn() -> E + Sync>(
         stats.dispatch.table += rep.dispatch.table;
         stats.dispatch.cache += rep.dispatch.cache;
         stats.dispatch.fresh += rep.dispatch.fresh;
-        stats.cache.hits += rep.cache.hits;
-        stats.cache.misses += rep.cache.misses;
-        stats.cache.evictions += rep.cache.evictions;
+        stats.cache.absorb(&rep.cache);
     }
+    stats.trace = trace;
     stats.outcomes.sort_by_key(|o| o.id);
     stats.drops.sort_by_key(|d| d.id);
     stats

@@ -60,7 +60,9 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::select::{HwMode, Selection, Selector};
 use crate::dispatch::{DispatchConfig, DispatchTable, TableData};
 use crate::ir::{IterSpace, TensorProgram};
+use crate::obs::{Span, Trace};
 use crate::sim::Simulator;
+use crate::util::json::Json;
 
 /// Where one request's plan came from — the tri-state accounting of
 /// the dispatch-table / plan-cache / fresh-selection stack.
@@ -73,6 +75,17 @@ pub enum PlanSource {
     /// Beyond the horizon, first touch: a full selection scan ran
     /// (the only cold path left).
     Fresh,
+}
+
+impl PlanSource {
+    /// Stable label used in trace span args and metric labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanSource::Table => "table",
+            PlanSource::Cache => "cache",
+            PlanSource::Fresh => "fresh",
+        }
+    }
 }
 
 /// Per-request counts by [`PlanSource`]; sums to the request count.
@@ -237,6 +250,13 @@ pub struct ServeConfig {
     pub adopt: Option<Vec<TableData>>,
     /// Gate on adopted payloads (see [`TablePolicy`]).
     pub table_policy: TablePolicy,
+    /// Record structured spans ([`crate::obs`]) into
+    /// [`MixedStats::trace`] / [`FleetStats::trace`]. Spans are
+    /// stamped from the event clock with values the loop already
+    /// computed, so enabling this is ZERO-perturbation: every outcome
+    /// is bit-identical to an untraced run (the fleet oracle proves
+    /// it; see `tests/fleet_oracle.rs`).
+    pub trace: bool,
 }
 
 impl Default for ServeConfig {
@@ -247,6 +267,7 @@ impl Default for ServeConfig {
             dispatch: None,
             adopt: None,
             table_policy: TablePolicy::default(),
+            trace: false,
         }
     }
 }
@@ -273,6 +294,12 @@ impl ServeConfig {
     /// This config adopting a shipped table payload under `policy`.
     pub fn adopting(&self, payload: Vec<TableData>, policy: TablePolicy) -> ServeConfig {
         ServeConfig { adopt: Some(payload), table_policy: policy, ..self.clone() }
+    }
+
+    /// This config with span tracing enabled (zero-perturbation; see
+    /// [`ServeConfig::trace`]).
+    pub fn traced(&self) -> ServeConfig {
+        ServeConfig { trace: true, ..self.clone() }
     }
 }
 
@@ -465,6 +492,9 @@ pub struct MixedStats {
     pub drops: Vec<DropRecord>,
     /// Max lane span (lanes run as concurrent executors).
     pub span_secs: f64,
+    /// Structured span trace of the run, when [`ServeConfig::trace`]
+    /// was set (event-clock stamped; see [`crate::obs`]).
+    pub trace: Option<Trace>,
 }
 
 impl MixedStats {
@@ -555,6 +585,10 @@ pub fn serve_mixed_trace(
         table_diags,
         ..MixedStats::default()
     };
+    let mut trace = cfg.trace.then(|| Trace {
+        processes: vec![(0, "replica 0".to_string())],
+        ..Trace::default()
+    });
     for class in LaneClass::ALL {
         let lane_reqs: Vec<&ServeRequest> = requests
             .iter()
@@ -572,12 +606,18 @@ pub fn serve_mixed_trace(
             &lane_reqs,
             dispatch.as_ref(),
             plan_cache.as_mut(),
+            cfg.trace,
         );
         stats.span_secs = stats.span_secs.max(run.stats.metrics.span_secs);
         stats.outcomes.extend(run.outcomes);
         stats.drops.extend(run.drops);
         stats.lanes.push(run.stats);
+        if let Some(t) = trace.as_mut() {
+            t.threads.push((0, class.index() as u64, class.name().to_string()));
+            t.spans.extend(run.trace);
+        }
     }
+    stats.trace = trace;
     stats.outcomes.sort_by_key(|o| o.id);
     stats.drops.sort_by_key(|d| d.id);
     stats.cache = plan_cache.map(|c| c.stats).unwrap_or_default();
@@ -600,6 +640,10 @@ pub(crate) struct LaneRun {
     pub(crate) stats: LaneStats,
     pub(crate) outcomes: Vec<RequestOutcome>,
     pub(crate) drops: Vec<DropRecord>,
+    /// Event-clock spans of this lane's run (empty unless tracing was
+    /// requested). Purely additive output — recording reads only
+    /// values the loop already computed.
+    pub(crate) trace: Vec<Span>,
 }
 
 /// One lane's discrete-event loop: the old `serve_trace` core,
@@ -627,10 +671,17 @@ pub(crate) fn serve_lane(
     requests: &[&ServeRequest],
     dispatch: Option<&DispatchTable>,
     mut plan_cache: Option<&mut PlanCache>,
+    traced: bool,
 ) -> LaneRun {
     let mut metrics = Metrics::default();
     let mut outcomes = Vec::new();
     let mut drops = Vec::new();
+    // Span recording is write-only bookkeeping over values the loop
+    // computes anyway: no wall-clock reads, no extra branches on
+    // serving state — the zero-perturbation invariant the fleet
+    // oracle's traced-vs-untraced leg pins bitwise.
+    let mut trace: Vec<Span> = Vec::new();
+    let (pid, tid) = (replica as u64, class.index() as u64);
     let mut batches = 0usize;
     let mut total_units = 0usize;
     let mut clock = 0.0f64;
@@ -669,6 +720,17 @@ pub(crate) fn serve_lane(
                             decided_at: open,
                             miss_by: open - (first.arrive + d),
                         });
+                        if traced {
+                            trace.push(
+                                Span::instant("drop", "serve", pid, tid, open)
+                                    .arg("id", Json::num(first.id as f64))
+                                    .arg(
+                                        "miss_by_us",
+                                        Json::num((open - (first.arrive + d)) * 1e6),
+                                    )
+                                    .arg("policy", Json::str(cfg.slo.policy.name())),
+                            );
+                        }
                         metrics.dropped += 1;
                         served[next] = true;
                         pending -= 1;
@@ -782,18 +844,77 @@ pub(crate) fn serve_lane(
             });
             served[j] = true;
         }
+        if traced {
+            for &j in &batch {
+                trace.push(
+                    Span::instant("admit", "serve", pid, tid, requests[j].arrive)
+                        .arg("id", Json::num(requests[j].id as f64)),
+                );
+            }
+            if degraded {
+                trace.push(
+                    Span::instant("degrade", "serve", pid, tid, open)
+                        .arg("policy", Json::str(cfg.slo.policy.name())),
+                );
+            }
+            trace.push(
+                Span::complete("form", "serve", pid, tid, open, launch - open)
+                    .arg("batch", Json::num(bsz as f64)),
+            );
+            // The plan instant is EVENT-stamped at launch; the measured
+            // selection wall-clock rides along as data (`select_wall_us`
+            // — the Fig. 14 scheduling component), never as a timestamp.
+            trace.push(
+                Span::instant("plan", "serve", pid, tid, launch)
+                    .arg("source", Json::str(source.name()))
+                    .arg("lib", Json::num(sel.lib as f64))
+                    .arg("kernel", Json::num(sel.kernel as f64))
+                    .arg("select_wall_us", Json::num(sel.select_secs * 1e6)),
+            );
+            trace.push(Span::complete("sched", "serve", pid, tid, launch, SCHED_OVERHEAD_SECS));
+            trace.push(
+                Span::complete(
+                    "exec",
+                    "serve",
+                    pid,
+                    tid,
+                    launch + SCHED_OVERHEAD_SECS,
+                    service,
+                )
+                .arg("batch", Json::num(bsz as f64))
+                .arg("degraded", Json::Bool(degraded)),
+            );
+        }
         batches += 1;
         total_units += dynamic_units(&merged);
         pending -= bsz;
         clock = done;
     }
     metrics.span_secs = clock;
-    LaneRun { stats: LaneStats { class, metrics, batches, total_units }, outcomes, drops }
+    LaneRun {
+        stats: LaneStats { class, metrics, batches, total_units },
+        outcomes,
+        drops,
+        trace,
+    }
+}
+
+/// Per-worker executor telemetry: how many (replica, lane) units the
+/// worker ran, and how many of those it STOLE from another worker's
+/// queue. Telemetry only — steal counts depend on thread timing and
+/// are deliberately excluded from the determinism oracle's
+/// fingerprint (serving OUTCOMES stay bitwise invariant; which worker
+/// ran a unit does not).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    pub executed: usize,
+    pub stolen: usize,
 }
 
 /// Deterministic parallel executor over independent work units: run
 /// `job(u)` for every `u` in `0..seed_order.len()` and return the
-/// results in UNIT-INDEX order regardless of worker count.
+/// results in UNIT-INDEX order regardless of worker count, plus
+/// per-worker [`WorkerStats`].
 ///
 /// `workers <= 1` is the sequential discrete-event oracle (units run
 /// in index order on the calling thread). With more workers, a
@@ -809,7 +930,7 @@ pub(crate) fn execute_units<R: Send>(
     workers: usize,
     seed_order: &[usize],
     job: impl Fn(usize) -> R + Sync,
-) -> Vec<R> {
+) -> (Vec<R>, Vec<WorkerStats>) {
     use std::collections::VecDeque;
     use std::sync::Mutex;
     let n = seed_order.len();
@@ -819,7 +940,8 @@ pub(crate) fn execute_units<R: Send>(
         s == (0..n).collect::<Vec<_>>()
     });
     if workers <= 1 {
-        return (0..n).map(job).collect();
+        let results = (0..n).map(job).collect();
+        return (results, vec![WorkerStats { executed: n, stolen: 0 }]);
     }
     let queues: Vec<Mutex<VecDeque<usize>>> =
         (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
@@ -827,6 +949,7 @@ pub(crate) fn execute_units<R: Send>(
         queues[i % workers].lock().unwrap().push_back(u);
     }
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut worker_stats = vec![WorkerStats::default(); workers];
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|w| {
@@ -834,36 +957,50 @@ pub(crate) fn execute_units<R: Send>(
                 let job = &job;
                 s.spawn(move || {
                     let mut done: Vec<(usize, R)> = Vec::new();
+                    let mut stats = WorkerStats::default();
                     loop {
                         // Own queue front first, then steal from the
                         // BACK of the others (classic stealing keeps
                         // contention off the owners' hot ends). No unit
                         // ever re-enqueues work, so all-empty means
                         // drained for good.
-                        let u = queues[w].lock().unwrap().pop_front().or_else(|| {
-                            (0..queues.len())
-                                .filter(|&o| o != w)
-                                .find_map(|o| queues[o].lock().unwrap().pop_back())
-                        });
+                        let u = queues[w].lock().unwrap().pop_front().map(|u| (u, false)).or_else(
+                            || {
+                                (0..queues.len()).filter(|&o| o != w).find_map(|o| {
+                                    queues[o]
+                                        .lock()
+                                        .unwrap()
+                                        .pop_back()
+                                        .map(|u| (u, true))
+                                })
+                            },
+                        );
                         match u {
-                            Some(u) => done.push((u, job(u))),
+                            Some((u, stolen)) => {
+                                stats.executed += 1;
+                                stats.stolen += usize::from(stolen);
+                                done.push((u, job(u)));
+                            }
                             None => break,
                         }
                     }
-                    done
+                    (done, stats)
                 })
             })
             .collect();
-        for h in handles {
-            for (u, r) in h.join().expect("fleet worker panicked") {
+        for (w, h) in handles.into_iter().enumerate() {
+            let (done, stats) = h.join().expect("fleet worker panicked");
+            worker_stats[w] = stats;
+            for (u, r) in done {
                 slots[u] = Some(r);
             }
         }
     });
-    slots
+    let results = slots
         .into_iter()
         .map(|r| r.expect("every unit executes exactly once"))
-        .collect()
+        .collect();
+    (results, worker_stats)
 }
 
 #[cfg(test)]
@@ -1158,5 +1295,66 @@ mod tests {
                 b.selection
             );
         }
+    }
+
+    #[test]
+    fn tracing_is_zero_perturbation_and_spans_reconcile() {
+        let s = selector();
+        let requests: Vec<ServeRequest> = (0..40u64)
+            .map(|i| {
+                let program = match i % 3 {
+                    0 => gemm(16 + i as usize),
+                    1 => conv(1 + (i as usize % 4)),
+                    _ => attn(1, 64),
+                };
+                ServeRequest { id: i, program, arrive: 1e-4 * i as f64 }
+            })
+            .collect();
+        let cfg = ServeConfig::default();
+        let mut e1 = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let plain = serve_mixed_trace(&mut e1, &s, &cfg, &requests);
+        let mut e2 = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let traced = serve_mixed_trace(&mut e2, &s, &cfg.traced(), &requests);
+        // Zero perturbation: recording spans must not move a single bit
+        // of any outcome.
+        assert!(plain.trace.is_none());
+        assert_eq!(plain.outcomes.len(), traced.outcomes.len());
+        for (a, b) in plain.outcomes.iter().zip(&traced.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+            assert_eq!(a.launch.to_bits(), b.launch.to_bits());
+            assert_eq!(a.batch_size, b.batch_size);
+            assert_eq!(a.source, b.source);
+            assert!(a.selection.same_plan(&b.selection));
+        }
+        // The trace reconciles with the outcome log: one admit instant
+        // per request; one form/plan/sched/exec span per batch; every
+        // span stamped from the event clock.
+        let t = traced.trace.as_ref().expect("trace requested");
+        let count = |name: &str| t.spans.iter().filter(|sp| sp.name == name).count();
+        assert_eq!(count("admit"), traced.outcomes.len());
+        let batches: usize = traced.lanes.iter().map(|l| l.batches).sum();
+        for name in ["form", "plan", "sched", "exec"] {
+            assert_eq!(count(name), batches, "{name} spans vs {batches} batches");
+        }
+        assert!(t.spans.iter().all(|sp| sp.clock == crate::obs::SpanClock::Event));
+        assert_eq!(t.threads.len(), traced.lanes.len());
+    }
+
+    #[test]
+    fn zero_request_stats_are_well_defined_zeros() {
+        // The empty-trace path: every rate and percentile must answer
+        // 0.0, never NaN, and a requested trace still materializes.
+        let s = selector();
+        let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let stats =
+            serve_mixed_trace(&mut engine, &s, &ServeConfig::default().traced(), &[]);
+        assert_eq!(stats.count(), 0);
+        assert_eq!(stats.latency_percentiles(), (0.0, 0.0, 0.0));
+        assert_eq!(stats.sched_fraction(), 0.0);
+        assert_eq!(stats.dispatch.warm_start_rate(), 0.0);
+        assert_eq!(stats.cache.hit_rate(), 0.0);
+        let t = stats.trace.as_ref().expect("trace requested");
+        assert!(t.spans.is_empty());
     }
 }

@@ -61,6 +61,17 @@ pub enum OverloadPolicy {
     Degrade(HwMode),
 }
 
+impl OverloadPolicy {
+    /// Stable label used in trace span args and telemetry output.
+    pub fn name(self) -> &'static str {
+        match self {
+            OverloadPolicy::ServeAnyway => "serve-anyway",
+            OverloadPolicy::Drop => "drop",
+            OverloadPolicy::Degrade(_) => "degrade",
+        }
+    }
+}
+
 /// Per-lane latency objective: an optional completion deadline
 /// (seconds from request arrival), a scheduling priority (higher
 /// priorities seed the fleet executor's work queues first — a

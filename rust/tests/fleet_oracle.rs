@@ -170,9 +170,68 @@ fn executor_matches_the_discrete_event_oracle() {
                     format!("workers={w} diverged from the sequential oracle"),
                 )?;
             }
+            // Tracing leg: span recording must be unobservable —
+            // a traced sequential run reproduces the untraced oracle
+            // bit-for-bit (the zero-perturbation contract of
+            // `ServeConfig::trace`).
+            let mut traced_cfg = fleet_config(case, 0);
+            traced_cfg.serve = traced_cfg.serve.traced();
+            let traced = serve_fleet(engine, &selector, &traced_cfg, &trace);
+            prop_assert(
+                fingerprint(&traced) == want,
+                "tracing-on diverged from the untraced oracle".to_string(),
+            )?;
             Ok(())
         },
     );
+}
+
+/// The tracing contract, explicitly at every CI worker count: enabling
+/// span recording changes NOTHING about serving (same fingerprint as
+/// the untraced sequential oracle), the recorded trace is non-empty
+/// and identical across worker counts, and it passes the trace-schema
+/// audit cleanly.
+#[test]
+fn tracing_on_is_bit_identical_to_tracing_off() {
+    use vortex::analysis::audit_trace;
+    let selector = scenario::demo_selector(5);
+    let trace = scenario::mixed_trace(96, 1e-4, 17, DType::F32);
+    let slo = LaneSlo::with_deadline(3e-4).with_policy(OverloadPolicy::Drop);
+    let cfg = |workers: usize, traced: bool| {
+        let mut d = scenario::dispatch_config();
+        d.max_cells = 1 << 16;
+        let mut serve = scenario::slo_serving_config(slo).with_dispatch(d);
+        if traced {
+            serve = serve.traced();
+        }
+        FleetConfig { replicas: 4, workers, routing: RoutePolicy::HashKey, serve }
+    };
+    let plain = serve_fleet(engine, &selector, &cfg(0, false), &trace);
+    assert!(plain.trace.is_none(), "untraced runs must not carry a trace");
+    let want = fingerprint(&plain);
+    let mut spans_at: Option<usize> = None;
+    for w in worker_counts() {
+        let run = serve_fleet(engine, &selector, &cfg(w, true), &trace);
+        assert_eq!(
+            fingerprint(&run),
+            want,
+            "tracing perturbed serving at workers={w}"
+        );
+        let t = run.trace.as_ref().expect("trace requested");
+        assert!(!t.is_empty(), "traced run recorded no spans");
+        // Fixed unit-order assembly: the span stream is identical in
+        // shape at every worker count.
+        match spans_at {
+            None => spans_at = Some(t.spans.len()),
+            Some(n) => assert_eq!(t.spans.len(), n, "span count varies with workers={w}"),
+        }
+        let report = audit_trace(t);
+        assert!(
+            report.is_clean(true),
+            "trace-schema audit found problems at workers={w}: {:?}",
+            report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+        );
+    }
 }
 
 #[test]
