@@ -172,6 +172,99 @@ fn swapped_winner_is_caught_dominated() {
     assert!(hit.counterexample.is_some(), "refutation must carry a counterexample shape");
 }
 
+/// Satellite: the dispatch pass covers the decode lane's op on EVERY
+/// hardware preset — CausalAttention gets a table (through the
+/// batched-GEMM alias) on each grid, and that table's masked-traffic
+/// argmin proof discharges cleanly.
+#[test]
+fn causal_attention_is_audited_on_every_preset_grid() {
+    for hw in [presets::a100(), presets::xeon_8255c(), presets::cpu_pjrt()] {
+        let cfg = AnalyzerConfig::default_for(&hw);
+        let mut prof = SimProfiler::new(Simulator::new(hw.clone(), 11));
+        let opts = CompileOpts::default();
+        let lib = compile(&hw, OpKind::BatchedGemm, DType::F32, &cfg, &mut prof, &opts).library;
+        let s = Selector::new(hw.clone(), vec![lib]);
+        let dcfg = DispatchConfig {
+            horizon: 48,
+            batch_horizon: 6,
+            max_cells: 1 << 14,
+            ..DispatchConfig::default()
+        };
+        let table = DispatchTable::for_selector(&s, &dcfg);
+        assert!(
+            table.tables.iter().any(|t| t.op == OpKind::CausalAttention),
+            "{}: no CausalAttention table in the preset grid",
+            s.hw.name
+        );
+        let report = audit_dispatch_table(&s, &table);
+        assert!(
+            report.is_clean(true),
+            "{}: CausalAttention grid audit found problems: {:?}",
+            s.hw.name,
+            report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+        );
+        assert_eq!(report.tables_checked, table.tables.len());
+    }
+}
+
+/// Satellite: a tampered winner inside the CausalAttention table — the
+/// masked-traffic argmin the decode lane trusts for its zero-scan
+/// steady state — is refuted by the named dominance diagnostic, with
+/// the finding carrying the op and a counterexample shape.
+#[test]
+fn tampered_causal_decode_winner_is_caught() {
+    let s = selector(11);
+    let mut table = DispatchTable::for_selector(&s, &dispatch_config());
+    let mut tampered = false;
+    'search: for t in &mut table.tables {
+        if t.op != OpKind::CausalAttention {
+            continue;
+        }
+        let chain = s.chain_factor(t.op);
+        let eligible = s.eligible_fast(s.serving_op(t.op), t.mode);
+        if eligible.len() < 2 {
+            continue;
+        }
+        let rank = t.edges.len();
+        let n_cells: usize = t.edges.iter().map(Vec::len).product();
+        for flat in 0..n_cells {
+            let mut rem = flat;
+            let mut rep = Tile::ones(rank);
+            for a in (0..rank).rev() {
+                rep[a] = t.edges[a][rem % t.edges[a].len()];
+                rem /= t.edges[a].len();
+            }
+            let best = eligible
+                .iter()
+                .map(|&fi| s.fast[fi].estimate(rep).0 * chain)
+                .fold(f64::INFINITY, f64::min);
+            if let Some(&rival) = eligible
+                .iter()
+                .find(|&&fi| s.fast[fi].estimate(rep).0 * chain > best)
+            {
+                t.winners[flat] = rival as u32;
+                tampered = true;
+                break 'search;
+            }
+        }
+    }
+    assert!(tampered, "no CausalAttention cell with a strictly-dominated rival");
+    let report = audit_dispatch_table(&s, &table);
+    assert!(report.errors() > 0);
+    let hit = report
+        .diagnostics
+        .iter()
+        .find(|d| d.code == "dispatch.winner_dominated")
+        .unwrap_or_else(|| {
+            panic!(
+                "expected dispatch.winner_dominated, got: {:?}",
+                report.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+            )
+        });
+    assert_eq!(hit.op, Some(OpKind::CausalAttention), "finding must name the decode op");
+    assert!(hit.counterexample.is_some(), "refutation must carry a counterexample shape");
+}
+
 /// Satellite: an undersized capacity is named per level, with the
 /// extrema corner as the counterexample.
 #[test]

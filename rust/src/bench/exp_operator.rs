@@ -295,6 +295,13 @@ pub fn ops(out_dir: &Path, seed: u64, fraction: usize) -> Vec<Table> {
                 .into_iter()
                 .step_by(4 * frac)
                 .collect(),
+            // Decode attention is a serving-path property (per-token
+            // dispatch over a growing seq_k), measured by its own
+            // bench (`bench decode`); its aliased two-kernel chain
+            // duplicates the batched-GEMM row at the op level, so it
+            // adds no row here and the committed BENCH_ops.json is
+            // unchanged.
+            OpKind::CausalAttention => continue,
         };
         let libs = selector.libraries.iter().filter(|l| l.op == op).count();
         let kernels: usize = selector

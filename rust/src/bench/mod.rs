@@ -7,6 +7,7 @@
 
 pub mod exp_ablation;
 pub mod exp_analysis;
+pub mod exp_decode;
 pub mod exp_model;
 pub mod exp_operator;
 pub mod exp_serve;
@@ -20,7 +21,7 @@ use crate::util::table::Table;
 /// All experiment names, in paper order.
 pub const EXPERIMENTS: &[&str] = &[
     "fig3", "fig5", "table5", "table6", "fig13", "offline", "fig14", "fig15",
-    "table7", "fig16", "ablation", "ops", "serve",
+    "table7", "fig16", "ablation", "ops", "serve", "decode",
 ];
 
 /// Run one experiment (or "all"). `fast` subsamples the big suites so a
@@ -42,6 +43,7 @@ pub fn run(name: &str, out_dir: &Path, seed: u64, fast: bool) -> Vec<Table> {
         "ablation" => exp_ablation::ablation(out_dir, seed, frac),
         "ops" => exp_operator::ops(out_dir, seed, frac),
         "serve" => exp_serve::serve(out_dir, seed, frac),
+        "decode" => exp_decode::decode(out_dir, seed, frac),
         "all" => {
             let mut all = Vec::new();
             for e in EXPERIMENTS {

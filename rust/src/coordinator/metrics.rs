@@ -23,6 +23,13 @@ pub struct Metrics {
     /// ([`crate::serve::OverloadPolicy::Degrade`]); these DO carry a
     /// latency sample (they executed) and are counted here on top.
     pub degraded: u64,
+    /// Amortized allocation events on the serving hot path: pool and
+    /// reservoir builds counted by loops that promise a zero-alloc
+    /// steady state (the continuous-batching decode lane). The count
+    /// is a function of the lane config and offered load — NEVER of
+    /// how many steps ran — which is exactly what the decode lane's
+    /// steady-state test pins.
+    pub alloc_events: u64,
 }
 
 impl Metrics {
@@ -31,6 +38,15 @@ impl Metrics {
         self.sched.push(sched);
         self.exec.push(exec);
         self.flops += flops;
+    }
+
+    /// Pre-size the per-request reservoirs for `n` samples so the
+    /// recording path never reallocates (one amortized build,
+    /// accounted in [`Metrics::alloc_events`] by the caller).
+    pub fn reserve(&mut self, n: usize) {
+        self.lat.reserve(n);
+        self.sched.reserve(n);
+        self.exec.reserve(n);
     }
 
     pub fn count(&self) -> usize {

@@ -149,6 +149,7 @@ pub fn serve_trace(
             id: r.id,
             program: TensorProgram::Gemm { m: r.rows, n: cfg.n, k: cfg.k, dtype: cfg.dtype },
             arrive: r.arrive,
+            steps: 1,
         })
         .collect();
     let mut serve_cfg = ServeConfig { plan_cache: None, ..ServeConfig::default() };

@@ -21,8 +21,8 @@ pub mod op;
 use std::fmt;
 
 pub use op::{
-    Axis, AxisRole, BatchedGemm, Conv2d, FusedAttention, Gemm, GroupedConv2d,
-    IterSpace, OpKind, OpSpec, Tile, MAX_AXES,
+    Axis, AxisRole, BatchedGemm, CausalAttention, Conv2d, FusedAttention, Gemm,
+    GroupedConv2d, IterSpace, OpKind, OpSpec, Tile, MAX_AXES,
 };
 
 /// Element type of a tensor program.
@@ -115,6 +115,26 @@ pub enum TensorProgram {
     /// [`TensorProgram::validate`], which [`TensorProgram::space`]
     /// enforces with a panic.
     Attention { batch: usize, seq: usize, d: usize, heads: usize, dtype: DType },
+    /// Causal-masked attention over a resident KV cache — the
+    /// autoregressive serving chain. `seq_q` queries (the LAST `seq_q`
+    /// positions of the sequence) attend a `seq_k`-entry K/V cache:
+    /// decode is `seq_q = 1` with `seq_k` growing by one per token,
+    /// prefill is `seq_q = seq_k`. Maps to ONE [`CausalAttention`]
+    /// space whose masked traffic/FLOP formulas count only the
+    /// lower-triangular work.
+    ///
+    /// Prefer the fallible [`TensorProgram::causal_attention`]
+    /// constructor: invalid geometry (zero dims, `heads` not dividing
+    /// `d`, `seq_q > seq_k`) is caught by [`TensorProgram::validate`],
+    /// which [`TensorProgram::space`] enforces with a panic.
+    CausalAttention {
+        batch: usize,
+        seq_q: usize,
+        seq_k: usize,
+        d: usize,
+        heads: usize,
+        dtype: DType,
+    },
 }
 
 /// The canonical contraction view all levels operate on.
@@ -186,6 +206,32 @@ impl TensorProgram {
         Ok(p)
     }
 
+    /// Fallible causal-attention constructor — the ONLY way invalid
+    /// decode/prefill geometry surfaces. `io` is the
+    /// (batch, seq_q, seq_k) triple, `proj` the (d_model, heads) pair.
+    /// `seq_q <= seq_k` is required: queries are the last `seq_q`
+    /// positions of the `seq_k`-entry causal sequence.
+    pub fn causal_attention(
+        (batch, seq_q, seq_k): (usize, usize, usize),
+        (d, heads): (usize, usize),
+        dtype: DType,
+    ) -> Result<TensorProgram, String> {
+        let p = TensorProgram::CausalAttention { batch, seq_q, seq_k, d, heads, dtype };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// One-token decode step: `seq_q = 1` against a `seq_k`-entry KV
+    /// cache — the shape the continuous-batching decode lane issues
+    /// every event-clock step.
+    pub fn decode_step(
+        (batch, seq_k): (usize, usize),
+        (d, heads): (usize, usize),
+        dtype: DType,
+    ) -> Result<TensorProgram, String> {
+        Self::causal_attention((batch, 1, seq_k), (d, heads), dtype)
+    }
+
     /// Check the program describes a well-formed iteration space.
     /// Every dimension must be positive; conv geometry must admit at
     /// least one output position and divide cleanly into groups;
@@ -252,6 +298,26 @@ impl TensorProgram {
                 }
                 Ok(())
             }
+            TensorProgram::CausalAttention { batch, seq_q, seq_k, d, heads, .. } => {
+                positive(&[
+                    ("batch", batch),
+                    ("seq_q", seq_q),
+                    ("seq_k", seq_k),
+                    ("d", d),
+                    ("heads", heads),
+                ])?;
+                if d % heads != 0 {
+                    return Err(format!("heads {} must divide model dimension {}", heads, d));
+                }
+                if seq_q > seq_k {
+                    return Err(format!(
+                        "causal seq_q {} exceeds seq_k {}: queries are the last \
+                         seq_q positions of the seq_k-entry sequence",
+                        seq_q, seq_k
+                    ));
+                }
+                Ok(())
+            }
         }
     }
 
@@ -272,6 +338,7 @@ impl TensorProgram {
             TensorProgram::BatchedGemm { dtype, .. } => dtype,
             TensorProgram::Conv2d { dtype, .. } => dtype,
             TensorProgram::Attention { dtype, .. } => dtype,
+            TensorProgram::CausalAttention { dtype, .. } => dtype,
         }
     }
 
@@ -329,6 +396,16 @@ impl TensorProgram {
                     dtype,
                 }
             }
+            TensorProgram::CausalAttention { batch, seq_q, seq_k, d, heads, dtype } => {
+                // Same batched space as the fused chain, but the two
+                // spatial axes are independent: seq_q queries against a
+                // seq_k-entry KV cache (decode: seq_q = 1).
+                IterSpace {
+                    op: OpKind::CausalAttention,
+                    dims: Tile::new(&[batch * heads, seq_q, seq_k, d / heads]),
+                    dtype,
+                }
+            }
         }
     }
 
@@ -359,6 +436,9 @@ impl TensorProgram {
             ),
             TensorProgram::Attention { batch, seq, d, heads, dtype } => {
                 format!("attn_b{}s{}d{}h{}_{}", batch, seq, d, heads, dtype)
+            }
+            TensorProgram::CausalAttention { batch, seq_q, seq_k, d, heads, dtype } => {
+                format!("cattn_b{}q{}k{}d{}h{}_{}", batch, seq_q, seq_k, d, heads, dtype)
             }
         }
     }
@@ -730,6 +810,38 @@ mod tests {
         assert_eq!(kinds[0], ('b', LoopKind::Parallel));
         assert_eq!(kinds[1], ('m', LoopKind::TemporalSpatial));
         assert_eq!(kinds[3], ('k', LoopKind::TemporalReduction));
+    }
+
+    #[test]
+    fn causal_attention_space_decouples_seq_q_and_seq_k() {
+        // Decode step: one query against a 477-entry KV cache.
+        let p = TensorProgram::decode_step((4, 477), (768, 12), DType::F16).unwrap();
+        let s = p.space();
+        assert_eq!(s.op, OpKind::CausalAttention);
+        assert_eq!(s.dims, Tile::new(&[4 * 12, 1, 477, 64]));
+        // seq_q = 1 masks nothing: full fused-chain flops over the row.
+        assert_eq!(p.flops(), 4.0 * 48.0 * 477.0 * 64.0);
+        assert_eq!(p.id(), "cattn_b4q1k477d768h12_f16");
+        // Square causal prefill counts only the lower triangle.
+        let pre = TensorProgram::causal_attention((1, 64, 64, ), (768, 12), DType::F16)
+            .unwrap();
+        assert_eq!(pre.flops(), 4.0 * 12.0 * (64.0 * 65.0 / 2.0) * 64.0);
+        let full = TensorProgram::attention((1, 64), (768, 12), DType::F16).unwrap();
+        assert!(pre.flops() < full.flops());
+    }
+
+    #[test]
+    fn invalid_causal_attention_geometry_is_a_construction_error() {
+        // Queries past the causal frontier.
+        assert!(TensorProgram::causal_attention((1, 65, 64), (768, 12), DType::F32).is_err());
+        // Heads not dividing d, zero dims.
+        assert!(TensorProgram::causal_attention((1, 1, 64), (768, 7), DType::F32).is_err());
+        assert!(TensorProgram::causal_attention((0, 1, 64), (768, 12), DType::F32).is_err());
+        assert!(TensorProgram::causal_attention((1, 0, 64), (768, 12), DType::F32).is_err());
+        assert!(TensorProgram::causal_attention((1, 1, 0), (768, 12), DType::F32).is_err());
+        // Decode at the horizon edge and non-power-of-two are valid.
+        assert!(TensorProgram::decode_step((1, 1), (768, 12), DType::F32).is_ok());
+        assert!(TensorProgram::decode_step((3, 333), (1024, 16), DType::F32).is_ok());
     }
 
     #[test]

@@ -227,15 +227,17 @@ pub enum OpKind {
     Conv2d,
     GroupedConv2d,
     FusedAttention,
+    CausalAttention,
 }
 
 impl OpKind {
-    pub const ALL: [OpKind; 5] = [
+    pub const ALL: [OpKind; 6] = [
         OpKind::Gemm,
         OpKind::BatchedGemm,
         OpKind::Conv2d,
         OpKind::GroupedConv2d,
         OpKind::FusedAttention,
+        OpKind::CausalAttention,
     ];
 
     pub fn spec(self) -> &'static dyn OpSpec {
@@ -245,6 +247,7 @@ impl OpKind {
             OpKind::Conv2d => &Conv2d,
             OpKind::GroupedConv2d => &GroupedConv2d,
             OpKind::FusedAttention => &FusedAttention,
+            OpKind::CausalAttention => &CausalAttention,
         }
     }
 
@@ -734,6 +737,124 @@ impl OpSpec for FusedAttention {
     }
 }
 
+/// Attended (query, key) pairs of a causal tile whose queries are the
+/// LAST `m` positions of an `n`-key causal sequence (the decode /
+/// prefill-with-cache alignment): query row `i` attends keys
+/// `0 ..= n - m + i`, so the count is `m·n − t(t−1)/2` with
+/// `t = min(m, n)`. Exact for the semantic case `m <= n`
+/// (`m = 1` → `n` pairs, `m = n` → `n(n+1)/2`); clamped by `min` for
+/// padded tiles with `m > n` so the count stays monotone in BOTH dims
+/// (the candgen/auditor monotonicity contract) and never exceeds
+/// `m·n`.
+fn causal_pairs(m: usize, n: usize) -> f64 {
+    let t = m.min(n) as f64;
+    m as f64 * n as f64 - t * (t - 1.0) / 2.0
+}
+
+/// Causal-masked attention chain with a resident KV cache — the
+/// autoregressive serving variant of [`FusedAttention`]. The iteration
+/// space is the same (b, m, n, k) = (batch·heads, seq_q, seq_k,
+/// head_dim) batched-GEMM space, but `seq_q != seq_k` is the norm:
+/// decode is seq_q = 1 against a seq_k that grows by one per token,
+/// prefill is seq_q = seq_k with the triangular mask. Queries align to
+/// the LAST seq_q positions of the key sequence.
+///
+/// What is causal/KV-cache-specific relative to [`FusedAttention`]:
+///
+/// * `flops` and `load_bytes_per_step` count only the lower-triangular
+///   (attended) work — [`causal_pairs`] of the m·n rectangle — so the
+///   cost model prices a decode step at O(n·k) per head, not O(m·n·k)
+///   of the unmasked rectangle;
+/// * `working_set` models the K/V slabs as RESIDENT cache slabs
+///   streamed through the score contraction's staging window rather
+///   than a second co-staged V operand: the fusion extras are only the
+///   f32 context accumulator and the per-row softmax stats;
+/// * `min_bytes` is unchanged in shape (Q read once, the K/V cache
+///   slabs read once — the last query attends every key — and the
+///   context written once; no P round-trip).
+///
+/// The contraction blocks remain cost-symmetric batched-GEMM blocks
+/// (`chain_kernels() == 2`, `measurement_op() == BatchedGemm`), so a
+/// causal space with no native library serves through the batched-GEMM
+/// alias chain exactly like [`FusedAttention`].
+pub struct CausalAttention;
+
+impl OpSpec for CausalAttention {
+    fn name(&self) -> &'static str {
+        "causal_attention"
+    }
+    fn kind(&self) -> OpKind {
+        OpKind::CausalAttention
+    }
+    fn axes(&self) -> &'static [Axis] {
+        const AXES: [Axis; 4] = [
+            ax('b', AxisRole::Batch),
+            ax('m', AxisRole::Spatial),
+            ax('n', AxisRole::Spatial),
+            ax('k', AxisRole::Reduction),
+        ];
+        &AXES
+    }
+    fn flops(&self, iter: Tile) -> f64 {
+        // Both contractions, masked: only attended (q, key) pairs do
+        // multiply-accumulate work in score AND context.
+        let (b, m, n, k) = (iter[0], iter[1], iter[2], iter[3]);
+        4.0 * b as f64 * causal_pairs(m, n) * k as f64
+    }
+    fn working_set(&self, tile: Tile, in_bytes: usize) -> u64 {
+        let (b, m, k) = (tile[0], tile[1], tile[3]);
+        // Q slab + K slab + resident f32 score tile (the BatchedGemm
+        // set; the K slab term IS the KV-cache staging window — V
+        // streams through the same window for the context contraction,
+        // so no second co-resident slab) plus the f32 context
+        // accumulator and per-row softmax stats.
+        BatchedGemm.working_set(tile, in_bytes) + (b * (m * k * 4 + m * 8)) as u64
+    }
+    fn min_bytes(&self, iter: Tile, dtype: DType) -> f64 {
+        let (b, m, n, k) = (iter[0], iter[1], iter[2], iter[3]);
+        let e = dtype.bytes() as f64;
+        // Q read once; the resident K and V cache slabs read once each
+        // (the last query attends every key, so the full n·k slabs are
+        // a true lower bound); context written once (f32).
+        b as f64 * ((m * k) as f64 * e + (n * k) as f64 * 2.0 * e + (m * k) as f64 * 4.0)
+    }
+    fn load_bytes_per_step(&self, parent: Tile, child: Tile, dtype: DType) -> f64 {
+        let (b, m, n, ck) = (parent[0], parent[1], parent[2], child[3]);
+        // Masked traffic: per head-dim step the Q slab is full, but the
+        // K and V cache slabs are only streamed over the attended
+        // columns — on average causal_pairs/m keys per query row.
+        let n_eff = causal_pairs(m, n) / m as f64;
+        b as f64 * ((m * ck) as f64 + 2.0 * n_eff * ck as f64) * dtype.bytes() as f64
+    }
+    fn store_bytes(&self, parent: Tile) -> f64 {
+        // The context output (b, m, k) in f32 — identical to the
+        // unmasked chain (masking thins reads, not the output).
+        (parent[0] * parent[1] * parent[3] * 4) as f64
+    }
+    fn artifact_name(&self, l1: Tile, dtype: DType) -> String {
+        // Same convention as FusedAttention: the chain's contraction
+        // blocks ARE batched-GEMM blocks.
+        BatchedGemm.artifact_name(l1, dtype)
+    }
+    fn measurement_op(&self) -> OpKind {
+        OpKind::BatchedGemm
+    }
+    fn chain_kernels(&self) -> usize {
+        2
+    }
+    fn softmax_tile(&self, tile: Tile) -> Option<(usize, usize)> {
+        // The resident score tile shape is the full (b·m, n) rectangle
+        // — masked lanes are normalized as -inf, not skipped, so the
+        // epilogue measurement prices the same tile as the unmasked
+        // chain.
+        Some((tile[0] * tile[1], tile[2]))
+    }
+    fn write_axes(&self) -> Vec<(usize, usize)> {
+        // Context output (b, m, head_dim), exactly like FusedAttention.
+        vec![(0, 0), (1, 1), (3, 2)]
+    }
+}
+
 // ---------------------------------------------------------------------------
 // IterSpace
 // ---------------------------------------------------------------------------
@@ -785,7 +906,10 @@ impl IterSpace {
             // batched GEMM as one tall GEMM, a grouped conv as its
             // block-diagonal GEMM flattened along the group axis, and
             // an attention chain as its flattened score contraction.
-            OpKind::BatchedGemm | OpKind::GroupedConv2d | OpKind::FusedAttention => {
+            OpKind::BatchedGemm
+            | OpKind::GroupedConv2d
+            | OpKind::FusedAttention
+            | OpKind::CausalAttention => {
                 Contraction {
                     m: self.dims[0] * self.dims[1],
                     n: self.dims[2],
@@ -1002,6 +1126,83 @@ mod tests {
         let extras = b * (n * k * e + m * k * 4 + m * 8);
         assert_eq!(FusedAttention.working_set(t, 2), bgemm + extras);
         assert!(FusedAttention.working_set(t, 2) > BatchedGemm.working_set(t, 2));
+    }
+
+    #[test]
+    fn causal_pairs_counts_the_attended_triangle() {
+        // Decode: one query attends every key.
+        assert_eq!(causal_pairs(1, 100), 100.0);
+        // Square prefill: the lower triangle incl. the diagonal.
+        assert_eq!(causal_pairs(8, 8), (8 * 9 / 2) as f64);
+        // Chunked prefill (m < n): full rows over the cached prefix.
+        assert_eq!(causal_pairs(4, 10), (4 * 10 - 6) as f64);
+        // Padded tile with m > n stays clamped and monotone.
+        assert_eq!(causal_pairs(10, 4), (10 * 4 - 6) as f64);
+        for m in 1..20 {
+            for n in 1..20 {
+                assert!(causal_pairs(m, n) <= (m * n) as f64);
+                assert!(causal_pairs(m + 1, n) >= causal_pairs(m, n));
+                assert!(causal_pairs(m, n + 1) >= causal_pairs(m, n));
+            }
+        }
+    }
+
+    #[test]
+    fn causal_attention_masks_flops_and_traffic() {
+        // Decode tile: seq_q = 1 — the mask is a no-op (one query sees
+        // every key), so the masked chain prices exactly like the
+        // fused chain minus the duplicate V staging slab.
+        let dec = Tile::new(&[12, 1, 256, 64]);
+        assert_eq!(CausalAttention.flops(dec), FusedAttention.flops(dec));
+        // Square prefill tile: roughly half the rectangle's work.
+        let pre = Tile::new(&[12, 256, 256, 64]);
+        let frac = causal_pairs(256, 256) / (256.0 * 256.0);
+        assert_eq!(CausalAttention.flops(pre), FusedAttention.flops(pre) * frac);
+        assert!(CausalAttention.flops(pre) < FusedAttention.flops(pre));
+        assert!(
+            CausalAttention.load_bytes_per_step(pre, Tile::new(&[1, 64, 64, 32]), DType::F16)
+                < FusedAttention.load_bytes_per_step(pre, Tile::new(&[1, 64, 64, 32]), DType::F16)
+        );
+        // The output and the Q/K/V once-through lower bound are NOT
+        // masked: the last query attends every cached key.
+        assert_eq!(
+            CausalAttention.min_bytes(pre, DType::F16),
+            FusedAttention.min_bytes(pre, DType::F16)
+        );
+        assert_eq!(CausalAttention.store_bytes(pre), FusedAttention.store_bytes(pre));
+    }
+
+    #[test]
+    fn causal_attention_kv_cache_working_set_drops_the_v_slab() {
+        let t = Tile::new(&[2, 64, 48, 32]);
+        let (b, m, n, k, e) = (2u64, 64u64, 48u64, 32u64, 2u64);
+        // Q + K-staging-window + score (the bgemm set) + ctx acc + row
+        // stats; no second co-resident V slab (V streams through the
+        // K window from the resident cache).
+        let bgemm = b * (m * k * e + k * n * e + m * n * 4);
+        let extras = b * (m * k * 4 + m * 8);
+        assert_eq!(CausalAttention.working_set(t, 2), bgemm + extras);
+        assert!(CausalAttention.working_set(t, 2) < FusedAttention.working_set(t, 2));
+        // Monotone in every dim (candgen/auditor contract).
+        for axis in 0..4 {
+            let mut bigger = t;
+            bigger[axis] *= 2;
+            assert!(CausalAttention.working_set(bigger, 2) > CausalAttention.working_set(t, 2));
+        }
+    }
+
+    #[test]
+    fn causal_attention_aliases_batched_gemm_like_the_fused_chain() {
+        let t = Tile::new(&[2, 64, 64, 32]);
+        assert_eq!(CausalAttention.measurement_op(), OpKind::BatchedGemm);
+        assert_eq!(CausalAttention.chain_kernels(), 2);
+        assert_eq!(
+            CausalAttention.artifact_name(t, DType::F16),
+            BatchedGemm.artifact_name(t, DType::F16)
+        );
+        assert_eq!(CausalAttention.softmax_tile(t), Some((2 * 64, 64)));
+        assert_eq!(CausalAttention.write_axes(), FusedAttention.write_axes());
+        assert_eq!(OpKind::parse("causal_attention"), Some(OpKind::CausalAttention));
     }
 
     #[test]

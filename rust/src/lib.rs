@@ -89,10 +89,23 @@
 //! cache coherence with library reload; the `serve` bench and `vortex
 //! serve --mixed [--dispatch]` exercise it end to end.
 //!
+//! Autoregressive decode gets its own continuous-batching lane
+//! ([`serve::LaneClass::Decode`]): sequences of single-token
+//! `CausalAttention` steps share a slot pool, every merged step is
+//! answered from the dispatch table (100% warm-start in-horizon), and
+//! the steady-state path performs zero selector scans and zero
+//! transient allocations — `vortex bench decode` regenerates
+//! `BENCH_decode.json` and CI gates the invariant. [`runtime::KvCache`]
+//! and [`runtime::causal_decode_dynamic`] execute decode steps against
+//! pointer-stable K/V cache slabs through transpose views (no per-step
+//! re-materialization). The "Decode serving" section of
+//! [`docs/ARCHITECTURE.md`](../../../docs/ARCHITECTURE.md) documents
+//! the lane, the KV-cache-aware cost terms and the zero-scan argument.
+//!
 //! At deployment scale the serving layer shards across a **fleet**
 //! ([`serve::serve_fleet`]): deterministic routing assigns every
-//! request to one of N replicas (each holding a clone of the dispatch
-//! table and its own cache shards) as a pure pre-pass, and the
+//! request to one of N replicas (sharing one `Arc`-held dispatch
+//! table, each owning its own cache shards) as a pure pre-pass, and the
 //! independent (replica, lane) units execute either sequentially or on
 //! a work-stealing thread pool with *bit-identical* results — the
 //! determinism oracle in `tests/fleet_oracle.rs` checks selections,

@@ -45,12 +45,20 @@ USAGE:
                   [--testbed ...] [--dtype ...] [--mode adaptive|cuda|tensor]
   vortex run      --m M --n N --k K [--artifacts DIR] [--verify]
   vortex serve    [--requests N] [--mean-gap-us U] [--max-batch B]
-                  [--mixed] [--no-cache] [--dispatch]
+                  [--mixed] [--decode] [--mean-tokens T]
+                  [--no-cache] [--dispatch]
                   [--replicas N] [--workers K] [--routing hash|load]
                   [--slo-ms D] [--slo-policy serve|drop|degrade]
                   [--trace [PATH]] [--metrics] [--metrics-json]
                   (--mixed: multi-op request lanes + bucketed plan cache
-                   over a BERT-token + vision-burst trace; --no-cache
+                   over a BERT-token + vision-burst trace; --decode: an
+                   autoregressive decode trace (geometric output
+                   lengths, mean --mean-tokens) through the
+                   continuous-batching lane — one causal decode step
+                   per token against a growing KV depth, with per-STEP
+                   tri-state dispatch accounting printed (with
+                   --dispatch the in-horizon trace is 100% table hits);
+                   --no-cache
                    disables plan memoization; --dispatch answers
                    in-horizon shapes from the compile-time table and
                    demotes the cache to the beyond-horizon fallback.
@@ -84,7 +92,7 @@ USAGE:
                    serve or bench, run the trace-schema audit, and
                    print a per-track/per-span-name time breakdown.
                    Exits 1 on parse or schema errors.)
-  vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|ops|serve|all>
+  vortex bench    <fig3|fig5|table5|table6|fig13|offline|fig14|fig15|table7|fig16|ablation|ops|serve|decode|all>
                   [--out results/] [--seed S] [--full]
   vortex info
 ";
@@ -311,13 +319,14 @@ fn cmd_select(args: &Args) {
         // --b is the batch count (batched GEMM), group count (grouped
         // conv) or head-group count (attention) — each leads the
         // rank-4 iteration space.
-        OpKind::BatchedGemm | OpKind::GroupedConv2d | OpKind::FusedAttention => {
-            vortex::ir::IterSpace {
-                op,
-                dims: vortex::ir::Tile::new(&[args.get_usize("b", 8), m, n, k]),
-                dtype,
-            }
-        }
+        OpKind::BatchedGemm
+        | OpKind::GroupedConv2d
+        | OpKind::FusedAttention
+        | OpKind::CausalAttention => vortex::ir::IterSpace {
+            op,
+            dims: vortex::ir::Tile::new(&[args.get_usize("b", 8), m, n, k]),
+            dtype,
+        },
         _ => vortex::ir::IterSpace { op, dims: vortex::ir::Tile::new(&[m, n, k]), dtype },
     };
     let mut prof = SimProfiler::new(Simulator::new(hw.clone(), seed));
@@ -422,7 +431,11 @@ fn cmd_serve(args: &Args) {
     let observed = trace_path(args, "serve_trace.json").is_some()
         || args.has_flag("metrics")
         || args.has_flag("metrics-json");
-    if args.has_flag("mixed") || args.get("replicas").is_some() || observed {
+    if args.has_flag("mixed")
+        || args.has_flag("decode")
+        || args.get("replicas").is_some()
+        || observed
+    {
         // Only an EXPLICIT --max-batch overrides the scenario's
         // per-lane caps (the legacy default of 8 is not implied).
         let max_batch = args.get("max-batch").and_then(|v| v.parse().ok());
@@ -477,7 +490,14 @@ fn cmd_serve_mixed(
     };
     let hw = presets::a100();
     let selector = scenario::demo_selector(seed);
-    let trace = scenario::mixed_trace(n_req, gap, seed, DType::F32);
+    // --decode swaps the workload: autoregressive sequences through
+    // the continuous-batching lane, one causal step per token.
+    let trace = if args.has_flag("decode") {
+        let mean_tokens = args.get_usize("mean-tokens", 24);
+        scenario::decode_trace(n_req, gap, mean_tokens, seed, DType::F32)
+    } else {
+        scenario::mixed_trace(n_req, gap, seed, DType::F32)
+    };
     let trace_out = trace_path(args, "serve_trace.json");
     let mut serve_cfg = if cache {
         scenario::serving_config()
@@ -608,6 +628,18 @@ fn cmd_serve_mixed(
         );
     } else {
         println!("plan cache disabled (--no-cache): every batch ran fresh selection");
+    }
+    if args.has_flag("decode") {
+        // Per-STEP accounting: one count per event-clock decode step —
+        // the granularity the zero-scan claim is made at.
+        let bd = stats.batch_dispatch();
+        println!(
+            "decode steps: {} table / {} cache / {} fresh (per-step warm-start rate {:.1}%)",
+            bd.table,
+            bd.cache,
+            bd.fresh,
+            100.0 * bd.warm_start_rate()
+        );
     }
     if let Some(path) = &trace_out {
         write_trace(path, stats.trace.as_ref());

@@ -1403,6 +1403,216 @@ pub fn attention_dynamic(
     engine.bgemm_dynamic(&p_srcs, &v_srcs, (seq, hd, seq), block4, dtype)
 }
 
+/// Append-only KV cache for autoregressive decode: per head group, a
+/// preallocated (capacity x head-dim) K slab and a matching V slab.
+/// [`KvCache::append`] writes one token's K/V rows into the next
+/// prefix slot and NEVER reallocates — the slabs are sized once at
+/// construction, so the steady-state decode path stays transient-
+/// allocation-free and every step's operands are exact prefix slices
+/// of stable storage. This is the KV-append operand source: stage 1
+/// of a decode step reads the K prefix through a transposed
+/// [`OperandSource`] view and stage 2 reads the V prefix dense — K
+/// and V are never re-materialized per step.
+pub struct KvCache {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    groups: usize,
+    head_dim: usize,
+    capacity: usize,
+    len: usize,
+}
+
+impl KvCache {
+    /// Allocate slabs for `groups` head groups of `capacity` tokens
+    /// each. This is the ONLY allocation the cache ever performs.
+    pub fn new(groups: usize, capacity: usize, head_dim: usize) -> Self {
+        assert!(groups > 0 && capacity > 0 && head_dim > 0, "KvCache: empty geometry");
+        KvCache {
+            k: vec![0f32; groups * capacity * head_dim],
+            v: vec![0f32; groups * capacity * head_dim],
+            groups,
+            head_dim,
+            capacity,
+            len: 0,
+        }
+    }
+
+    /// Tokens appended so far (the decode step's `seq_k`).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Append one token: `k_rows` / `v_rows` are (groups x head-dim)
+    /// row-major — one new K/V row per head group. Panics past
+    /// capacity; never grows the slabs.
+    pub fn append(&mut self, k_rows: &[f32], v_rows: &[f32]) {
+        assert!(self.len < self.capacity, "KvCache: append past capacity {}", self.capacity);
+        let hd = self.head_dim;
+        assert_eq!(k_rows.len(), self.groups * hd, "KvCache: k rows");
+        assert_eq!(v_rows.len(), self.groups * hd, "KvCache: v rows");
+        for g in 0..self.groups {
+            let dst = (g * self.capacity + self.len) * hd;
+            self.k[dst..dst + hd].copy_from_slice(&k_rows[g * hd..(g + 1) * hd]);
+            self.v[dst..dst + hd].copy_from_slice(&v_rows[g * hd..(g + 1) * hd]);
+        }
+        self.len += 1;
+    }
+
+    /// Group `g`'s K prefix: the first `len()` rows, contiguous
+    /// (len x head-dim) row-major — an exact slice of stable storage.
+    pub fn k_prefix(&self, g: usize) -> &[f32] {
+        let base = g * self.capacity * self.head_dim;
+        &self.k[base..base + self.len * self.head_dim]
+    }
+
+    /// Group `g`'s V prefix, same layout as [`KvCache::k_prefix`].
+    pub fn v_prefix(&self, g: usize) -> &[f32] {
+        let base = g * self.capacity * self.head_dim;
+        &self.v[base..base + self.len * self.head_dim]
+    }
+}
+
+/// One autoregressive decode step on the real engine: `q` holds one
+/// query row per head group and the K/V prefixes live in an
+/// append-only [`KvCache`]. The single query sits at the LAST causal
+/// position, so it attends every cached key — the causal mask is the
+/// prefix itself, and no score is ever computed just to be masked out
+/// (the zero-waste formulation the [`crate::ir::OpKind::CausalAttention`]
+/// strategy space prices). Runs as two [`RealEngine::bgemm_dynamic`]
+/// calls over all head groups: stage 1 serves the K prefix through a
+/// transposed view over the cache slab and stage 2 serves the V
+/// prefix dense — nothing is copied or re-materialized per step.
+///
+/// `q` is (batch·heads, head-dim) row-major; returns the context rows
+/// in the same layout. The block comes from the op-aware selector:
+/// the decode-step space goes straight in and resolves against the
+/// batched-GEMM measurement alias (no decode-specific side path).
+pub fn causal_decode_dynamic(
+    engine: &RealEngine,
+    selector: &crate::coordinator::Selector,
+    q: &[f32],
+    cache: &KvCache,
+    (batch, heads): (usize, usize),
+    dtype: DType,
+) -> Result<Vec<f32>> {
+    let hd = cache.head_dim();
+    let seq_k = cache.len();
+    let program = crate::ir::TensorProgram::decode_step((batch, seq_k), (hd * heads, heads), dtype)
+        .map_err(|e| anyhow!("causal_decode_dynamic: {}", e))?;
+    let groups = batch * heads;
+    if cache.groups() != groups {
+        bail!("causal_decode_dynamic: cache has {} groups, want {}", cache.groups(), groups);
+    }
+    if q.len() != groups * hd {
+        bail!("causal_decode_dynamic: q has {} elems, want {}", q.len(), groups * hd);
+    }
+    let space = program.space();
+    let sel = selector
+        .select(space, crate::coordinator::HwMode::Adaptive)
+        .ok_or_else(|| anyhow!("no kernel for decode space {:?}", space))?;
+    let kern = selector.kernel(&sel);
+    let block4 = match kern.l1.rank() {
+        3 => {
+            let b = kern.l1.to3();
+            [1, b[0], b[1], b[2]]
+        }
+        4 => kern.l1.to4(),
+        r => bail!("unsupported decode kernel rank {}", r),
+    };
+    // Stage 1: score row = q · K_prefixᵀ, the prefix served through a
+    // transposed view over the cache slab — no transpose copy, no
+    // masked-out work.
+    let q_srcs: Vec<OperandSource> =
+        (0..groups).map(|g| OperandSource::dense(&q[g * hd..(g + 1) * hd], 1, hd)).collect();
+    let kt_srcs: Vec<OperandSource> =
+        (0..groups).map(|g| OperandSource::transpose(cache.k_prefix(g), hd, seq_k)).collect();
+    let mut scores = engine.bgemm_dynamic(&q_srcs, &kt_srcs, (1, seq_k, hd), block4, dtype)?;
+    for g in 0..groups {
+        streaming_softmax_rows(&mut scores[g * seq_k..(g + 1) * seq_k], 1, seq_k);
+    }
+    // Stage 2: ctx = p · V_prefix over the dense prefix slice.
+    let p_srcs: Vec<OperandSource> = (0..groups)
+        .map(|g| OperandSource::dense(&scores[g * seq_k..(g + 1) * seq_k], 1, seq_k))
+        .collect();
+    let v_srcs: Vec<OperandSource> =
+        (0..groups).map(|g| OperandSource::dense(cache.v_prefix(g), seq_k, hd)).collect();
+    engine.bgemm_dynamic(&p_srcs, &v_srcs, (1, hd, seq_k), block4, dtype)
+}
+
+/// Direct reference causal attention for verification: per head
+/// group, query row `i` sits at absolute position `seq_k - seq_q + i`
+/// and attends keys `0..=seq_k - seq_q + i` — naive two-pass-stable
+/// softmax over the visible prefix only, then the context
+/// accumulation. With `seq_q == seq_k` this is full causal prefill;
+/// with `seq_q == 1` it is the decode step a
+/// [`causal_decode_dynamic`] call performs against the KV cache.
+///
+/// `q` is (batch·heads, seq_q, d/heads) row-major, `k` / `v` are
+/// (batch·heads, seq_k, d/heads); returns (batch·heads, seq_q,
+/// d/heads). Panics on invalid causal geometry (validated where every
+/// causal program is — at program construction).
+pub fn causal_host_ref(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    (batch, seq_q, seq_k): (usize, usize, usize),
+    (d, heads): (usize, usize),
+) -> Vec<f32> {
+    crate::ir::TensorProgram::causal_attention((batch, seq_q, seq_k), (d, heads), DType::F32)
+        .expect("causal_host_ref: invalid causal attention geometry");
+    let hd = d / heads;
+    let groups = batch * heads;
+    let off = seq_k - seq_q;
+    let mut out = vec![0f32; groups * seq_q * hd];
+    let mut scores = vec![0f32; seq_k];
+    for g in 0..groups {
+        let qb = g * seq_q * hd;
+        let kb = g * seq_k * hd;
+        for i in 0..seq_q {
+            let lim = off + i + 1; // keys 0..lim-1 are causally visible
+            let mut max = f32::NEG_INFINITY;
+            for (j, s) in scores[..lim].iter_mut().enumerate() {
+                let mut acc = 0f32;
+                for c in 0..hd {
+                    acc += q[qb + i * hd + c] * k[kb + j * hd + c];
+                }
+                *s = acc;
+                max = max.max(acc);
+            }
+            let mut sum = 0f32;
+            for s in scores[..lim].iter_mut() {
+                *s = (*s - max).exp();
+                sum += *s;
+            }
+            let inv = 1.0 / sum;
+            for c in 0..hd {
+                let mut acc = 0f32;
+                for (j, &p) in scores[..lim].iter().enumerate() {
+                    acc += p * v[kb + j * hd + c];
+                }
+                out[qb + i * hd + c] = acc * inv;
+            }
+        }
+    }
+    out
+}
+
 /// Direct reference attention for verification: per head group, naive
 /// two-pass-stable softmax over explicitly accumulated score rows,
 /// then the context accumulation — no GEMM helper involved, so it
@@ -2206,6 +2416,162 @@ mod tests {
         assert_same(&got, &want, "provider-attention-vs-ref").unwrap();
     }
 
+    // -- KV-cache decode ----------------------------------------------------
+
+    /// One decode step through providers: dense q rows, transposed
+    /// K-prefix views over the cache slabs, streaming softmax, dense
+    /// P·V over the V prefixes — the exact compute
+    /// `causal_decode_dynamic` performs, minus the device.
+    fn decode_via_sources(
+        q: &[f32],
+        cache: &KvCache,
+        block: [usize; 4],
+        threads: usize,
+    ) -> Vec<f32> {
+        let (groups, hd, len) = (cache.groups(), cache.head_dim(), cache.len());
+        let q_srcs: Vec<OperandSource> =
+            (0..groups).map(|g| OperandSource::dense(&q[g * hd..(g + 1) * hd], 1, hd)).collect();
+        let kt_srcs: Vec<OperandSource> =
+            (0..groups).map(|g| OperandSource::transpose(cache.k_prefix(g), hd, len)).collect();
+        let mut scores = bgemm_tiled_host(&q_srcs, &kt_srcs, block, threads);
+        for g in 0..groups {
+            streaming_softmax_rows(&mut scores[g * len..(g + 1) * len], 1, len);
+        }
+        let p_srcs: Vec<OperandSource> = (0..groups)
+            .map(|g| OperandSource::dense(&scores[g * len..(g + 1) * len], 1, len))
+            .collect();
+        let v_srcs: Vec<OperandSource> =
+            (0..groups).map(|g| OperandSource::dense(cache.v_prefix(g), len, hd)).collect();
+        bgemm_tiled_host(&p_srcs, &v_srcs, block, threads)
+    }
+
+    #[test]
+    fn prop_kv_cache_decode_matches_causal_reference_tail() {
+        // Tentpole: across random (batch, heads, head-dim) and a
+        // GROWING seq_k, every decode step through the append-only
+        // cache (transposed K-prefix view + dense V prefix) equals the
+        // LAST row of the full causal-prefill reference over the
+        // entire history — the mask-as-prefix formulation is exact at
+        // every cache length, including length 1 and lengths that
+        // leave partial tiles on the seq_k axis.
+        forall(
+            "kv-decode-equals-causal-tail",
+            30,
+            0xDECD,
+            |r: &mut Rng, size| {
+                let batch = r.usize(1, 2);
+                let heads = r.usize(1, 3);
+                let hd = r.usize(1, 6);
+                let steps = r.usize(1, 3 + size / 8);
+                let block = [r.usize(1, 3), r.usize(1, 3), r.usize(1, 5), r.usize(1, 4)];
+                (batch, heads, hd, steps, block)
+            },
+            |&(batch, heads, hd, steps, block)| {
+                let groups = batch * heads;
+                let mut rng = Rng::new((groups * 131 + hd * 7 + steps) as u64);
+                let mut cache = KvCache::new(groups, steps, hd);
+                // Per-group histories in the (groups, t, hd) reference
+                // layout.
+                let mut qh: Vec<Vec<f32>> = vec![Vec::new(); groups];
+                let mut kh: Vec<Vec<f32>> = vec![Vec::new(); groups];
+                let mut vh: Vec<Vec<f32>> = vec![Vec::new(); groups];
+                for t in 0..steps {
+                    let q = rng.normal_f32_vec(groups * hd);
+                    let kr = rng.normal_f32_vec(groups * hd);
+                    let vr = rng.normal_f32_vec(groups * hd);
+                    cache.append(&kr, &vr);
+                    for g in 0..groups {
+                        qh[g].extend_from_slice(&q[g * hd..(g + 1) * hd]);
+                        kh[g].extend_from_slice(&kr[g * hd..(g + 1) * hd]);
+                        vh[g].extend_from_slice(&vr[g * hd..(g + 1) * hd]);
+                    }
+                    let got = decode_via_sources(&q, &cache, block, 1);
+                    let (qf, kf, vf) = (qh.concat(), kh.concat(), vh.concat());
+                    let full = causal_host_ref(
+                        &qf,
+                        &kf,
+                        &vf,
+                        (batch, t + 1, t + 1),
+                        (heads * hd, heads),
+                    );
+                    let mut want = vec![0f32; groups * hd];
+                    for g in 0..groups {
+                        let tail = (g * (t + 1) + t) * hd;
+                        want[g * hd..(g + 1) * hd].copy_from_slice(&full[tail..tail + hd]);
+                    }
+                    assert_same(&got, &want, &format!("decode-vs-causal-tail step {}", t))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn kv_cache_slabs_are_stable_and_append_only() {
+        let (groups, cap, hd) = (3, 5, 4);
+        let mut cache = KvCache::new(groups, cap, hd);
+        assert!(cache.is_empty());
+        assert_eq!(cache.capacity(), cap);
+        let slab = cache.k_prefix(0).as_ptr();
+        let mut rng = Rng::new(0xCAFE);
+        let mut rows = Vec::new();
+        for _ in 0..cap {
+            let kr = rng.normal_f32_vec(groups * hd);
+            let vr = rng.normal_f32_vec(groups * hd);
+            cache.append(&kr, &vr);
+            rows.push((kr, vr));
+        }
+        assert_eq!(cache.len(), cap);
+        // The slab never moved: append writes in place into storage
+        // sized once at construction — the zero-transient-allocation
+        // steady-state claim, observable as pointer stability.
+        assert_eq!(cache.k_prefix(0).as_ptr(), slab);
+        // Prefixes are exact row-major per-group histories.
+        for g in 0..groups {
+            for (t, (kr, vr)) in rows.iter().enumerate() {
+                assert_eq!(&cache.k_prefix(g)[t * hd..(t + 1) * hd], &kr[g * hd..(g + 1) * hd]);
+                assert_eq!(&cache.v_prefix(g)[t * hd..(t + 1) * hd], &vr[g * hd..(g + 1) * hd]);
+            }
+        }
+        // Past capacity: refuse, never grow.
+        let kr = rng.normal_f32_vec(groups * hd);
+        let vr = rng.normal_f32_vec(groups * hd);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.append(&kr, &vr)
+        }));
+        assert!(r.is_err(), "append past capacity must panic");
+    }
+
+    #[test]
+    fn causal_ref_known_values_and_suffix_semantics() {
+        let (seq, hd) = (4usize, 2usize);
+        let mut rng = Rng::new(0xCA05);
+        let q = rng.normal_f32_vec(seq * hd);
+        let k = rng.normal_f32_vec(seq * hd);
+        let v = rng.normal_f32_vec(seq * hd);
+        // Full prefill, row 0 attends only key 0: softmax over one
+        // logit is identity, so context row 0 is exactly V row 0.
+        let full = causal_host_ref(&q, &k, &v, (1, seq, seq), (hd, 1));
+        assert_eq!(&full[..hd], &v[..hd]);
+        // The last row attends everything — identical to the unmasked
+        // reference's last row.
+        let un = attention_host_ref(&q, &k, &v, (1, seq), (hd, 1));
+        for c in 0..hd {
+            let (a, b) = (full[(seq - 1) * hd + c], un[(seq - 1) * hd + c]);
+            assert!((a - b).abs() < 1e-5, "tail col {}: {} vs {}", c, a, b);
+        }
+        // seq_q < seq_k: queries are the LAST seq_q positions, so a
+        // suffix call reproduces the matching rows of the full prefill
+        // bit for bit (same visible-prefix arithmetic).
+        let tail = causal_host_ref(&q[2 * hd..], &k, &v, (1, seq - 2, seq), (hd, 1));
+        assert_eq!(tail, full[2 * hd..].to_vec());
+        // Geometry the program layer rejects never runs.
+        let r = std::panic::catch_unwind(|| {
+            causal_host_ref(&q, &k, &v, (1, seq, seq - 1), (hd, 1))
+        });
+        assert!(r.is_err(), "seq_q > seq_k must not run");
+    }
+
     #[test]
     fn run_cells_preserves_order_and_propagates_errors() {
         let vals = run_cells(10, 3, |i| Ok(i * 2)).unwrap();
@@ -2303,6 +2669,21 @@ mod tests {
         #[test]
         fn tile_scratch_is_exactly_three_blocks() {
             assert_eq!(tile_scratch_elems([2, 3, 4]), 2 * 4 + 4 * 3 + 2 * 3);
+        }
+
+        #[test]
+        fn kv_prefix_transpose_view_reads_only_the_prefix() {
+            // A 2-token prefix of a capacity-3 slab served through the
+            // decode stage-1 transposed view: in-bounds reads only,
+            // zero fill past the prefix edge.
+            let mut cache = KvCache::new(1, 3, 2);
+            cache.append(&[1.0, 2.0], &[5.0, 6.0]);
+            cache.append(&[3.0, 4.0], &[7.0, 8.0]);
+            let src = OperandSource::transpose(cache.k_prefix(0), 2, 2);
+            assert_eq!(src.materialize(), vec![1.0, 3.0, 2.0, 4.0]);
+            let mut dst = vec![9.0f32; 4];
+            src.gather_block(&mut dst, 1, 1, 2, 2);
+            assert_eq!(dst, vec![4.0, 0.0, 0.0, 0.0]);
         }
     }
 }

@@ -20,6 +20,17 @@
 //!   answers in-horizon batches at request time with ZERO warm-up —
 //!   the shape→kernel decision was enumerated at compile time. Plans
 //!   are provably identical to fresh selection.
+//! * **Decode lane** ([`LaneClass::Decode`]): autoregressive
+//!   causal-attention steps ([`TensorProgram::CausalAttention`]) run a
+//!   CONTINUOUS-batching loop (`serve_decode_lane`) instead of the
+//!   one-shot batcher — sequences admit and retire mid-flight, the
+//!   batch re-forms at every event-clock step, and per-sequence slots
+//!   are reused so the steady-state path performs no allocation
+//!   ([`Metrics::alloc_events`] counts the amortized pool builds).
+//!   With the seq_k axis partitioned at L1-extent multiples over the
+//!   decode horizon, every in-horizon step answers from the table:
+//!   zero selector scans per token (see the "Decode serving" section
+//!   of `docs/ARCHITECTURE.md`).
 //! * **Plan cache** ([`PlanCache`]): the beyond-horizon fallback —
 //!   per-batch shape→kernel selection is memoized into padded-tile
 //!   buckets, so steady-state dispatch is a hash lookup; the cached
@@ -59,7 +70,7 @@ use crate::analysis::Diagnostic;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::select::{HwMode, Selection, Selector};
 use crate::dispatch::{DispatchConfig, DispatchTable, TableData};
-use crate::ir::{IterSpace, TensorProgram};
+use crate::ir::{DType, IterSpace, TensorProgram};
 use crate::obs::{Span, Trace};
 use crate::sim::Simulator;
 use crate::util::json::Json;
@@ -110,6 +121,15 @@ impl DispatchStats {
             (self.table + self.cache) as f64 / self.total() as f64
         }
     }
+
+    /// Count one plan resolution by its source.
+    pub(crate) fn bump(&mut self, source: PlanSource) {
+        match source {
+            PlanSource::Table => self.table += 1,
+            PlanSource::Cache => self.cache += 1,
+            PlanSource::Fresh => self.fresh += 1,
+        }
+    }
 }
 
 /// One serving request: a full tensor program plus its arrival time
@@ -119,25 +139,44 @@ pub struct ServeRequest {
     pub id: u64,
     pub program: TensorProgram,
     pub arrive: f64,
+    /// Decode tokens to generate (continuous-batching decode lane
+    /// only; `program` describes the FIRST step, and seq_k grows by
+    /// one per token). Every other lane serves exactly one batch per
+    /// request and ignores this — use [`ServeRequest::once`].
+    pub steps: usize,
+}
+
+impl ServeRequest {
+    /// A one-shot request (`steps == 1`).
+    pub fn once(id: u64, program: TensorProgram, arrive: f64) -> ServeRequest {
+        ServeRequest { id, program, arrive, steps: 1 }
+    }
 }
 
 /// Request lane classes: one discrete-event executor per class. The
 /// conv family (`Conv2d`, grouped/depthwise included) shares one lane
-/// — both merge along the image batch dim.
+/// — both merge along the image batch dim. The decode lane runs the
+/// continuous-batching loop instead of the one-shot batcher.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum LaneClass {
     Gemm,
     BatchedGemm,
     Conv,
     Attention,
+    /// Autoregressive causal-attention decode steps
+    /// ([`TensorProgram::CausalAttention`]): continuous batching with
+    /// mid-flight admission/retirement, one token per sequence per
+    /// event-clock step.
+    Decode,
 }
 
 impl LaneClass {
-    pub const ALL: [LaneClass; 4] = [
+    pub const ALL: [LaneClass; 5] = [
         LaneClass::Gemm,
         LaneClass::BatchedGemm,
         LaneClass::Conv,
         LaneClass::Attention,
+        LaneClass::Decode,
     ];
 
     /// The lane a program is admitted to.
@@ -147,6 +186,7 @@ impl LaneClass {
             TensorProgram::BatchedGemm { .. } => LaneClass::BatchedGemm,
             TensorProgram::Conv2d { .. } => LaneClass::Conv,
             TensorProgram::Attention { .. } => LaneClass::Attention,
+            TensorProgram::CausalAttention { .. } => LaneClass::Decode,
         }
     }
 
@@ -156,6 +196,7 @@ impl LaneClass {
             LaneClass::BatchedGemm => "batched_gemm",
             LaneClass::Conv => "conv",
             LaneClass::Attention => "attention",
+            LaneClass::Decode => "decode",
         }
     }
 
@@ -166,6 +207,7 @@ impl LaneClass {
             LaneClass::BatchedGemm => 1,
             LaneClass::Conv => 2,
             LaneClass::Attention => 3,
+            LaneClass::Decode => 4,
         }
     }
 
@@ -180,6 +222,7 @@ impl LaneClass {
             LaneClass::BatchedGemm => &[OpKind::BatchedGemm],
             LaneClass::Conv => &[OpKind::Conv2d, OpKind::GroupedConv2d],
             LaneClass::Attention => &[OpKind::FusedAttention],
+            LaneClass::Decode => &[OpKind::CausalAttention],
         }
     }
 }
@@ -237,7 +280,7 @@ pub enum TablePolicy {
 /// against).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    pub lanes: [LaneConfig; 4],
+    pub lanes: [LaneConfig; 5],
     pub plan_cache: Option<usize>,
     /// Offline shape-space partitioning: when set, a
     /// [`DispatchTable`] is built for the selector BEFORE the trace
@@ -262,7 +305,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
-            lanes: [LaneConfig::default(); 4],
+            lanes: [LaneConfig::default(); 5],
             plan_cache: Some(1024),
             dispatch: None,
             adopt: None,
@@ -351,6 +394,13 @@ pub fn merge_key(p: &TensorProgram) -> TensorProgram {
             *batch = 0;
             *seq = 0;
         }
+        // Decode steps merge across sequences at different KV-cache
+        // depths (padding to the deepest) but NOT across seq_q: a
+        // one-token decode step never merges with a prefill chunk.
+        TensorProgram::CausalAttention { batch, seq_k, .. } => {
+            *batch = 0;
+            *seq_k = 0;
+        }
     }
     key
 }
@@ -377,6 +427,13 @@ fn merge_programs(programs: &[&TensorProgram]) -> TensorProgram {
                 *batch += b2;
                 *seq = (*seq).max(*s2);
             }
+            (
+                TensorProgram::CausalAttention { batch, seq_k, .. },
+                TensorProgram::CausalAttention { batch: b2, seq_k: k2, .. },
+            ) => {
+                *batch += b2;
+                *seq_k = (*seq_k).max(*k2);
+            }
             _ => unreachable!("merge across incompatible programs"),
         }
     }
@@ -392,6 +449,7 @@ pub(crate) fn dynamic_units(p: &TensorProgram) -> usize {
         TensorProgram::BatchedGemm { b, .. } => b,
         TensorProgram::Conv2d { n, .. } => n,
         TensorProgram::Attention { batch, .. } => batch,
+        TensorProgram::CausalAttention { batch, .. } => batch,
     }
 }
 
@@ -465,6 +523,13 @@ pub struct LaneStats {
     pub batches: usize,
     /// Σ merged dynamic-axis extents over the lane's batches.
     pub total_units: usize,
+    /// Per-BATCH tri-state accounting: one count per executed batch —
+    /// for the continuous-batching decode lane that is one per
+    /// event-clock STEP, the granularity the in-horizon invariant
+    /// pins (`warm_start_rate() == 1.0` means not one step paid a
+    /// fresh scan). Contrast [`MixedStats::dispatch`], which counts
+    /// per request.
+    pub batch_dispatch: DispatchStats,
 }
 
 /// Full mixed-trace serving result.
@@ -537,6 +602,19 @@ impl MixedStats {
         }
     }
 
+    /// Aggregate per-batch tri-state accounting across lanes (one
+    /// count per decode STEP in the continuous-batching lane) — the
+    /// number the decode bench's in-horizon invariant asserts on.
+    pub fn batch_dispatch(&self) -> DispatchStats {
+        let mut d = DispatchStats::default();
+        for l in &self.lanes {
+            d.table += l.batch_dispatch.table;
+            d.cache += l.batch_dispatch.cache;
+            d.fresh += l.batch_dispatch.fresh;
+        }
+        d
+    }
+
     /// Aggregate (p50, p95, p99) request latency across lanes —
     /// same index formula as the per-lane [`Metrics`] percentiles.
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
@@ -597,17 +675,30 @@ pub fn serve_mixed_trace(
         if lane_reqs.is_empty() {
             continue;
         }
-        let run = serve_lane(
-            engine,
-            selector,
-            cfg.lane(class),
-            class,
-            0,
-            &lane_reqs,
-            dispatch.as_ref(),
-            plan_cache.as_mut(),
-            cfg.trace,
-        );
+        let run = if class == LaneClass::Decode {
+            serve_decode_lane(
+                engine,
+                selector,
+                cfg.lane(class),
+                0,
+                &lane_reqs,
+                dispatch.as_ref(),
+                plan_cache.as_mut(),
+                cfg.trace,
+            )
+        } else {
+            serve_lane(
+                engine,
+                selector,
+                cfg.lane(class),
+                class,
+                0,
+                &lane_reqs,
+                dispatch.as_ref(),
+                plan_cache.as_mut(),
+                cfg.trace,
+            )
+        };
         stats.span_secs = stats.span_secs.max(run.stats.metrics.span_secs);
         stats.outcomes.extend(run.outcomes);
         stats.drops.extend(run.drops);
@@ -684,6 +775,7 @@ pub(crate) fn serve_lane(
     let (pid, tid) = (replica as u64, class.index() as u64);
     let mut batches = 0usize;
     let mut total_units = 0usize;
+    let mut batch_dispatch = DispatchStats::default();
     let mut clock = 0.0f64;
     let mut served = vec![false; requests.len()];
     let mut pending = requests.len();
@@ -887,12 +979,341 @@ pub(crate) fn serve_lane(
         }
         batches += 1;
         total_units += dynamic_units(&merged);
+        batch_dispatch.bump(source);
         pending -= bsz;
         clock = done;
     }
     metrics.span_secs = clock;
     LaneRun {
-        stats: LaneStats { class, metrics, batches, total_units },
+        stats: LaneStats { class, metrics, batches, total_units, batch_dispatch },
+        outcomes,
+        drops,
+        trace,
+    }
+}
+
+/// Per-sequence continuous-batching slot. The pool holds at most
+/// `max_batch` slots, built once up front and REUSED as sequences
+/// retire and new ones admit — the steady-state decode path touches
+/// no allocator ([`Metrics::alloc_events`] counts the pool builds).
+#[derive(Debug)]
+struct DecodeSlot {
+    /// Index into the lane's request list.
+    req: usize,
+    /// Per-request head-group batch (summed into the merged step).
+    batch: usize,
+    /// Step query length (1 for token decode) — part of the merge
+    /// key: a one-token step never merges with a prefill chunk.
+    seq_q: usize,
+    /// KV-cache depth of the NEXT step; grows by one per token.
+    seq_k: usize,
+    d: usize,
+    heads: usize,
+    dtype: DType,
+    /// Tokens to generate / generated so far.
+    steps: usize,
+    tokens: usize,
+    /// Event-clock completion of the previous token (the arrival
+    /// time before the first) — the per-token latency base.
+    prev_done: f64,
+    /// Event-clock launch of the sequence's first step.
+    first_launch: f64,
+    /// Whether any step of this sequence paid a fresh scan / was
+    /// answered beyond-horizon by the plan cache.
+    paid_fresh: bool,
+    hit_cache: bool,
+    active: bool,
+}
+
+/// The continuous-batching decode loop ([`LaneClass::Decode`]): one
+/// merged causal-attention step per event-clock iteration, one token
+/// per in-flight sequence per step. Sequences ADMIT at the first step
+/// boundary at/after their arrival (capacity permitting, in arrival
+/// order) and RETIRE after `steps` tokens, freeing their slot — the
+/// batch re-forms every step from whoever is in flight, so it shrinks
+/// and grows mid-flight without quantizing work to one-shot batches.
+///
+/// Steady-state dispatch is zero-scan and zero-allocation: every
+/// in-horizon step resolves from the dispatch table (the seq_k axis
+/// partitions at L1-extent multiples over the decode horizon, so the
+/// growing depth walks table cells, never the selector), and all
+/// per-step state (slot pool, step group, flops scratch, metric
+/// reservoirs) is allocated once up front — counted in
+/// [`Metrics::alloc_events`] — and reused. Span recording (`traced`)
+/// is exempt: it is write-only output, and the zero-perturbation
+/// oracle pins its outcomes bitwise, not its allocations.
+///
+/// SLO semantics: a sequence whose time-to-first-token deadline has
+/// already passed at its admission boundary is shed under
+/// [`OverloadPolicy::Drop`]; `Degrade` is treated as `ServeAnyway`
+/// (a merged step serves many sequences — per-sequence mode
+/// downgrades would fork the batch). Everything is a function of the
+/// event clock, so replay stays bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn serve_decode_lane(
+    engine: &mut dyn LaneEngine,
+    selector: &Selector,
+    cfg: &LaneConfig,
+    replica: usize,
+    requests: &[&ServeRequest],
+    dispatch: Option<&DispatchTable>,
+    mut plan_cache: Option<&mut PlanCache>,
+    traced: bool,
+) -> LaneRun {
+    let class = LaneClass::Decode;
+    let mut metrics = Metrics::default();
+    // The amortized up-front builds: outcome list, per-token metric
+    // reservoirs, slot pool, step group, flops scratch. Nothing else
+    // on the loop's untraced path allocates.
+    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(requests.len());
+    let total_tokens: usize = requests.iter().map(|r| r.steps.max(1)).sum();
+    metrics.reserve(total_tokens);
+    let cap = cfg.max_batch.max(1);
+    let mut slots: Vec<DecodeSlot> = Vec::with_capacity(cap);
+    let mut group: Vec<usize> = Vec::with_capacity(cap);
+    let mut own: Vec<f64> = Vec::with_capacity(cap);
+    metrics.alloc_events += 5;
+    let mut drops = Vec::new();
+    let mut trace: Vec<Span> = Vec::new();
+    let (pid, tid) = (replica as u64, class.index() as u64);
+    let mut batches = 0usize;
+    let mut total_units = 0usize;
+    let mut batch_dispatch = DispatchStats::default();
+    let mut clock = 0.0f64;
+    let mut next = 0usize;
+    loop {
+        let mut active = slots.iter().filter(|s| s.active).count();
+        if active == 0 {
+            if next >= requests.len() {
+                break;
+            }
+            // Idle server: jump to the next arrival.
+            clock = clock.max(requests[next].arrive);
+        }
+        // Admit arrivals at/before this step boundary, in arrival
+        // order, up to the slot pool's capacity.
+        while next < requests.len() && active < cap && requests[next].arrive <= clock {
+            let r = requests[next];
+            next += 1;
+            if let Some(d) = cfg.slo.deadline {
+                if clock > r.arrive + d && matches!(cfg.slo.policy, OverloadPolicy::Drop) {
+                    drops.push(DropRecord {
+                        id: r.id,
+                        lane: class,
+                        replica,
+                        decided_at: clock,
+                        miss_by: clock - (r.arrive + d),
+                    });
+                    if traced {
+                        trace.push(
+                            Span::instant("drop", "serve", pid, tid, clock)
+                                .arg("id", Json::num(r.id as f64))
+                                .arg("miss_by_us", Json::num((clock - (r.arrive + d)) * 1e6))
+                                .arg("policy", Json::str(cfg.slo.policy.name())),
+                        );
+                    }
+                    metrics.dropped += 1;
+                    continue;
+                }
+            }
+            let (batch, seq_q, seq_k, d, heads, dtype) = match r.program {
+                TensorProgram::CausalAttention { batch, seq_q, seq_k, d, heads, dtype } => {
+                    (batch, seq_q, seq_k, d, heads, dtype)
+                }
+                _ => unreachable!("decode lane admits only causal-attention programs"),
+            };
+            let slot = DecodeSlot {
+                req: next - 1,
+                batch,
+                seq_q,
+                seq_k,
+                d,
+                heads,
+                dtype,
+                steps: r.steps.max(1),
+                tokens: 0,
+                prev_done: r.arrive,
+                first_launch: 0.0,
+                paid_fresh: false,
+                hit_cache: false,
+                active: true,
+            };
+            match slots.iter().position(|s| !s.active) {
+                Some(i) => slots[i] = slot,
+                None => {
+                    // Never fires while the pool is at capacity (the
+                    // admission guard caps active at `cap`) — counted
+                    // so the zero-alloc invariant stays honest.
+                    if slots.len() == slots.capacity() {
+                        metrics.alloc_events += 1;
+                    }
+                    slots.push(slot);
+                }
+            }
+            if traced {
+                trace.push(
+                    Span::instant("admit", "serve", pid, tid, r.arrive)
+                        .arg("id", Json::num(r.id as f64)),
+                );
+            }
+            active += 1;
+        }
+        if active == 0 {
+            // Everything admissible at this boundary was shed.
+            continue;
+        }
+        // The step group: every active slot sharing the merge key of
+        // the EARLIEST-admitted active sequence. Mixed-key traffic is
+        // served key-group by key-group, deterministically.
+        let mut lead = usize::MAX;
+        for (i, s) in slots.iter().enumerate() {
+            if s.active && (lead == usize::MAX || s.req < slots[lead].req) {
+                lead = i;
+            }
+        }
+        let (kq, kd, kh, kt) =
+            (slots[lead].seq_q, slots[lead].d, slots[lead].heads, slots[lead].dtype);
+        group.clear();
+        own.clear();
+        let mut batch_sum = 0usize;
+        let mut seq_k_pad = 0usize;
+        let mut own_sum = 0.0f64;
+        for (i, s) in slots.iter().enumerate() {
+            if s.active && s.seq_q == kq && s.d == kd && s.heads == kh && s.dtype == kt {
+                group.push(i);
+                batch_sum += s.batch;
+                seq_k_pad = seq_k_pad.max(s.seq_k);
+                let f = TensorProgram::CausalAttention {
+                    batch: s.batch,
+                    seq_q: s.seq_q,
+                    seq_k: s.seq_k,
+                    d: s.d,
+                    heads: s.heads,
+                    dtype: s.dtype,
+                }
+                .flops();
+                own.push(f);
+                own_sum += f;
+            }
+        }
+        let merged = TensorProgram::CausalAttention {
+            batch: batch_sum,
+            seq_q: kq,
+            seq_k: seq_k_pad,
+            d: kd,
+            heads: kh,
+            dtype: kt,
+        };
+        let space = merged.space();
+        // Same tri-state stack as the one-shot lanes: compile-time
+        // table first, plan cache beyond the horizon, fresh scan last.
+        let table_sel = dispatch.and_then(|t| t.select(selector, space, cfg.mode));
+        let (sel, source) = match table_sel {
+            Some(sel) => (sel, PlanSource::Table),
+            None => match plan_cache.as_deref_mut() {
+                Some(c) => {
+                    let hits0 = c.stats.hits;
+                    let sel = c
+                        .select(selector, space, cfg.mode)
+                        .expect("selector must handle any shape (sample-free)");
+                    let source = if c.stats.hits > hits0 {
+                        PlanSource::Cache
+                    } else {
+                        PlanSource::Fresh
+                    };
+                    (sel, source)
+                }
+                None => (
+                    selector
+                        .select(space, cfg.mode)
+                        .expect("selector must handle any shape (sample-free)"),
+                    PlanSource::Fresh,
+                ),
+            },
+        };
+        // Continuous batching launches at the step boundary: every
+        // group member already arrived, so there is no window to hold
+        // open — new arrivals join at the NEXT boundary.
+        let launch = clock;
+        let service = engine.execute(space, &sel, selector);
+        let done = launch + SCHED_OVERHEAD_SECS + service;
+        let g = group.len();
+        let merged_flops = space.flops();
+        for (bi, &i) in group.iter().enumerate() {
+            let s = &mut slots[i];
+            // Per-TOKEN latency: from the previous token's completion
+            // (arrival, for the first token) to this one's.
+            let latency = done - s.prev_done;
+            metrics.record(
+                latency,
+                sel.select_secs / g as f64,
+                service / g as f64,
+                merged_flops * own[bi] / own_sum,
+            );
+            if s.tokens == 0 {
+                s.first_launch = launch;
+            }
+            s.tokens += 1;
+            s.seq_k += 1;
+            s.prev_done = done;
+            match source {
+                PlanSource::Fresh => s.paid_fresh = true,
+                PlanSource::Cache => s.hit_cache = true,
+                PlanSource::Table => {}
+            }
+            if s.tokens >= s.steps {
+                s.active = false;
+                let r = requests[s.req];
+                outcomes.push(RequestOutcome {
+                    id: r.id,
+                    lane: class,
+                    replica,
+                    // Full-sequence completion latency; the per-token
+                    // distribution lives in the lane [`Metrics`].
+                    latency: done - r.arrive,
+                    launch: s.first_launch,
+                    batch_size: g,
+                    // Worst source any step paid: `warm()` means not
+                    // one of this sequence's tokens cost a scan.
+                    source: if s.paid_fresh {
+                        PlanSource::Fresh
+                    } else if s.hit_cache {
+                        PlanSource::Cache
+                    } else {
+                        PlanSource::Table
+                    },
+                    degraded: false,
+                    selection: sel.clone(),
+                });
+            }
+        }
+        if traced {
+            trace.push(
+                Span::complete("form", "serve", pid, tid, launch, 0.0)
+                    .arg("batch", Json::num(g as f64)),
+            );
+            trace.push(
+                Span::instant("plan", "serve", pid, tid, launch)
+                    .arg("source", Json::str(source.name()))
+                    .arg("lib", Json::num(sel.lib as f64))
+                    .arg("kernel", Json::num(sel.kernel as f64))
+                    .arg("select_wall_us", Json::num(sel.select_secs * 1e6)),
+            );
+            trace.push(Span::complete("sched", "serve", pid, tid, launch, SCHED_OVERHEAD_SECS));
+            trace.push(
+                Span::complete("exec", "serve", pid, tid, launch + SCHED_OVERHEAD_SECS, service)
+                    .arg("batch", Json::num(g as f64))
+                    .arg("degraded", Json::Bool(false)),
+            );
+        }
+        batches += 1;
+        total_units += dynamic_units(&merged);
+        batch_dispatch.bump(source);
+        clock = done;
+    }
+    metrics.span_secs = clock;
+    LaneRun {
+        stats: LaneStats { class, metrics, batches, total_units, batch_dispatch },
         outcomes,
         drops,
         trace,
@@ -1062,7 +1483,7 @@ mod tests {
                 1 => conv(1 + (i as usize % 4)),
                 _ => attn(1, 64),
             };
-            requests.push(ServeRequest { id: i, program, arrive: 1e-4 * i as f64 });
+            requests.push(ServeRequest { id: i, program, arrive: 1e-4 * i as f64, steps: 1 });
         }
         let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
         let stats = serve_mixed_trace(&mut engine, &s, &ServeConfig::default(), &requests);
@@ -1086,7 +1507,7 @@ mod tests {
         let mut requests = Vec::new();
         for i in 0..16u64 {
             let program = if i % 2 == 0 { gemm(8) } else { wide(8) };
-            requests.push(ServeRequest { id: i, program, arrive: 1e-6 * i as f64 });
+            requests.push(ServeRequest { id: i, program, arrive: 1e-6 * i as f64, steps: 1 });
         }
         let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
         let stats = serve_mixed_trace(&mut engine, &s, &ServeConfig::default(), &requests);
@@ -1120,6 +1541,7 @@ mod tests {
                 id: i,
                 program: gemm(if i % 2 == 0 { 16 } else { 500 }),
                 arrive: 5e-3 * i as f64,
+                steps: 1,
             })
             .collect();
         let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
@@ -1171,7 +1593,7 @@ mod tests {
             cfg.lane_mut(class).max_batch = 1;
         }
         let requests: Vec<ServeRequest> = (0..6u64)
-            .map(|i| ServeRequest { id: i, program: gemm(16), arrive: 5e-3 * i as f64 })
+            .map(|i| ServeRequest::once(i, gemm(16), 5e-3 * i as f64))
             .collect();
         let run = |cfg: &ServeConfig| {
             let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
@@ -1275,6 +1697,7 @@ mod tests {
                 id: i,
                 program: attn(1, 64 + 64 * (i as usize % 3)),
                 arrive: 2e-4 * i as f64,
+                steps: 1,
             })
             .collect();
         let cfg = ServeConfig::default();
@@ -1307,7 +1730,7 @@ mod tests {
                     1 => conv(1 + (i as usize % 4)),
                     _ => attn(1, 64),
                 };
-                ServeRequest { id: i, program, arrive: 1e-4 * i as f64 }
+                ServeRequest { id: i, program, arrive: 1e-4 * i as f64, steps: 1 }
             })
             .collect();
         let cfg = ServeConfig::default();
@@ -1339,6 +1762,154 @@ mod tests {
         }
         assert!(t.spans.iter().all(|sp| sp.clock == crate::obs::SpanClock::Event));
         assert_eq!(t.threads.len(), traced.lanes.len());
+    }
+
+    fn decode(id: u64, prompt: usize, arrive: f64, steps: usize) -> ServeRequest {
+        ServeRequest {
+            id,
+            program: TensorProgram::decode_step((1, prompt), (768, 12), DType::F32).unwrap(),
+            arrive,
+            steps,
+        }
+    }
+
+    #[test]
+    fn decode_lane_admits_and_retires_mid_flight() {
+        let s = selector();
+        // Three overlapping sequences with distinct output lengths: the
+        // step batch must grow as sequences admit and shrink as they
+        // retire, without losing a token anywhere.
+        let requests =
+            vec![decode(0, 32, 0.0, 6), decode(1, 48, 1e-5, 3), decode(2, 64, 2e-5, 9)];
+        let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let stats = serve_mixed_trace(&mut engine, &s, &ServeConfig::default(), &requests);
+        assert_eq!(stats.count(), 3);
+        assert!(stats.outcomes.iter().all(|o| o.lane == LaneClass::Decode));
+        let lane = &stats.lanes[0];
+        assert_eq!(lane.class, LaneClass::Decode);
+        // One metric sample and one dynamic unit per TOKEN (6 + 3 + 9),
+        // not per request.
+        assert_eq!(lane.metrics.count(), 18);
+        assert_eq!(lane.total_units, 18);
+        // Continuous batching: at least as many steps as the longest
+        // sequence, strictly fewer than one isolated batch per token.
+        assert!(lane.batches >= 9, "{} steps", lane.batches);
+        assert!(lane.batches < 18, "{} steps — nothing ever shared a step", lane.batches);
+        assert!(stats.outcomes.iter().any(|o| o.batch_size > 1), "no step was shared");
+        assert_eq!(lane.batch_dispatch.total() as usize, lane.batches);
+        for o in &stats.outcomes {
+            assert!(o.latency > 0.0);
+            assert!(o.launch >= 0.0);
+        }
+    }
+
+    #[test]
+    fn decode_in_horizon_steps_all_hit_the_table() {
+        // The tentpole invariant: with the scenario envelope configured,
+        // EVERY in-horizon decode step resolves from the compile-time
+        // table — zero selector scans, zero cache traffic, per token.
+        let s = selector();
+        let trace = scenario::decode_trace(80, 2e-4, 16, 3, DType::F32);
+        let cfg = scenario::serving_config().with_dispatch(scenario::dispatch_config());
+        let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let stats = serve_mixed_trace(&mut engine, &s, &cfg, &trace);
+        assert_eq!(stats.count(), 80);
+        assert!(!stats.dispatch_build.as_ref().unwrap().clamped);
+        let bd = stats.batch_dispatch();
+        assert!(bd.total() > 0);
+        assert_eq!(bd.fresh, 0, "a decode step paid a fresh selector scan");
+        assert_eq!(bd.cache, 0, "a decode step fell beyond the horizon");
+        assert_eq!(bd.warm_start_rate(), 1.0);
+        // The per-request roll-up agrees: every sequence was
+        // table-answered on every one of its tokens.
+        assert!(stats.outcomes.iter().all(|o| o.source == PlanSource::Table));
+        assert_eq!(stats.dispatch.table as usize, stats.count());
+    }
+
+    #[test]
+    fn decode_steady_state_allocations_are_amortized() {
+        // `alloc_events` counts the up-front pool builds and NOTHING
+        // else: a 3x longer trace with 4x longer sequences must report
+        // exactly the same count — the steady-state per-token path
+        // never touches the allocator.
+        let s = selector();
+        let cfg = scenario::serving_config().with_dispatch(scenario::dispatch_config());
+        let events = |n: usize, mean_tokens: usize| {
+            let trace = scenario::decode_trace(n, 2e-4, mean_tokens, 3, DType::F32);
+            let mut engine = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+            let stats = serve_mixed_trace(&mut engine, &s, &cfg, &trace);
+            assert_eq!(stats.lanes.len(), 1);
+            stats.lanes[0].metrics.alloc_events
+        };
+        let short = events(20, 8);
+        let long = events(60, 32);
+        assert_eq!(short, 5, "expected exactly the five amortized pool builds");
+        assert_eq!(short, long, "allocation count grew with the trace");
+    }
+
+    #[test]
+    fn decode_table_answers_the_whole_horizon_with_fresh_identical_plans() {
+        // Horizon sweep: for EVERY seq_k a decode step can present —
+        // powers of two, primes, the horizon edge — and both the
+        // single-sequence and the fully merged batch, the table answers
+        // (no fallback) and its plan is `same_plan`-identical to a
+        // fresh selector scan.
+        let s = selector();
+        let dcfg = scenario::dispatch_config();
+        let table = DispatchTable::for_selector(&s, &dcfg);
+        let horizon = dcfg.horizons_for(crate::ir::OpKind::CausalAttention)[2];
+        assert_eq!(horizon, 256);
+        for g in [1usize, 4] {
+            for seq_k in 1..=horizon {
+                let p = TensorProgram::CausalAttention {
+                    batch: g,
+                    seq_q: 1,
+                    seq_k,
+                    d: 768,
+                    heads: 12,
+                    dtype: DType::F32,
+                };
+                let space = p.space();
+                let from_table = table
+                    .select(&s, space, HwMode::Adaptive)
+                    .unwrap_or_else(|| panic!("seq_k {seq_k} (batch {g}) missed the table"));
+                let fresh = s.select(space, HwMode::Adaptive).unwrap();
+                assert!(
+                    from_table.same_plan(&fresh),
+                    "table plan diverged at seq_k {seq_k} (batch {g})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_tracing_is_zero_perturbation_and_spans_reconcile() {
+        let s = selector();
+        let trace = scenario::decode_trace(30, 2e-4, 8, 5, DType::F32);
+        let cfg = scenario::serving_config().with_dispatch(scenario::dispatch_config());
+        let mut e1 = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let plain = serve_mixed_trace(&mut e1, &s, &cfg, &trace);
+        let mut e2 = SimLaneEngine { sim: Simulator::new(presets::a100(), 5) };
+        let traced = serve_mixed_trace(&mut e2, &s, &cfg.traced(), &trace);
+        assert_eq!(plain.outcomes.len(), traced.outcomes.len());
+        for (a, b) in plain.outcomes.iter().zip(&traced.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+            assert_eq!(a.launch.to_bits(), b.launch.to_bits());
+            assert_eq!(a.batch_size, b.batch_size);
+            assert_eq!(a.source, b.source);
+            assert!(a.selection.same_plan(&b.selection));
+        }
+        // One admit instant per sequence; one form/plan/sched/exec
+        // span per STEP; everything event-clock stamped.
+        let t = traced.trace.as_ref().expect("trace requested");
+        let count = |name: &str| t.spans.iter().filter(|sp| sp.name == name).count();
+        assert_eq!(count("admit"), traced.outcomes.len());
+        let steps = traced.lanes[0].batches;
+        for name in ["form", "plan", "sched", "exec"] {
+            assert_eq!(count(name), steps, "{name} spans vs {steps} steps");
+        }
+        assert!(t.spans.iter().all(|sp| sp.clock == crate::obs::SpanClock::Event));
     }
 
     #[test]

@@ -68,6 +68,7 @@ pub fn mixed_trace(
                 id: out.len() as u64,
                 program: lm[bucket][which].clone(),
                 arrive: t,
+                steps: 1,
             });
         } else {
             // Vision burst: a few camera frames land almost together.
@@ -83,6 +84,7 @@ pub fn mixed_trace(
                     id: out.len() as u64,
                     program: vision[batch - 1][kind].clone(),
                     arrive: t,
+                    steps: 1,
                 });
             }
         }
@@ -142,6 +144,11 @@ pub fn serving_config() -> ServeConfig {
 ///   with (cout, kh·kw·cin) = (64, 147).
 /// * Grouped conv: the MobileNet depthwise block (32 groups, same
 ///   merged-frame envelope, 1 output channel per group, 3·3·1 taps).
+/// * Causal decode: up to 4 merged sequences × 12 head groups, one
+///   query per step, KV depth up to the 256 context bucket, head dim
+///   64 — every in-horizon decode step is table-answered, which is
+///   what makes per-token dispatch zero-scan ([`decode_trace`]
+///   generates in-horizon sequences by construction).
 ///
 /// This is capacity planning (a service-level envelope), not shape
 /// sampling: no profile of the traffic is taken, and shapes beyond the
@@ -156,6 +163,7 @@ pub fn dispatch_config() -> DispatchConfig {
         .with_op_horizons(OpKind::FusedAttention, &[48, 256, 256, 64])
         .with_op_horizons(OpKind::Conv2d, &[100_352, 64, 147])
         .with_op_horizons(OpKind::GroupedConv2d, &[32, 100_352, 1, 9])
+        .with_op_horizons(OpKind::CausalAttention, &[48, 8, 256, 64])
 }
 
 /// Overload scenario: `n_requests` land in one burst across EVERY lane
@@ -178,6 +186,7 @@ pub fn burst_trace(n_requests: usize, seed: u64, dtype: DType) -> Vec<ServeReque
         TensorProgram::BatchedGemm { b: 12, m: 64, n: 64, k: 64, dtype }, // raw batched GEMM
         resnet[0].clone(),                                               // strided conv
         mobile[1].clone(),                                               // depthwise conv
+        TensorProgram::decode_step((1, 128), (768, 12), dtype).unwrap(), // decode token
     ];
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(n_requests);
@@ -189,6 +198,50 @@ pub fn burst_trace(n_requests: usize, seed: u64, dtype: DType) -> Vec<ServeReque
             id: i as u64,
             program: templates[i % templates.len()].clone(),
             arrive: t,
+            steps: 1,
+        });
+    }
+    out
+}
+
+/// Autoregressive decode trace: Poisson arrivals of single-sequence
+/// causal-attention decode requests against the BERT-geometry model
+/// (d = 768, 12 heads), with geometrically distributed output lengths
+/// (mean `mean_tokens`, the memoryless per-token stop rule) and
+/// context lengths drawn from the scenario buckets. Every sequence is
+/// generated IN-HORIZON by construction: `prompt + tokens <= 256`
+/// (the top context bucket = the dispatch seq_k horizon), so a table
+/// built from [`dispatch_config`] answers 100% of the steps —
+/// the invariant `vortex bench decode` asserts. Deterministic from
+/// the seed; sorted by arrival, ids in arrival order.
+pub fn decode_trace(
+    n_requests: usize,
+    mean_interarrival: f64,
+    mean_tokens: usize,
+    seed: u64,
+    dtype: DType,
+) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(seed);
+    let horizon = SEQ_BUCKETS[SEQ_BUCKETS.len() - 1];
+    let p = 1.0 / mean_tokens.max(1) as f64;
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        t += rng.exp(mean_interarrival);
+        // Prompt (pre-filled KV depth) from a bucket-ish spread; the
+        // first decode step attends prompt + 1 keys.
+        let prompt = rng.usize(16, 160);
+        // Geometric output length via inverse transform, clamped to
+        // the horizon so the LAST step's seq_k stays table-answered.
+        let u = rng.f64().max(1e-12);
+        let tokens = (1.0 + u.ln() / (1.0 - p).ln()) as usize;
+        let tokens = tokens.clamp(1, horizon - prompt - 1);
+        out.push(ServeRequest {
+            id: i as u64,
+            program: TensorProgram::decode_step((1, prompt + 1), (768, 12), dtype)
+                .expect("decode template is valid"),
+            arrive: t,
+            steps: tokens,
         });
     }
     out
@@ -286,6 +339,36 @@ mod tests {
         assert_eq!(lanes.len(), LaneClass::ALL.len(), "lane not saturated");
         // The whole burst lands within a few hundred µs.
         assert!(trace.last().unwrap().arrive < 1e-3);
+    }
+
+    #[test]
+    fn decode_trace_is_sorted_in_horizon_and_deterministic() {
+        let a = decode_trace(200, 3e-4, 24, 11, DType::F32);
+        assert_eq!(a.len(), 200);
+        assert!(a.windows(2).all(|w| w[0].arrive <= w[1].arrive));
+        let horizons = dispatch_config().horizons_for(OpKind::CausalAttention);
+        for r in &a {
+            assert!(r.program.validate().is_ok(), "{}", r.program.id());
+            assert_eq!(LaneClass::of(&r.program), LaneClass::Decode);
+            assert!(r.steps >= 1);
+            match r.program {
+                TensorProgram::CausalAttention { seq_q, seq_k, .. } => {
+                    assert_eq!(seq_q, 1);
+                    // The LAST step's KV depth stays inside the
+                    // dispatch envelope — the 100%-table-hit setup.
+                    assert!(seq_k + r.steps - 1 <= horizons[2]);
+                }
+                _ => panic!("decode trace must emit causal attention"),
+            }
+        }
+        let b = decode_trace(200, 3e-4, 24, 11, DType::F32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, x.steps, x.arrive), (y.id, y.steps, y.arrive));
+            assert_eq!(x.program, y.program);
+        }
+        // Output lengths actually vary (geometric, not constant).
+        let lens: HashSet<usize> = a.iter().map(|r| r.steps).collect();
+        assert!(lens.len() > 5, "only {} distinct lengths", lens.len());
     }
 
     #[test]

@@ -395,8 +395,8 @@ fn slo_window_fix_changes_batching_where_the_old_window_overshot() {
     let selector = scenario::demo_selector(5);
     let gemm = TensorProgram::Gemm { m: 64, n: 2304, k: 768, dtype: DType::F32 };
     let trace = vec![
-        ServeRequest { id: 0, program: gemm.clone(), arrive: 0.0 },
-        ServeRequest { id: 1, program: gemm, arrive: 1.5e-3 },
+        ServeRequest { id: 0, program: gemm.clone(), arrive: 0.0, steps: 1 },
+        ServeRequest { id: 1, program: gemm, arrive: 1.5e-3, steps: 1 },
     ];
 
     let legacy = FleetConfig { serve: scenario::serving_config(), ..FleetConfig::default() };
@@ -448,6 +448,58 @@ fn replica_sharding_is_deterministic_across_worker_counts_on_a_burst() {
                     "workers={w} replicas={replicas} diverged on the overload path"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn decode_lane_replays_bit_identically_across_worker_counts() {
+    // The acceptance property for the continuous-batching decode lane:
+    // autoregressive sequences woven into one-shot mixed traffic
+    // replay bit-identically under the worker pool at every CI worker
+    // count. The decode lane is the scheduling-sensitive case — slot
+    // reuse, step-boundary admission and per-token metrics all depend
+    // on the event clock — so it gets its own explicit equivalence
+    // check on top of the headline forall. The FULL dispatch budget
+    // (not the slimmed oracle budget) keeps the tentpole invariant
+    // visible in the fingerprint: `source` records the worst tier any
+    // token paid, so every decode outcome must read `Table`.
+    let selector = scenario::demo_selector(5);
+    let mut trace = scenario::mixed_trace(48, 2e-4, 41, DType::F32);
+    let mut decode = scenario::decode_trace(32, 4e-4, 16, 43, DType::F32);
+    for r in &mut decode {
+        r.id += 10_000;
+    }
+    trace.extend(decode);
+    trace.sort_by(|a, b| a.arrive.partial_cmp(&b.arrive).unwrap());
+    for replicas in [1usize, 8] {
+        let cfg = |workers| FleetConfig {
+            replicas,
+            workers,
+            routing: RoutePolicy::HashKey,
+            serve: scenario::serving_config().with_dispatch(scenario::dispatch_config()),
+        };
+        let oracle = serve_fleet(engine, &selector, &cfg(0), &trace);
+        assert_eq!(oracle.count(), trace.len());
+        let mut decoded = 0usize;
+        for o in oracle.outcomes.iter().filter(|o| o.id >= 10_000) {
+            decoded += 1;
+            assert_eq!(
+                format!("{:?}", o.source),
+                "Table",
+                "decode sequence {} left the table tier at replicas={replicas}",
+                o.id
+            );
+        }
+        assert_eq!(decoded, 32, "every decode sequence completes");
+        let want = fingerprint(&oracle);
+        for w in worker_counts() {
+            let pooled = serve_fleet(engine, &selector, &cfg(w), &trace);
+            assert_eq!(
+                fingerprint(&pooled),
+                want,
+                "workers={w} replicas={replicas} diverged on the decode lane"
+            );
         }
     }
 }

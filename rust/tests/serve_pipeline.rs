@@ -240,6 +240,7 @@ fn legacy_gemm_api_matches_one_lane_serving() {
             id: r.id,
             program: TensorProgram::Gemm { m: r.rows, n: cfg.n, k: cfg.k, dtype: cfg.dtype },
             arrive: r.arrive,
+            steps: 1,
         })
         .collect();
     let serve_cfg = ServeConfig { plan_cache: None, ..ServeConfig::default() };
